@@ -1,0 +1,31 @@
+"""Related-work baseline ladder (paper §2 motivation): recompute-preemption
+vs vLLM per-block swapping vs Llumnix staging-buffer merging vs FastSwitch.
+Reproduces the paper's qualitative ordering and its Challenge-#1 claim that
+a small merge buffer cannot recover the lost granularity."""
+from benchmarks.common import csv_line, run_policy
+
+LADDER = ("vllm-recompute", "vllm", "llumnix", "fastswitch",
+          "fastswitch+zip")
+
+
+def main(emit=print):
+    rows = {}
+    base = None
+    for pol in LADDER:
+        eng = run_policy("llama8b-a10", pol, pattern="markov")
+        s = eng.metrics.summary()
+        sw = eng.swap.stats()
+        if pol == "vllm":
+            base = s
+        rows[pol] = (s, sw)
+        gran = sw["total_blocks"] / max(sw["total_ops"], 1)
+        emit(csv_line(
+            f"baseline_{pol}", s["p99_ttft_ms"] * 1e3,
+            f"p999tbt={s['p999_tbt_ms']:.0f}ms thr={s['throughput_tok_s']:.1f} "
+            f"stall={sw['total_stall_us'] / 1e6:.2f}s ops={sw['total_ops']} "
+            f"gran={gran:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 13 — CPU swap-space sensitivity: more CPU memory => fewer
+contaminated copies => less context-switch overhead, with diminishing
+returns (paper: ~60 GB is the knee for their setup)."""
+from benchmarks.common import csv_line, run_policy
+
+
+def main(emit=print, cpu_blocks=(1024, 2048, 4096, 8192, 16384)):
+    rows = {}
+    for nb in cpu_blocks:
+        eng = run_policy("llama8b-a10", "fastswitch",
+                         engine_overrides={"num_cpu_blocks": nb})
+        stall = eng.swap.total_stall_us
+        contam = eng.reuse.n_contaminations
+        out_blocks = eng.swap.blocks_by_dir["out"]
+        rows[nb] = (stall, contam, out_blocks)
+        emit(csv_line(f"fig13_cpu{nb}blocks", stall,
+                      f"contaminations={contam} swap_out_blocks={out_blocks}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Fig. 1 — latency breakdown across percentiles: swap-induced stall vs
+inference time under the vLLM baseline (the paper's motivating plot:
+P99 ~1.6x P50 with ~60% of it preemption stall)."""
+import numpy as np
+
+from benchmarks.common import csv_line, run_policy
+
+
+def main(emit=print):
+    eng = run_policy("llama8b-a10", "vllm")
+    m = eng.metrics
+    # per-token latency = TBT samples; stall share from the swap manager
+    tbts = np.asarray(m.tbts_us)
+    infer_us = np.median([r[2] for r in m.iter_records])
+    rows = []
+    for p in (50, 90, 99, 99.9):
+        lat = float(np.percentile(tbts, p))
+        stall = max(0.0, lat - infer_us)
+        rows.append((p, lat, stall / max(lat, 1e-9)))
+        emit(csv_line(f"fig1_p{p}_token_latency", lat,
+                      f"stall_share={stall / max(lat, 1e-9):.2f}"))
+    p50 = rows[0][1]
+    p99 = rows[2][1]
+    emit(csv_line("fig1_p99_over_p50", p99, f"ratio={p99 / p50:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Fig. 8 (a-d) — P95/P99/P99.9 TTFT and P99.9 TBT for both models and
+both context-switch patterns, with the paper's incremental-optimization
+breakdown (vLLM -> +DBG -> +DBG+Reuse -> FastSwitch)."""
+from benchmarks.common import POLICY_ORDER, csv_line, run_policy
+
+
+def main(emit=print, scenarios=("llama8b-a10", "qwen32b-a100"),
+         patterns=("markov", "random")):
+    out = {}
+    for sc in scenarios:
+        for pat in patterns:
+            base = None
+            for pol in POLICY_ORDER:
+                eng = run_policy(sc, pol, pattern=pat)
+                s = eng.metrics.summary()
+                out[(sc, pat, pol)] = s
+                if pol == "vllm":
+                    base = s
+                for metric in ("p95_ttft_ms", "p99_ttft_ms",
+                               "p999_ttft_ms", "p999_tbt_ms"):
+                    speedup = base[metric] / max(s[metric], 1e-9)
+                    emit(csv_line(
+                        f"fig8_{sc}_{pat}_{pol}_{metric}",
+                        s[metric] * 1e3,
+                        f"speedup_vs_vllm={speedup:.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    main(scenarios=("llama8b-a10",), patterns=("markov",))

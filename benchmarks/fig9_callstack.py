@@ -1,0 +1,27 @@
+"""Fig. 9 — call-stack (control-plane) overhead vs priority-update
+frequency.  Ours is a REAL measurement: wall time of the Python control
+plane per iteration relative to modelled end-to-end time (paper: <1%)."""
+from benchmarks.common import csv_line, run_policy
+
+
+def main(emit=print, freqs=(0.01, 0.02, 0.04)):
+    rows = {}
+    for freq in freqs:
+        eng = run_policy("llama8b-a10", "fastswitch", update_freq=freq)
+        m = eng.metrics
+        wall_us = m.callstack_wall_s * 1e6
+        sim_us = m.total_time_us
+        share = wall_us / max(sim_us, 1e-9)
+        sync_us = eng.swap.callstack_overhead_us
+        rows[freq] = (wall_us, share, sync_us)
+        emit(csv_line(f"fig9_freq{freq}_callstack",
+                      wall_us / max(m.iterations, 1),
+                      f"share_of_e2e={share:.4f}"))
+        emit(csv_line(f"fig9_freq{freq}_syncpoints",
+                      sync_us / max(m.iterations, 1),
+                      f"sync_us_total={sync_us:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

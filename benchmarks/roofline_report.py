@@ -1,0 +1,39 @@
+"""Roofline report (§Roofline): reads the dry-run JSON artifact and emits
+the three-term roofline table per (arch x shape x mesh)."""
+import json
+import os
+
+from benchmarks.common import csv_line
+
+DEFAULT_PATH = os.path.join(os.path.dirname(__file__), "..", "results",
+                            "dryrun_full.json")
+
+
+def main(emit=print, path: str = DEFAULT_PATH):
+    if not os.path.exists(path):
+        emit(csv_line("roofline_report_missing", 0.0,
+                      f"run `python -m repro.launch.dryrun --all "
+                      f"--multi-pod both --out {path}` first"))
+        return None
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for r in results:
+        if r.get("status") != "ok" or "roofline" not in r:
+            continue
+        if r["mesh"] != "16x16":
+            continue                        # roofline table is single-pod
+        rf = r["roofline"]
+        total = rf["t_compute_s"] + rf["t_memory_s"] + rf["t_collective_s"]
+        emit(csv_line(
+            f"roofline_{r['arch']}_{r['shape']}",
+            total * 1e6,
+            f"dom={rf['dominant']} tc={rf['t_compute_s']:.2e}s "
+            f"tm={rf['t_memory_s']:.2e}s tcoll={rf['t_collective_s']:.2e}s "
+            f"useful={rf['useful_flops_ratio']:.2f}"))
+        rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Scenario: end-to-end training driver — train a reduced (~1-10M param)
+model from the assigned pool for a few hundred steps on CPU and watch the
+loss drop; saves a checkpoint.
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen2-1.5b --steps 200
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import steps as S
+from repro.models import transformer as T
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.optimizer import adamw_init
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--checkpoint", default="/tmp/repro_ckpt.npz")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    opt = adamw_init(params)
+    print(f"{cfg.name}: {sum(x.size for x in jax.tree.leaves(params)):,} params")
+
+    # learnable synthetic task: next token = (token + 1) % V over a small
+    # alphabet — the loss should fall well below ln(alphabet)
+    alphabet = 64
+
+    def make_batch(i):
+        k = jax.random.fold_in(key, i)
+        start = jax.random.randint(k, (args.batch, 1), 0, alphabet)
+        seq = (start + jnp.arange(args.seq + 1)[None, :]) % alphabet
+        return {"tokens": seq[:, :-1], "labels": seq[:, 1:]}
+
+    step_fn = jax.jit(lambda p, o, b: S.train_step(p, o, b, cfg=cfg,
+                                                   lr=1e-3, remat=False))
+    t0 = time.time()
+    first = last = None
+    for i in range(args.steps):
+        params, opt, loss = step_fn(params, opt, make_batch(i))
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {float(loss):.4f}  "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    assert last < first, "loss did not improve"
+    save_checkpoint(args.checkpoint, params)
+    restored = load_checkpoint(args.checkpoint, params)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: bool(jnp.all(a == b)), params, restored))
+    print(f"loss {first:.3f} -> {last:.3f}; checkpoint round-trip OK "
+          f"({args.checkpoint})")
+
+
+if __name__ == "__main__":
+    main()

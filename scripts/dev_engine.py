@@ -1,0 +1,25 @@
+"""Dev-loop: run the engine in sim mode for vllm vs fastswitch."""
+import sys
+
+from repro.core import EngineConfig, FastSwitchEngine
+from repro.data.priority import PriorityTrace
+from repro.data.sharegpt import sample_conversations, trace_stats
+
+n = int(sys.argv[1]) if len(sys.argv) > 1 else 100
+convs = sample_conversations(n, seed=1)
+print("trace:", trace_stats(convs))
+
+for policy in ("vllm", "+dbg", "+dbg+reuse", "fastswitch"):
+    cfg = EngineConfig(mode="sim", num_gpu_blocks=2048,
+                       num_cpu_blocks=8192).with_policy(policy)
+    trace = PriorityTrace(pattern="markov", update_freq=0.04, seed=7)
+    eng = FastSwitchEngine(cfg, [c for c in convs], trace=trace)
+    m = eng.run(max_iterations=200_000)
+    s = m.summary()
+    sw = eng.swap.stats()
+    print(f"{policy:12s} p99ttft={s['p99_ttft_ms']:9.1f}ms "
+          f"p999tbt={s['p999_tbt_ms']:8.1f}ms thr={s['throughput_tok_s']:7.1f} "
+          f"tok={s['total_tokens']} iters={s['iterations']} "
+          f"preempt={s['preemptions']} ops={sw['total_ops']} "
+          f"blocks={sw['total_blocks']} stall={sw['total_stall_us']/1e6:.2f}s "
+          f"gran={sw['total_blocks']/max(sw['total_ops'],1):.1f}")

@@ -1,0 +1,49 @@
+"""Dev-loop smoke: forward + train + prefill + decode for each smoke arch."""
+import sys
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import steps, transformer as T
+
+ARCHS = sys.argv[1:] or list_archs()
+
+for arch in ARCHS:
+    cfg = get_smoke_config(arch)
+    try:
+        key = jax.random.PRNGKey(0)
+        params = T.init_params(cfg, key)
+        n = sum(x.size for x in jax.tree.leaves(params))
+        B, S = 2, 32
+        tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            batch["extra_embeds"] = jnp.ones((B, cfg.frontend.n_tokens,
+                                              cfg.frontend.d_embed), jnp.float32)
+        if cfg.encoder_decoder:
+            batch["encoder_frames"] = jnp.ones((B, cfg.n_encoder_tokens,
+                                                cfg.d_model), jnp.float32)
+        # train
+        from repro.train.optimizer import adamw_init
+        opt = adamw_init(params)
+        p2, o2, loss = steps.train_step(params, opt, batch, cfg=cfg)
+        assert jnp.isfinite(loss), f"loss not finite: {loss}"
+        # prefill
+        logits, raw = steps.prefill(params, cfg, tokens,
+                                    extra_embeds=batch.get("extra_embeds"),
+                                    encoder_frames=batch.get("encoder_frames"))
+        assert logits.shape == (B, cfg.vocab_size), logits.shape
+        assert bool(jnp.all(jnp.isfinite(logits)))
+        caches = steps.caches_from_prefill(cfg, raw, B, 64)
+        # decode 3 steps
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = S + (cfg.frontend.n_tokens if (cfg.frontend and cfg.frontend.kind == "vision") else 0)
+        for i in range(3):
+            tok, lg, caches = steps.serve_step(params, caches, tok, pos + i, cfg=cfg)
+            assert bool(jnp.all(jnp.isfinite(lg))), f"decode {i} NaN"
+        print(f"OK   {arch:26s} params={n:,} loss={float(loss):.3f}")
+    except Exception as e:
+        print(f"FAIL {arch}: {type(e).__name__}: {e}")
+        traceback.print_exc()

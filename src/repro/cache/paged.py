@@ -1,0 +1,110 @@
+"""Paged KV cache pools (device + host) and block tables.
+
+The GPU pool is a jnp array of shape (L, 2, num_blocks, block_size, Hkv, D)
+(2 = K/V); the CPU pool is numpy with num_cpu_blocks.  The serving engine
+moves whole blocks between them through the swap channel; the model decode
+step reads the GPU pool through a block table (see kernels/paged_attention).
+
+For trace-driven benchmarks the pools can be ``data=False`` (bookkeeping
+only) so thousand-conversation runs stay fast.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass
+class PoolSpec:
+    n_layers: int
+    n_kv_heads: int
+    head_dim: int
+    block_size: int          # tokens per block
+    num_gpu_blocks: int
+    num_cpu_blocks: int
+    dtype: str = "bfloat16"
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, num_gpu_blocks: int,
+                    num_cpu_blocks: int, block_size: int = 16) -> "PoolSpec":
+        return cls(n_layers=cfg.n_layers, n_kv_heads=cfg.n_kv_heads,
+                   head_dim=cfg.resolved_head_dim, block_size=block_size,
+                   num_gpu_blocks=num_gpu_blocks,
+                   num_cpu_blocks=num_cpu_blocks)
+
+    def block_bytes(self) -> int:
+        """Bytes of ONE block across all layers and K+V (what one swap of
+        one block moves)."""
+        itemsize = 2 if self.dtype == "bfloat16" else 4
+        return (self.n_layers * 2 * self.block_size * self.n_kv_heads
+                * self.head_dim * itemsize)
+
+
+class PagedPools:
+    def __init__(self, spec: PoolSpec, with_data: bool = True):
+        self.spec = spec
+        self.with_data = with_data
+        if with_data:
+            s = spec
+            self.gpu = jnp.zeros((s.n_layers, 2, s.num_gpu_blocks,
+                                  s.block_size, s.n_kv_heads, s.head_dim),
+                                 jnp.bfloat16)
+            self.cpu = np.zeros((s.n_layers, 2, s.num_cpu_blocks,
+                                 s.block_size, s.n_kv_heads, s.head_dim),
+                                np.float32)
+        else:
+            self.gpu = None
+            self.cpu = None
+
+    # -- data plane (used by the swap channel worker threads) -------------
+
+    def copy_out(self, gpu_blocks: List[int], cpu_blocks: List[int]) -> None:
+        """GPU -> CPU block copy (d2h)."""
+        if not self.with_data:
+            return
+        g = np.asarray(self.gpu[:, :, np.asarray(gpu_blocks)], np.float32)
+        self.cpu[:, :, np.asarray(cpu_blocks)] = g
+
+    def copy_in(self, cpu_blocks: List[int], gpu_blocks: List[int]) -> None:
+        """CPU -> GPU block copy (h2d)."""
+        if not self.with_data:
+            return
+        data = jnp.asarray(self.cpu[:, :, np.asarray(cpu_blocks)], jnp.bfloat16)
+        self.gpu = self.gpu.at[:, :, np.asarray(gpu_blocks)].set(data)
+
+    def write_tokens(self, block_ids: List[int], token_offset: int,
+                     k: np.ndarray, v: np.ndarray) -> None:
+        """Write per-layer K/V for contiguous tokens into the paged GPU pool.
+        k, v: (L, T, Hkv, D); token_offset = index of first token in request."""
+        if not self.with_data:
+            return
+        bs = self.spec.block_size
+        T = k.shape[1]
+        gpu = self.gpu
+        for t0 in range(0, T, bs):
+            t1 = min(t0 + bs, T)
+            tok = token_offset + t0
+            blk = block_ids[tok // bs]
+            off = tok % bs
+            gpu = gpu.at[:, 0, blk, off:off + (t1 - t0)].set(
+                jnp.asarray(k[:, t0:t1], jnp.bfloat16))
+            gpu = gpu.at[:, 1, blk, off:off + (t1 - t0)].set(
+                jnp.asarray(v[:, t0:t1], jnp.bfloat16))
+        self.gpu = gpu
+
+    def read_tokens(self, block_ids: List[int], n_tokens: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Gather (L, T, Hkv, D) K and V for the first n_tokens of a request."""
+        assert self.with_data
+        bs = self.spec.block_size
+        n_blocks = (n_tokens + bs - 1) // bs
+        blocks = np.asarray(block_ids[:n_blocks])
+        g = np.asarray(self.gpu[:, :, blocks])      # (L, 2, nb, bs, H, D)
+        L, _, nb, _, H, D = g.shape
+        flat = g.reshape(L, 2, nb * bs, H, D)[:, :, :n_tokens]
+        return flat[:, 0], flat[:, 1]

@@ -1,0 +1,24 @@
+"""FastSwitch core — the paper's primary contribution.
+
+Dynamic Block Group Manager (block_group), Multithreading Swap Manager
+(swap_manager), KV Cache Reuse Mechanism (reuse), Priority Scheduler
+(scheduler) and the serving engine (engine) that ties them together.
+"""
+from repro.core.block_group import (  # noqa: F401
+    BlockGroup,
+    DynamicBlockGroupManager,
+    OutOfBlocksError,
+)
+from repro.core.engine import EngineMetrics, FastSwitchEngine  # noqa: F401
+from repro.core.policies import (  # noqa: F401
+    DBG_ONLY,
+    DBG_REUSE,
+    FASTSWITCH,
+    POLICIES,
+    VLLM_BASELINE,
+    EngineConfig,
+    EnginePolicy,
+)
+from repro.core.reuse import KVCacheReuseManager  # noqa: F401
+from repro.core.scheduler import PriorityScheduler, Request, ReqState  # noqa: F401
+from repro.core.swap_manager import MultithreadingSwapManager, SimClock  # noqa: F401

@@ -1,0 +1,653 @@
+"""FastSwitch serving engine — the iteration loop tying together the
+priority scheduler, Dynamic Block Group Manager, Multithreading Swap
+Manager and KV Cache Reuse Mechanism (paper Fig. 5).
+
+Two execution modes share the full control plane:
+  * ``sim``  — token bookkeeping only; latency from the hardware cost
+               model.  Used for thousand-conversation benchmark traces
+               (the paper's own priority traces are offline simulations).
+  * ``real`` — a reduced model decodes actual tokens against the paged
+               GPU pool through the Pallas paged-attention kernel, and
+               swaps move real KV bytes between pools.
+
+Per-iteration flow (Algorithm 1 embedded):
+  1. poll completed async swap-ins -> running
+  2. admit arrivals / wake sleeping conversations
+  3. priority-trace step; on update: rebalance queues (preempt / swap-in /
+     admit) under the GPU block budget
+  4. opportunistic admission of waiting requests
+  5. prefill newly admitted requests (prefill-with-prefix accounting)
+  6. decode one token for the running batch (+ block allocation with
+     conflict resolution)
+  7. finish turns: retain KV copy per policy; schedule next turn
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cache.paged import PagedPools, PoolSpec
+from repro.core.block_group import (DynamicBlockGroupManager,
+                                    OutOfBlocksError)
+from repro.core.policies import EngineConfig
+from repro.core.reuse import KVCacheReuseManager
+from repro.core.scheduler import PriorityScheduler, Request, ReqState
+from repro.core.swap_manager import MultithreadingSwapManager, SimClock
+from repro.data.priority import PriorityTrace
+from repro.data.sharegpt import Conversation
+from repro.io.cost_model import IterationCostModel
+
+
+@dataclass
+class EngineMetrics:
+    ttfts_us: List[float] = field(default_factory=list)
+    tbts_us: List[float] = field(default_factory=list)
+    total_tokens: int = 0
+    total_time_us: float = 0.0
+    iterations: int = 0
+    prefills: int = 0
+    preemptions: int = 0
+    swap_in_count: int = 0
+    swap_out_count: int = 0
+    ctx_switch_stall_us: float = 0.0
+    callstack_wall_s: float = 0.0      # REAL wall time of the control plane
+    # (t_end_us, batch, t_iter_us, prefills_in_iter, stall_so_far_us)
+    iter_records: List[Tuple[float, int, float, int, float]] = \
+        field(default_factory=list)
+
+    def percentile(self, xs: Sequence[float], p: float) -> float:
+        if not xs:
+            return 0.0
+        return float(np.percentile(np.asarray(xs), p))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "p50_ttft_ms": self.percentile(self.ttfts_us, 50) / 1e3,
+            "p95_ttft_ms": self.percentile(self.ttfts_us, 95) / 1e3,
+            "p99_ttft_ms": self.percentile(self.ttfts_us, 99) / 1e3,
+            "p999_ttft_ms": self.percentile(self.ttfts_us, 99.9) / 1e3,
+            "p99_tbt_ms": self.percentile(self.tbts_us, 99) / 1e3,
+            "p999_tbt_ms": self.percentile(self.tbts_us, 99.9) / 1e3,
+            "throughput_tok_s": (self.total_tokens
+                                 / max(self.total_time_us / 1e6, 1e-9)),
+            "total_tokens": self.total_tokens,
+            "iterations": self.iterations,
+            "preemptions": self.preemptions,
+            "ctx_switch_stall_us": self.ctx_switch_stall_us,
+            "callstack_wall_s": self.callstack_wall_s,
+        }
+
+
+class FastSwitchEngine:
+    def __init__(self, config: EngineConfig, conversations: List[Conversation],
+                 trace: Optional[PriorityTrace] = None,
+                 model_bundle: Optional[dict] = None):
+        self.config = config
+        pol = config.policy
+        self.clock = SimClock()
+        self.metrics = EngineMetrics()
+
+        group_blocks = pol.initial_group_blocks if pol.use_block_groups else 1
+        self.gpu_mgr = DynamicBlockGroupManager(
+            config.num_gpu_blocks - 1,     # last block reserved as trash
+            config.block_size, initial_group_blocks=group_blocks,
+            seed=config.seed)
+        self.reuse = KVCacheReuseManager(
+            config.num_cpu_blocks, config.block_size,
+            initial_group_blocks=group_blocks, enabled=pol.use_reuse,
+            prealloc_blocks=pol.prealloc_blocks if pol.use_reuse else 0)
+
+        self.model_bundle = model_bundle
+        self.pools: Optional[PagedPools] = None
+        if config.mode == "real":
+            assert model_bundle is not None, "real mode needs a model bundle"
+            cfg = model_bundle["cfg"]
+            spec = PoolSpec.from_config(cfg, config.num_gpu_blocks,
+                                        config.num_cpu_blocks,
+                                        config.block_size)
+            self.pools = PagedPools(spec, with_data=True)
+            self.block_bytes = spec.block_bytes()
+            from repro.models.params import count_params_analytic
+            model_params = count_params_analytic(cfg)
+            kv_tok = spec.block_bytes() // spec.block_size
+        else:
+            # sim mode: modelled LLaMA-8B-like footprint
+            self.block_bytes = config.kv_bytes_per_token * config.block_size
+            model_params = config.model_params
+            kv_tok = config.kv_bytes_per_token
+        # beyond-paper wire compression (int8 KV on the PCIe/DMA link)
+        self.block_bytes = self.block_bytes * pol.swap_wire_bytes_per_elem // 2
+
+        self.swap = MultithreadingSwapManager(
+            config.hardware, self.pools,
+            async_enabled=pol.use_async_swap,
+            adaptive=pol.adaptive_async)
+        self.iter_cost = IterationCostModel(
+            config.hardware, model_params=model_params,
+            kv_bytes_per_token=kv_tok)
+
+        self.trace = trace or PriorityTrace()
+        self.sched = PriorityScheduler(self.trace, config.max_running)
+        self.pending = sorted(conversations, key=lambda c: c.arrival_s)
+        self.sleeping: List[Request] = []
+        self._token_hist_by_conv: Dict[int, List[int]] = {}
+        # per-request CPU block-id mirror for the data plane
+        self._trash_block = config.num_gpu_blocks - 1
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+
+    def _budget_tokens(self) -> int:
+        return self.gpu_mgr.num_blocks * self.config.block_size
+
+    def _req(self, rid: int) -> Request:
+        return self.sched.requests[rid]
+
+    def _transfer_runs(self, runs: List[Tuple[int, int]]
+                       ) -> List[Tuple[int, int]]:
+        """The vLLM baseline issues ONE memcpy per block regardless of
+        physical adjacency (Fig. 3a); block-group policies transfer whole
+        contiguous runs (Fig. 3b); the Llumnix baseline merges per-block
+        copies through a small staging buffer (bounded granularity, one
+        transfer per buffer-full — paper §2.2)."""
+        pol = self.config.policy
+        if pol.use_block_groups:
+            return runs
+        blocks = [b for s, n in runs for b in range(s, s + n)]
+        mb = max(1, pol.merge_buffer_blocks)
+        if mb == 1:
+            return [(b, 1) for b in blocks]
+        # staging-buffer merge: one op per <=mb blocks (the buffer copy
+        # itself runs at HBM speed — negligible next to the PCIe leg)
+        return [(blocks[i], min(mb, len(blocks) - i))
+                for i in range(0, len(blocks), mb)]
+
+    def _runs_for_tokens(self, rid: int, t0: int, t1: int
+                         ) -> List[Tuple[int, int]]:
+        """Contiguous GPU block runs covering tokens [t0, t1)."""
+        if t1 <= t0:
+            return []
+        bs = self.config.block_size
+        ids = self.gpu_mgr.request_block_ids(rid)
+        b0, b1 = t0 // bs, (t1 + bs - 1) // bs
+        blocks = ids[b0:b1]
+        runs: List[Tuple[int, int]] = []
+        for b in blocks:
+            if runs and runs[-1][0] + runs[-1][1] == b:
+                runs[-1] = (runs[-1][0], runs[-1][1] + 1)
+            else:
+                runs.append((b, 1))
+        return runs
+
+    # ------------------------------------------------------------------
+    # swap operations
+    # ------------------------------------------------------------------
+
+    def _swap_out(self, rid: int, keep_copy: bool) -> None:
+        """Preempt: move KV to CPU.  With reuse, only the increment beyond
+        the valid CPU copy is transferred.  In recompute mode the KV is
+        simply dropped (resumption re-prefills the whole context)."""
+        req = self._req(rid)
+        if self.config.policy.preemption_mode == "recompute":
+            self.gpu_mgr.release_request(rid)
+            req.resume_tokens = req.context_tokens
+            self.metrics.preemptions += 1
+            return
+        total = req.context_tokens
+        self.reuse.update_priority(rid, self.sched.priority(rid))
+        inc, _cpu_runs = self.reuse.record_swap_out(
+            rid, total, requesting_priority=self.sched.priority(rid))
+        valid_before = total - inc
+        gpu_runs = self._runs_for_tokens(rid, valid_before, total)
+        gpu_blocks = [b for s, n in gpu_runs for b in range(s, s + n)]
+        if gpu_runs:
+            # conflicts: blocks we're about to read may be swap-in targets
+            self.swap.resolve_conflicts(self.clock, gpu_blocks)
+            copy_fn = self._make_copy_out(rid, valid_before, total) \
+                if self.pools is not None else None
+            asynchronous = self.swap.decide_async(
+                len(self.sched.running), sum(n for _, n in gpu_runs))
+            self.swap.dispatch(self.clock, rid, "out",
+                               self._transfer_runs(gpu_runs),
+                               self.block_bytes, gpu_blocks,
+                               asynchronous=asynchronous, copy_fn=copy_fn)
+            self.metrics.swap_out_count += 1
+        self.gpu_mgr.release_request(rid)
+        self.metrics.preemptions += 1
+
+    def _swap_in(self, rid: int) -> bool:
+        """Bring a swapped request's KV back to GPU.  Returns True if the
+        request is immediately RUNNING (sync), False if in flight."""
+        req = self._req(rid)
+        tokens = req.context_tokens
+        try:
+            self.gpu_mgr.allocate_tokens(rid, tokens)
+            self.gpu_mgr.note_tokens(rid, tokens)
+        except OutOfBlocksError:
+            # roll back the PARTIAL allocation (allocate_tokens acquires
+            # groups incrementally) or the blocks leak into a deadlock
+            self.gpu_mgr.release_request(rid)
+            return False                     # stays swapped; retry later
+        gpu_runs = self.gpu_mgr.request_runs(rid)
+        gpu_blocks = [b for s, n in gpu_runs for b in range(s, s + n)]
+        # the newly allocated target blocks may still be the SOURCE of an
+        # in-flight swap-out — synchronize before overwriting them
+        self.swap.resolve_conflicts(self.clock, gpu_blocks)
+        reused = self.reuse.record_swap_in(rid)
+        asynchronous = self.swap.decide_async(
+            len(self.sched.running), sum(n for _, n in gpu_runs))
+        copy_fn = self._make_copy_in(rid, tokens) if self.pools is not None \
+            else None
+        task = self.swap.dispatch(self.clock, rid, "in",
+                                  self._transfer_runs(gpu_runs),
+                                  self.block_bytes, gpu_blocks,
+                                  asynchronous=asynchronous, copy_fn=copy_fn)
+        self.metrics.swap_in_count += 1
+        if asynchronous:
+            self.sched.move(rid, ReqState.SWAPPING_IN)
+            return False
+        self.sched.move(rid, ReqState.RUNNING)
+        return True
+
+    def _make_copy_out(self, rid: int, t0: int, t1: int):
+        pools = self.pools
+        bs = self.config.block_size
+        gpu_ids = self.gpu_mgr.request_block_ids(rid)[t0 // bs:(t1 + bs - 1) // bs]
+        cpu_ids = self.reuse.mgr.request_block_ids(rid)[t0 // bs:(t1 + bs - 1) // bs]
+        n = min(len(gpu_ids), len(cpu_ids))
+
+        def fn():
+            pools.copy_out(gpu_ids[:n], cpu_ids[:n])
+        return fn
+
+    def _make_copy_in(self, rid: int, tokens: int):
+        pools = self.pools
+        bs = self.config.block_size
+        nblk = (tokens + bs - 1) // bs
+        gpu_ids = self.gpu_mgr.request_block_ids(rid)[:nblk]
+        cpu_ids = self.reuse.mgr.request_block_ids(rid)[:nblk]
+        n = min(len(gpu_ids), len(cpu_ids))
+
+        def fn():
+            pools.copy_in(cpu_ids[:n], gpu_ids[:n])
+        return fn
+
+    # ------------------------------------------------------------------
+    # admission / prefill
+    # ------------------------------------------------------------------
+
+    def _preempt(self, rid: int) -> None:
+        """Swap mode: KV to CPU, request -> SWAPPED.  Recompute mode: KV
+        dropped, request -> WAITING for re-prefill."""
+        self._swap_out(rid, keep_copy=True)
+        if self.config.policy.preemption_mode == "recompute":
+            self.sched.move(rid, ReqState.WAITING)
+        else:
+            self.sched.move(rid, ReqState.SWAPPED)
+
+    def _admit(self, rid: int) -> bool:
+        """WAITING -> RUNNING via prefill (+prefix swap-in if CPU copy).
+        Recompute-preempted requests re-prefill their whole context."""
+        req = self._req(rid)
+        if req.resume_tokens:
+            return self._admit_resume(rid)
+        turn = req.current_turn()
+        reused = min(self.reuse.valid_tokens(rid), req.prefix_tokens)
+        new_ctx = req.prefix_tokens + turn.prompt_tokens
+        try:
+            self.gpu_mgr.allocate_tokens(rid, new_ctx)
+            self.gpu_mgr.note_tokens(rid, new_ctx)
+        except OutOfBlocksError:
+            self.gpu_mgr.release_request(rid)   # roll back partial alloc
+            return False
+        gpu_runs = self.gpu_mgr.request_runs(rid)
+        gpu_blocks = [b for s, n in gpu_runs for b in range(s, s + n)]
+        self.swap.resolve_conflicts(self.clock, gpu_blocks)
+        # prefix-with-prefill: reused tokens are swapped in, the rest computed
+        if reused > 0:
+            bs = self.config.block_size
+            n_reused_blocks = (reused + bs - 1) // bs
+            runs_in: List[Tuple[int, int]] = []
+            for b in self.gpu_mgr.request_block_ids(rid)[:n_reused_blocks]:
+                if runs_in and runs_in[-1][0] + runs_in[-1][1] == b:
+                    runs_in[-1] = (runs_in[-1][0], runs_in[-1][1] + 1)
+                else:
+                    runs_in.append((b, 1))
+            asynchronous = self.swap.decide_async(
+                len(self.sched.running), n_reused_blocks)
+            self.swap.dispatch(
+                self.clock, rid, "in", self._transfer_runs(runs_in),
+                self.block_bytes,
+                [b for s, n in runs_in for b in range(s, s + n)],
+                asynchronous=False,          # prefill needs the prefix NOW
+                copy_fn=(self._make_copy_in(rid, reused)
+                         if self.pools is not None else None))
+        # prefill compute for the non-reused tokens
+        new_tokens = new_ctx - reused
+        chunk = self.config.policy.chunked_prefill_tokens
+        if chunk and self.pools is None and new_tokens > chunk:
+            # BEYOND-PAPER (Sarathi-style): spread the prefill over
+            # iterations so long prompts stop stalling the decode batch
+            req.prefill_remaining = new_tokens
+            req.context_tokens = new_ctx
+            self.metrics.prefills += 1
+            self.sched.move(rid, ReqState.RUNNING)
+            return True
+        t_prefill = self.iter_cost.prefill_us(max(new_tokens, 1))
+        self.clock.advance(t_prefill)
+        req.context_tokens = new_ctx
+        self.metrics.prefills += 1
+        if self.pools is not None:
+            self._real_prefill(req)
+        self.sched.move(rid, ReqState.RUNNING)
+        self._emit_first_token(rid)
+        return True
+
+    def _emit_first_token(self, rid: int) -> None:
+        """The prompt's last position produced the response's first token."""
+        req = self._req(rid)
+        req.context_tokens += 1
+        self.gpu_mgr.allocate_tokens(rid, 1)
+        self.gpu_mgr.note_tokens(rid, 1)
+        req.finish_token(self.clock.now_us)
+        self.metrics.ttfts_us.append(req.ttfts_us[-1])
+        self.metrics.total_tokens += 1
+
+    def _admit_resume(self, rid: int) -> bool:
+        """Re-admit a recompute-preempted request: re-prefill the full
+        context (the recomputation cost the paper's swap mode avoids)."""
+        req = self._req(rid)
+        ctx = req.resume_tokens
+        try:
+            self.gpu_mgr.allocate_tokens(rid, ctx)
+            self.gpu_mgr.note_tokens(rid, ctx)
+        except OutOfBlocksError:
+            self.gpu_mgr.release_request(rid)   # roll back partial alloc
+            return False
+        gpu_blocks = self.gpu_mgr.request_block_ids(rid)
+        self.swap.resolve_conflicts(self.clock, gpu_blocks)
+        self.clock.advance(self.iter_cost.prefill_us(max(ctx, 1)))
+        self.metrics.prefills += 1
+        if self.pools is not None:
+            # recompute: regenerate KV for the already-known history
+            self._real_reprefill(req)
+        req.resume_tokens = 0
+        self.sched.move(rid, ReqState.RUNNING)
+        return True
+
+    def _real_reprefill(self, req: Request) -> None:
+        import jax.numpy as jnp
+        import numpy as np
+
+        from repro.models.paged import prefill_kv
+        mb = self.model_bundle
+        hist = req.token_history
+        # KV for all but the last token (its K/V is written by the next
+        # decode step, which consumes hist[-1] as input)
+        tokens = jnp.asarray([hist[:-1]], jnp.int32)
+        _, k, v = prefill_kv(mb["params"], tokens, cfg=mb["cfg"])
+        ids = self.gpu_mgr.request_block_ids(req.rid)
+        with self.swap._pool_lock:
+            self.pools.write_tokens(ids, 0, np.asarray(k), np.asarray(v))
+
+    # ------------------------------------------------------------------
+    # real-model data plane
+    # ------------------------------------------------------------------
+
+    def _real_prefill(self, req: Request) -> None:
+        """Compute KV for the full current context and write it to the pool."""
+        import jax.numpy as jnp
+
+        from repro.models.paged import prefill_kv
+        mb = self.model_bundle
+        cfg = mb["cfg"]
+        rid = req.rid
+        # deterministic synthetic prompt tokens per (conv, turn)
+        hist = req.token_history
+        turn = req.current_turn()
+        rng = np.random.RandomState((rid * 1009 + req.turn_idx) % (2 ** 31))
+        prompt = rng.randint(1, cfg.vocab_size,
+                             size=turn.prompt_tokens).tolist()
+        hist.extend(prompt)
+        tokens = jnp.asarray([hist], jnp.int32)
+        logits, k, v = prefill_kv(mb["params"], tokens, cfg=cfg)
+        ids = self.gpu_mgr.request_block_ids(rid)
+        with self.swap._pool_lock:
+            self.pools.write_tokens(ids, 0, np.asarray(k.transpose(0, 1, 2, 3)),
+                                    np.asarray(v))
+        first = int(np.argmax(np.asarray(logits)))
+        hist.append(first)
+
+    def _real_decode(self, rids: List[int]) -> None:
+        """Batched paged decode for the running requests."""
+        import jax.numpy as jnp
+
+        from repro.models.paged import paged_decode_step
+        mb = self.model_bundle
+        cfg = mb["cfg"]
+        B = self.config.max_batch
+        bs = self.config.block_size
+        n_pages = max(
+            (len(self.gpu_mgr.request_block_ids(r)) for r in rids), default=1)
+        bt = np.full((B, n_pages), self._trash_block, np.int32)
+        ctx = np.zeros((B,), np.int32)
+        toks = np.zeros((B,), np.int32)
+        for i, r in enumerate(rids):
+            ids = self.gpu_mgr.request_block_ids(r)
+            bt[i, :len(ids)] = ids
+            req = self._req(r)
+            ctx[i] = len(req.token_history) - 1
+            toks[i] = req.token_history[-1]
+        with self.swap._pool_lock:
+            nxt, _, new_pool = paged_decode_step(
+                mb["params"], self.pools.gpu, jnp.asarray(bt),
+                jnp.asarray(ctx), jnp.asarray(toks), cfg=cfg)
+            self.pools.gpu = new_pool
+        nxt = np.asarray(nxt)
+        for i, r in enumerate(rids):
+            self._req(r).token_history.append(int(nxt[i]))
+
+    # ------------------------------------------------------------------
+    # the iteration
+    # ------------------------------------------------------------------
+
+    def step(self) -> None:
+        t_wall0 = time.perf_counter()
+        m = self.metrics
+        bs = self.config.block_size
+        prefills_before = m.prefills
+
+        # Step 1: completed async swap-ins -> running
+        for task in self.swap.poll_completed(self.clock):
+            if task.req_id in self.sched.swapping_in:
+                self.sched.move(task.req_id, ReqState.RUNNING)
+
+        # Step 2: arrivals & wake-ups
+        now_s = self.clock.now_us / 1e6
+        while self.pending and self.pending[0].arrival_s <= now_s:
+            conv = self.pending.pop(0)
+            req = Request(conv=conv)
+            req.begin_turn(self.clock.now_us)
+            self.sched.add_request(req)
+        for req in list(self.sleeping):
+            if req.next_event_s <= now_s:
+                self.sleeping.remove(req)
+                req.turn_idx += 1
+                req.begin_turn(self.clock.now_us)
+                self.sched.add_request(req)
+
+        # Safeguard: a request whose working set exceeds the whole GPU pool
+        # can never be served — fail it instead of deadlocking the queue.
+        budget = self._budget_tokens()
+        for rid in list(self.sched.waiting):
+            req = self._req(rid)
+            need = max(req.target_tokens,
+                       req.prefix_tokens + req.current_turn().prompt_tokens
+                       + bs)
+            if need > budget:
+                import warnings
+                warnings.warn(f"request {rid} needs {need} tokens "
+                              f"> pool budget {budget}; dropping")
+                self.sched.waiting.remove(rid)
+                req.state = ReqState.DONE
+                self.reuse.release(rid)
+                del self.sched.requests[rid]
+
+        # Step 3: priority update -> rebalance
+        updated = self.sched.step_trace()
+        if updated:
+            desired = self.sched.desired_running(self._budget_tokens(), bs)
+            to_preempt, to_swap_in, to_admit = \
+                self.sched.classify_rebalance(desired)
+            for rid in to_preempt:
+                self._preempt(rid)
+            for rid in to_swap_in:
+                self._swap_in(rid)
+            for rid in to_admit:
+                self._admit(rid)
+
+        # Step 4: opportunistic admission (space permitting)
+        for rid in sorted(list(self.sched.waiting),
+                          key=self.sched.priority, reverse=True):
+            free_tok = self.gpu_mgr.free_blocks() * bs
+            req = self._req(rid)
+            need = req.prefix_tokens + req.current_turn().prompt_tokens + bs
+            if need > free_tok or len(self.sched.running) >= self.config.max_running:
+                break
+            self._admit(rid)
+        for rid in list(self.sched.swapped):
+            if len(self.sched.running) + len(self.sched.swapping_in) \
+                    >= self.config.max_running:
+                break
+            free_tok = self.gpu_mgr.free_blocks() * bs
+            if self._req(rid).context_tokens + bs > free_tok:
+                break
+            self._swap_in(rid)
+
+        # Step 5: decode one token for the running batch.  Requests with
+        # an in-flight chunked prefill advance their prefill instead of
+        # decoding (one chunk per iteration, piggybacked on the batch).
+        rids = [r for r in self.sched.running
+                if self._req(r).prefill_remaining == 0]
+        prefilling = [r for r in self.sched.running
+                      if self._req(r).prefill_remaining > 0]
+        chunk_tokens = 0
+        if prefilling:
+            chunk = self.config.policy.chunked_prefill_tokens
+            rid_p = max(prefilling, key=self.sched.priority)
+            reqp = self._req(rid_p)
+            chunk_tokens = min(chunk, reqp.prefill_remaining)
+            reqp.prefill_remaining -= chunk_tokens
+            if reqp.prefill_remaining == 0:
+                self._emit_first_token(rid_p)
+        if rids or prefilling:
+            # block allocation for the new token (conflict-checked)
+            newly_allocated: List[int] = []
+            for rid in rids:
+                req = self._req(rid)
+                before = set(self.gpu_mgr.request_block_ids(rid))
+                try:
+                    self.gpu_mgr.allocate_tokens(rid, 1)
+                    self.gpu_mgr.note_tokens(rid, 1)
+                except OutOfBlocksError:
+                    victim = self._find_victim(exclude={rid})
+                    if victim is None:
+                        continue
+                    self._preempt(victim)
+                    if victim in rids:
+                        rids.remove(victim)
+                    try:
+                        self.gpu_mgr.allocate_tokens(rid, 1)
+                        self.gpu_mgr.note_tokens(rid, 1)
+                    except OutOfBlocksError:
+                        continue           # try again next iteration
+                after = self.gpu_mgr.request_block_ids(rid)
+                newly_allocated.extend(b for b in after if b not in before)
+            if newly_allocated:
+                self.swap.resolve_conflicts(self.clock, newly_allocated)
+            if rids and self.pools is not None:
+                self._real_decode([r for r in rids
+                                   if r in self.sched.running])
+            total_ctx = sum(self._req(r).context_tokens for r in rids)
+            t_iter = self.iter_cost.decode_iter_us(len(rids), total_ctx)
+            if chunk_tokens:
+                t_iter += self.iter_cost.prefill_us(chunk_tokens) \
+                    - self.iter_cost.hw.iter_overhead_us
+            self.clock.advance(t_iter)
+            for rid in rids:
+                if rid not in self.sched.running:
+                    continue
+                req = self._req(rid)
+                req.context_tokens += 1
+                req.finish_token(self.clock.now_us)
+                m.total_tokens += 1
+                if req.tbts_us:
+                    m.tbts_us.append(req.tbts_us[-1])
+                if req.turn_done():
+                    self._finish_turn(rid)
+            m.iter_records.append((self.clock.now_us, len(rids), t_iter,
+                                   m.prefills - prefills_before,
+                                   self.swap.total_stall_us))
+        else:
+            # idle: advance to the next event
+            self._advance_idle()
+
+        m.iterations += 1
+        m.total_time_us = self.clock.now_us
+        m.ctx_switch_stall_us = self.swap.total_stall_us
+        m.callstack_wall_s += time.perf_counter() - t_wall0
+
+    def _find_victim(self, exclude) -> Optional[int]:
+        victims = self.sched.victims_for_space(exclude)
+        return victims[0] if victims else None
+
+    def _finish_turn(self, rid: int) -> None:
+        req = self._req(rid)
+        if req.token_history:
+            self._token_hist_by_conv[rid] = list(req.token_history)
+        # retain the KV copy for the next turn (reuse mechanism); baseline
+        # swaps the whole context out; recompute mode just frees
+        self._swap_out(rid, keep_copy=True)
+        req.resume_tokens = 0       # the next turn is a fresh prefill
+        for q in (self.sched.waiting, self.sched.running,
+                  self.sched.swapped, self.sched.swapping_in):
+            if rid in q:
+                q.remove(rid)
+        if req.turn_idx + 1 < len(req.conv.turns):
+            req.state = ReqState.SLEEPING
+            req.next_event_s = self.clock.now_us / 1e6 + req.conv.think_time_s
+            self.sleeping.append(req)
+            del self.sched.requests[rid]
+        else:
+            req.state = ReqState.DONE
+            self.reuse.release(rid)
+            del self.sched.requests[rid]
+
+    def _advance_idle(self) -> None:
+        events = []
+        if self.pending:
+            events.append(self.pending[0].arrival_s * 1e6)
+        events.extend(r.next_event_s * 1e6 for r in self.sleeping)
+        events.extend(t.done_at for t in self.swap.ongoing_swap_in)
+        if events:
+            self.clock.advance_to(max(min(events), self.clock.now_us + 100.0))
+        else:
+            self.clock.advance(1000.0)
+
+    # ------------------------------------------------------------------
+
+    def done(self) -> bool:
+        return (not self.pending and not self.sleeping
+                and not self.sched.requests)
+
+    def run(self, max_iterations: int = 2_000_000) -> EngineMetrics:
+        it = 0
+        while not self.done() and it < max_iterations:
+            self.step()
+            it += 1
+        self.swap.shutdown()
+        return self.metrics

@@ -1,0 +1,169 @@
+"""KV Cache Reuse Mechanism — FastSwitch §3.3.
+
+Keeps a persistent CPU-side copy of each conversation's KV cache across
+preemptions and turns, tracks *contamination* (CPU blocks reclaimed by
+higher-priority requests), and computes the minimal swap-out increment.
+
+CPU space is managed by a second DynamicBlockGroupManager so that the next
+turn's increment can be *preallocated adjacent* to the existing copy
+(paper: "preallocates additional memory space for the next turn's swap out
+increment ... improves memory continuity").
+
+Invariant (tested property): a request never reuses a contaminated block —
+``valid_tokens`` only counts the uncontaminated *prefix* of the copy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.block_group import DynamicBlockGroupManager, OutOfBlocksError
+
+
+@dataclass
+class CpuCopy:
+    valid_tokens: int = 0          # uncontaminated prefix length (tokens)
+    stored_tokens: int = 0         # tokens physically written to CPU
+    prealloc_tokens: int = 0       # reserved-ahead space (adjacent)
+
+
+class KVCacheReuseManager:
+    def __init__(self, num_cpu_blocks: int, block_size_tokens: int = 16,
+                 initial_group_blocks: int = 60, enabled: bool = True,
+                 prealloc_blocks: int = 16):
+        self.mgr = DynamicBlockGroupManager(
+            num_cpu_blocks, block_size_tokens,
+            initial_group_blocks=initial_group_blocks)
+        self.block_size = block_size_tokens
+        self.enabled = enabled
+        self.prealloc_blocks = prealloc_blocks
+        self.copies: Dict[int, CpuCopy] = {}
+        # priority snapshot used to pick contamination victims
+        self.priorities: Dict[int, float] = {}
+        self.n_contaminations = 0
+
+    # ------------------------------------------------------------------
+
+    def update_priority(self, req_id: int, priority: float) -> None:
+        self.priorities[req_id] = priority
+
+    def valid_tokens(self, req_id: int) -> int:
+        c = self.copies.get(req_id)
+        return c.valid_tokens if (c and self.enabled) else 0
+
+    def plan_swap_out(self, req_id: int, total_tokens: int) -> int:
+        """Tokens that actually need transfer (the increment)."""
+        if not self.enabled:
+            return total_tokens
+        return max(0, total_tokens - self.valid_tokens(req_id))
+
+    def record_swap_out(self, req_id: int, total_tokens: int,
+                        requesting_priority: float = 0.0
+                        ) -> Tuple[int, List[Tuple[int, int]]]:
+        """Allocate CPU space for the increment and mark the copy valid up
+        to ``total_tokens``.  Returns (increment_tokens, cpu_runs) where
+        cpu_runs are the contiguous CPU block runs written."""
+        copy = self.copies.setdefault(req_id, CpuCopy())
+        if not self.enabled:
+            # baseline: the whole context is re-written every preemption
+            self._ensure_cpu_tokens(req_id, total_tokens, requesting_priority,
+                                    replace=True)
+            copy.valid_tokens = total_tokens
+            copy.stored_tokens = total_tokens
+            return total_tokens, self.mgr.request_runs(req_id)
+        inc = max(0, total_tokens - copy.valid_tokens)
+        if inc == 0:
+            return 0, []
+        self._ensure_cpu_tokens(req_id, total_tokens, requesting_priority)
+        # allocation may have been refused (only higher-priority copies
+        # left to contaminate): the valid prefix is capped by what is
+        # physically stored on CPU.
+        cap = self.mgr.request_tokens(req_id)
+        new_valid = min(total_tokens, cap)
+        inc = max(0, new_valid - copy.valid_tokens)
+        copy.valid_tokens = new_valid
+        copy.stored_tokens = new_valid
+        # adjacent preallocation for the NEXT turn's increment
+        try:
+            self.mgr.allocate_tokens(req_id,
+                                     self.prealloc_blocks * self.block_size)
+            self.mgr.note_tokens(req_id, self.prealloc_blocks * self.block_size)
+            copy.prealloc_tokens = self.prealloc_blocks * self.block_size
+        except OutOfBlocksError:
+            pass
+        return inc, self.mgr.request_runs(req_id)
+
+    def record_swap_in(self, req_id: int) -> int:
+        """Swap-in reads the valid prefix; the CPU copy is RETAINED.
+        Returns tokens transferred h2d."""
+        return self.valid_tokens(req_id)
+
+    def release(self, req_id: int) -> None:
+        """Conversation finished: drop the copy."""
+        self.mgr.release_request(req_id)
+        self.copies.pop(req_id, None)
+        self.priorities.pop(req_id, None)
+
+    # ------------------------------------------------------------------
+    # space management & contamination
+    # ------------------------------------------------------------------
+
+    def _ensure_cpu_tokens(self, req_id: int, total_tokens: int,
+                           requesting_priority: float,
+                           replace: bool = False) -> None:
+        copy = self.copies[req_id]
+        have = self.mgr.request_tokens(req_id)
+        need = total_tokens - have
+        if replace and not self.enabled:
+            # baseline rewrites in place; only grow
+            need = total_tokens - have
+        while need > 0:
+            try:
+                self.mgr.allocate_tokens(req_id, need)
+                self.mgr.note_tokens(req_id, need)
+                if copy.prealloc_tokens:
+                    copy.prealloc_tokens = 0   # consumed by growth
+                return
+            except OutOfBlocksError:
+                if not self._contaminate_one(requesting_priority, req_id):
+                    # cannot make space: copy is best-effort truncated
+                    return
+
+    def _contaminate_one(self, requesting_priority: float,
+                         requester: int) -> bool:
+        """Reclaim CPU space from the lowest-priority other copy; shrink its
+        valid prefix (tail-first eviction keeps the longest usable prefix)."""
+        victims = [r for r in self.copies if r != requester
+                   and self.mgr.request_tokens(r) > 0]
+        if not victims:
+            return False
+        victim = min(victims, key=lambda r: self.priorities.get(r, 0.0))
+        if self.priorities.get(victim, 0.0) > requesting_priority:
+            # only lower-priority copies may be contaminated (paper §2.2)
+            return False
+        vcopy = self.copies[victim]
+        # release the victim's LAST group (tail-first)
+        st = self.mgr.requests.get(victim)
+        if st is None or not st.groups:
+            return False
+        g = st.groups.pop()
+        self.mgr._release(g.start, g.length)
+        lost_tokens = g.used * self.block_size
+        self.mgr._token_counts[victim] = max(
+            0, self.mgr._token_counts.get(victim, 0) - g.length * self.block_size)
+        remaining_cap = self.mgr.request_tokens(victim)
+        vcopy.valid_tokens = min(vcopy.valid_tokens,
+                                 max(0, remaining_cap - vcopy.prealloc_tokens))
+        vcopy.stored_tokens = min(vcopy.stored_tokens, vcopy.valid_tokens)
+        vcopy.prealloc_tokens = 0
+        self.n_contaminations += 1
+        return True
+
+    # ------------------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        g = self.mgr.granularity_stats()
+        return {"cpu_copies": len(self.copies),
+                "cpu_free_blocks": self.mgr.free_blocks(),
+                "contaminations": self.n_contaminations,
+                **{f"cpu_{k}": v for k, v in g.items()}}

@@ -1,0 +1,283 @@
+"""Multithreading Swap Manager — FastSwitch §3.2, Algorithm 1.
+
+Responsibilities:
+  * asynchronous swap-in/out dispatch on a worker pool (the paper offloads
+    CUDA API dispatch to C++ threads; here workers perform the actual pool
+    copies while the *latency* of dispatch+execution is accounted on a
+    simulated swap-stream timeline — see DESIGN.md §2.3);
+  * adaptive sync/async decision from a recent-swap profiler (Step 4);
+  * KV-conflict detection between in-flight swap-ins and newly allocated
+    GPU blocks, resolved by fine-grained synchronization (Step 3.1);
+  * dispatch-order coherence: after ``sync_every`` queued dispatches a
+    fine-grained sync point is inserted so higher-priority copies can enter
+    the queue (its small cost is part of the call-stack overhead budget).
+
+The simulated clock makes every latency metric deterministic and
+hardware-parameterized while the data plane stays real.
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.cache.paged import PagedPools
+from repro.io.cost_model import HardwareSpec, dispatch_time_us, exec_time_us
+
+
+class SimClock:
+    def __init__(self):
+        self.now_us = 0.0
+
+    def advance(self, dt_us: float) -> None:
+        assert dt_us >= -1e-9, dt_us
+        self.now_us += max(dt_us, 0.0)
+
+    def advance_to(self, t_us: float) -> None:
+        self.now_us = max(self.now_us, t_us)
+
+
+@dataclass
+class SwapTask:
+    req_id: int
+    direction: str                    # "in" | "out"
+    n_ops: int
+    n_blocks: int
+    bytes_total: int
+    issued_at: float
+    done_at: float
+    gpu_blocks: Set[int] = field(default_factory=set)
+    future: Optional[Future] = None
+    synchronous: bool = False
+
+    def is_completed(self, now_us: float) -> bool:
+        if self.future is not None and not self.future.done():
+            return False        # data plane must also be finished
+        return now_us >= self.done_at
+
+
+@dataclass
+class SwapRecord:
+    """r_info entry (recent swapping information, Algorithm 1)."""
+    t_us: float
+    direction: str
+    n_ops: int
+    n_blocks: int
+    duration_us: float
+
+
+class MultithreadingSwapManager:
+    def __init__(self, hw: HardwareSpec, pools: Optional[PagedPools] = None,
+                 *, async_enabled: bool = True, adaptive: bool = True,
+                 n_threads: int = 4, sync_every: int = 16,
+                 sync_point_us: float = 5.0, r_info_window: int = 64):
+        self.hw = hw
+        self.pools = pools
+        self.async_enabled = async_enabled
+        self.adaptive = adaptive
+        self.sync_every = sync_every
+        self.sync_point_us = sync_point_us
+        self._executor = ThreadPoolExecutor(max_workers=n_threads) \
+            if pools is not None and pools.with_data else None
+        self._pool_lock = threading.Lock()
+        # swap-stream timeline (I/O resource occupancy)
+        self.stream_free_at = 0.0
+        self._dispatches_since_sync = 0
+        # queues (Algorithm 1)
+        self.ongoing_swap_in: List[SwapTask] = []
+        # in-flight async swap-outs: their source GPU blocks must not be
+        # overwritten until the d2h copy completes (paper §3.2: conflicts
+        # involve "ongoing swapping requests" in BOTH directions)
+        self.ongoing_swap_out: List[SwapTask] = []
+        self.r_info: List[SwapRecord] = []
+        self.r_info_window = r_info_window
+        # metrics
+        self.total_ops = 0
+        self.total_blocks = 0
+        self.total_bytes = 0
+        self.ops_by_dir = {"in": 0, "out": 0}
+        self.blocks_by_dir = {"in": 0, "out": 0}
+        self.total_stall_us = 0.0          # main-thread (GPU-idle) stall
+        self.total_io_us = 0.0             # swap-stream busy time
+        self.n_conflicts = 0
+        self.n_syncs = 0
+        self.callstack_overhead_us = 0.0   # fine-grained sync points etc.
+
+    # ------------------------------------------------------------------
+    # cost helpers
+    # ------------------------------------------------------------------
+
+    def _op_costs(self, runs: Sequence[Tuple[int, int]], block_bytes: int,
+                  h2d: bool) -> Tuple[int, int, int, float, float]:
+        """runs: [(start_block, n_blocks)] contiguous transfer ops.
+        Returns (n_ops, n_blocks, bytes, dispatch_us, exec_us)."""
+        n_ops = len(runs)
+        n_blocks = sum(n for _, n in runs)
+        total_bytes = n_blocks * block_bytes
+        disp = n_ops * dispatch_time_us(self.hw)
+        ex = sum(exec_time_us(self.hw, n * block_bytes, h2d) for _, n in runs)
+        return n_ops, n_blocks, total_bytes, disp, ex
+
+    def _sync_points(self, n_ops: int) -> float:
+        """Dispatch-order coherence: a sync point every ``sync_every`` ops."""
+        self._dispatches_since_sync += n_ops
+        n_sync = self._dispatches_since_sync // self.sync_every
+        self._dispatches_since_sync %= self.sync_every
+        cost = n_sync * self.sync_point_us
+        self.callstack_overhead_us += cost
+        return cost
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+
+    def dispatch(self, clock: SimClock, req_id: int, direction: str,
+                 runs: Sequence[Tuple[int, int]], block_bytes: int,
+                 gpu_blocks: Sequence[int], *, asynchronous: bool,
+                 copy_fn=None) -> SwapTask:
+        """Issue one swap (all ops of one request, one direction)."""
+        h2d = direction == "in"
+        n_ops, n_blocks, nbytes, disp, ex = self._op_costs(
+            runs, block_bytes, h2d)
+        sync_cost = self._sync_points(n_ops)
+        start = max(clock.now_us, self.stream_free_at)
+        duration = disp + ex + sync_cost
+        done_at = start + duration
+        self.stream_free_at = done_at
+        self.total_io_us += duration
+
+        if asynchronous:
+            # dispatch happens on a worker thread: main thread not blocked
+            stall = 0.0
+        else:
+            # main thread dispatches AND waits: inference stalls until done
+            stall = done_at - clock.now_us
+            clock.advance_to(done_at)
+        self.total_stall_us += stall
+
+        task = SwapTask(req_id=req_id, direction=direction, n_ops=n_ops,
+                        n_blocks=n_blocks, bytes_total=nbytes,
+                        issued_at=clock.now_us, done_at=done_at,
+                        gpu_blocks=set(gpu_blocks),
+                        synchronous=not asynchronous)
+        if copy_fn is not None:
+            if asynchronous and self._executor is not None:
+                task.future = self._executor.submit(self._locked, copy_fn)
+            else:
+                self._locked(copy_fn)
+        self.total_ops += n_ops
+        self.total_blocks += n_blocks
+        self.total_bytes += nbytes
+        self.ops_by_dir[direction] += n_ops
+        self.blocks_by_dir[direction] += n_blocks
+        self.r_info.append(SwapRecord(clock.now_us, direction, n_ops,
+                                      n_blocks, duration))
+        if len(self.r_info) > self.r_info_window:
+            self.r_info = self.r_info[-self.r_info_window:]
+        if asynchronous:
+            if direction == "in":
+                self.ongoing_swap_in.append(task)
+            else:
+                self.ongoing_swap_out.append(task)
+        return task
+
+    def _locked(self, fn):
+        with self._pool_lock:
+            return fn()
+
+    # ------------------------------------------------------------------
+    # Algorithm 1 steps
+    # ------------------------------------------------------------------
+
+    def poll_completed(self, clock: SimClock) -> List[SwapTask]:
+        """Step 1: move finished swap-ins out of ongoing_swap_in (and prune
+        finished swap-outs)."""
+        done = [t for t in self.ongoing_swap_in if t.is_completed(clock.now_us)]
+        self.ongoing_swap_in = [t for t in self.ongoing_swap_in
+                                if not t.is_completed(clock.now_us)]
+        self.ongoing_swap_out = [t for t in self.ongoing_swap_out
+                                 if not t.is_completed(clock.now_us)]
+        return done
+
+    def detect_conflicts(self, gpu_blocks: Sequence[int]) -> List[SwapTask]:
+        """Step 3.1: in-flight swaps whose GPU blocks intersect
+        ``gpu_blocks`` (about to be written by running requests): swap-in
+        targets AND swap-out sources both conflict."""
+        s = set(gpu_blocks)
+        return [t for t in self.ongoing_swap_in + self.ongoing_swap_out
+                if t.gpu_blocks & s]
+
+    def synchronize(self, clock: SimClock, tasks: Optional[List[SwapTask]]
+                    = None) -> None:
+        """Fine-grained sync: wait for specific tasks (or all)."""
+        tasks = self.ongoing_swap_in if tasks is None else tasks
+        if not tasks:
+            return
+        target = max(t.done_at for t in tasks)
+        stall = max(0.0, target - clock.now_us)
+        self.total_stall_us += stall
+        clock.advance_to(target)
+        for t in tasks:
+            if t.future is not None:
+                t.future.result()
+        done_ids = {id(t) for t in tasks}
+        self.ongoing_swap_in = [t for t in self.ongoing_swap_in
+                                if id(t) not in done_ids]
+        self.ongoing_swap_out = [t for t in self.ongoing_swap_out
+                                 if id(t) not in done_ids]
+        self.n_syncs += 1
+
+    def resolve_conflicts(self, clock: SimClock,
+                          gpu_blocks: Sequence[int]) -> int:
+        conflicts = self.detect_conflicts(gpu_blocks)
+        if conflicts:
+            self.n_conflicts += len(conflicts)
+            self.synchronize(clock, conflicts)
+        return len(conflicts)
+
+    # ------------------------------------------------------------------
+    # Step 4: adaptive strategy
+    # ------------------------------------------------------------------
+
+    def decide_async(self, running_batch: int, pending_swap_blocks: int
+                     ) -> bool:
+        """Dynamic swapping decision (paper: async is NOT always best —
+        with many short requests the swap is small relative to the tokens a
+        sync swap would unblock)."""
+        if not self.async_enabled:
+            return False
+        if not self.adaptive:
+            return True
+        if not self.r_info:
+            return True
+        recent = self.r_info[-16:]
+        avg_blocks = sum(r.n_blocks for r in recent) / len(recent)
+        # small swaps + large running batch -> sync is cheap and keeps the
+        # token pipeline simple; large swaps -> overlap pays off
+        if pending_swap_blocks + avg_blocks < 8 and running_batch >= 32:
+            return False
+        return True
+
+    # ------------------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "total_ops": self.total_ops,
+            "total_blocks": self.total_blocks,
+            "total_bytes": self.total_bytes,
+            "ops_in": self.ops_by_dir["in"],
+            "ops_out": self.ops_by_dir["out"],
+            "blocks_in": self.blocks_by_dir["in"],
+            "blocks_out": self.blocks_by_dir["out"],
+            "total_stall_us": self.total_stall_us,
+            "total_io_us": self.total_io_us,
+            "n_conflicts": self.n_conflicts,
+            "n_syncs": self.n_syncs,
+            "ongoing": len(self.ongoing_swap_in),
+            "callstack_overhead_us": self.callstack_overhead_us,
+        }
+
+    def shutdown(self):
+        if self._executor is not None:
+            self._executor.shutdown(wait=True)

@@ -1,0 +1,96 @@
+"""Host<->device transfer cost model.
+
+This container has no PCIe/TPU DMA to measure, so latency accounting is
+explicit and hardware-parameterized (the paper's own evaluation fixes the
+hardware and derives latency from measured transfer behaviour).  The model
+captures exactly the effect FastSwitch exploits:
+
+    t(op) = dispatch_overhead + bytes / effective_bw(bytes)
+
+with an efficiency ramp below the optimal transfer size — small per-block
+copies are dispatch-bound (paper: dispatch is 90-95 % of a 128 KB copy's
+total time on PCIe 4.0), large block-group copies amortize it.
+
+Presets:
+  * ``A10_PCIE4``  — the paper's LLaMA-8B testbed (32 GB/s uni, ~10 us
+    dispatch, 320 KB optimal transfer size);
+  * ``A100_PCIE4`` — the paper's Qwen-32B testbed;
+  * ``TPU_V5E_HOST`` — the adaptation target: host DMA issue cost + host
+    link bandwidth per chip.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    # I/O
+    dispatch_us: float            # per-transfer issue/dispatch overhead
+    h2d_bw_gbps: float            # unidirectional host->device GB/s
+    d2h_bw_gbps: float
+    optimal_transfer_bytes: int   # full-bandwidth threshold (PCIe4: ~320KB)
+    # compute (for iteration-time modelling, bf16)
+    peak_tflops: float
+    hbm_gbps: float
+    # per-iteration fixed overhead (kernel launch path, sampler, ...)
+    iter_overhead_us: float = 300.0
+
+
+# Paper (Fig. 3): a 128 KB per-block copy has ~10 us *execution* but its
+# Python-call-stack dispatch is 90-95 % of total transmission time, i.e.
+# O(100 us) per cudaMemcpyAsync issued from the vLLM loop.
+A10_PCIE4 = HardwareSpec(
+    name="A10-PCIe4", dispatch_us=100.0, h2d_bw_gbps=32.0, d2h_bw_gbps=32.0,
+    optimal_transfer_bytes=320 * 1024, peak_tflops=125.0, hbm_gbps=600.0)
+
+A100_PCIE4 = HardwareSpec(
+    name="A100-PCIe4", dispatch_us=100.0, h2d_bw_gbps=32.0, d2h_bw_gbps=32.0,
+    optimal_transfer_bytes=320 * 1024, peak_tflops=312.0, hbm_gbps=2039.0)
+
+TPU_V5E_HOST = HardwareSpec(
+    name="TPUv5e-host", dispatch_us=8.0, h2d_bw_gbps=32.0, d2h_bw_gbps=32.0,
+    optimal_transfer_bytes=512 * 1024, peak_tflops=197.0, hbm_gbps=819.0)
+
+PRESETS = {h.name: h for h in (A10_PCIE4, A100_PCIE4, TPU_V5E_HOST)}
+
+
+def transfer_time_us(hw: HardwareSpec, nbytes: int, h2d: bool) -> float:
+    """Cost of ONE transfer op of ``nbytes`` contiguous bytes."""
+    return dispatch_time_us(hw) + exec_time_us(hw, nbytes, h2d)
+
+
+def dispatch_time_us(hw: HardwareSpec) -> float:
+    return hw.dispatch_us
+
+
+def exec_time_us(hw: HardwareSpec, nbytes: int, h2d: bool) -> float:
+    bw = hw.h2d_bw_gbps if h2d else hw.d2h_bw_gbps
+    eff = min(1.0, max(nbytes / hw.optimal_transfer_bytes, 0.05))
+    return nbytes / (bw * eff * 1e9) * 1e6
+
+
+@dataclass
+class IterationCostModel:
+    """Decode/prefill iteration time for the *serving* hardware model.
+
+    decode:  t = overhead + max(flops_term, hbm_term)   (memory-bound mostly)
+    prefill: t = overhead + flops / peak
+    """
+    hw: HardwareSpec
+    model_params: int             # N parameters of the served model
+    kv_bytes_per_token: int       # per-token KV footprint (all layers)
+
+    def decode_iter_us(self, batch_size: int, total_context: int) -> float:
+        if batch_size == 0:
+            return 0.0
+        flops = 2.0 * self.model_params * batch_size
+        t_compute = flops / (self.hw.peak_tflops * 1e12) * 1e6
+        bytes_moved = 2.0 * self.model_params + self.kv_bytes_per_token * total_context
+        t_mem = bytes_moved / (self.hw.hbm_gbps * 1e9) * 1e6
+        return self.hw.iter_overhead_us + max(t_compute, t_mem)
+
+    def prefill_us(self, n_tokens: int) -> float:
+        flops = 2.0 * self.model_params * n_tokens
+        return self.hw.iter_overhead_us + flops / (self.hw.peak_tflops * 1e12) * 1e6

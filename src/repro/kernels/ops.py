@@ -1,0 +1,64 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on a
+real TPU deployment set ``repro.kernels.ops.INTERPRET = False`` (or pass
+explicitly) to run the compiled Mosaic kernels.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import block_copy as _bc
+from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
+
+INTERPRET = True
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens, scale,
+                    interpret: bool | None = None):
+    return _pa.paged_attention(q, k_pool, v_pool, block_tables, context_lens,
+                               scale,
+                               interpret=INTERPRET if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, block_q=128, block_k=128,
+                    interpret: bool | None = None):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k,
+                               interpret=INTERPRET if interpret is None else interpret)
+
+
+def copy_blocks(src_pool, dst_pool, src_blocks, dst_blocks,
+                interpret: bool | None = None):
+    """Per-block scattered copy (vLLM baseline data plane)."""
+    return _bc.block_copy(src_pool, dst_pool,
+                          jnp.asarray(src_blocks, jnp.int32),
+                          jnp.asarray(dst_blocks, jnp.int32),
+                          interpret=INTERPRET if interpret is None else interpret)
+
+
+def copy_block_runs(src_pool, dst_pool, runs: Sequence[Tuple[int, int]],
+                    dst_starts: Sequence[int],
+                    interpret: bool | None = None):
+    """Grouped copy: runs[i]=(src_start, n_blocks) -> dst_starts[i]."""
+    if not runs:
+        return dst_pool
+    src_starts = jnp.asarray([r[0] for r in runs], jnp.int32)
+    lens = jnp.asarray([r[1] for r in runs], jnp.int32)
+    dsts = jnp.asarray(list(dst_starts), jnp.int32)
+    run_blocks = int(max(r[1] for r in runs))
+    return _bc.block_copy_grouped(
+        src_pool, dst_pool, src_starts, dsts, lens, run_blocks=run_blocks,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def gla_scan_scalar(q, k, v, logw, *, chunk=64, interpret: bool | None = None):
+    """Chunked scalar-decay gated linear attention (Mamba2/SSD hot path)."""
+    from repro.kernels import gla_scan as _gla
+    return _gla.gla_scan_scalar(
+        q, k, v, logw, chunk=chunk,
+        interpret=INTERPRET if interpret is None else interpret)

@@ -1,0 +1,106 @@
+"""Pallas TPU paged-attention decode kernel.
+
+One query token per sequence attends to a paged KV pool through a block
+table (vLLM-style).  TPU adaptation: the block table is scalar-prefetched
+so each KV page is DMA'd HBM->VMEM via the BlockSpec index_map (no gather
+materialization); online softmax runs on (group x page) tiles so the MXU
+sees (group, D) x (D, bs) matmuls.
+
+Grid: (B, Hkv, n_pages); accumulators live in VMEM scratch and the output
+page is written on the last grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, bs: int, scale: float, n_pages: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    ctx = ctx_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                 # (group, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)           # (bs, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    token_ids = i * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    mask = token_ids < ctx                               # (1, bs)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...][:, 0]                            # (group,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])                      # (group, bs)
+    l_new = l_ref[...][:, 0] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(i == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)               # guard ctx == 0
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_attention(q, k_pool, v_pool, block_tables, context_lens,
+                    scale: float, interpret: bool = True) -> jnp.ndarray:
+    """q: (B, Hq, D); k_pool/v_pool: (nb, bs, Hkv, D);
+    block_tables: (B, n_pages) int32; context_lens: (B,) int32.
+    Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    nb, bs, Hkv, _ = k_pool.shape
+    n_pages = block_tables.shape[1]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, D)
+
+    flat_bt = block_tables.reshape(-1).astype(jnp.int32)
+
+    def q_map(b, h, i, bt, ctx):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, i, bt, ctx):
+        return (bt[b * n_pages + i], 0, h, 0)
+
+    def o_map(b, h, i, bt, ctx):
+        return (b, h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, group, D), q_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+            pl.BlockSpec((1, bs, 1, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, D), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, bs=bs, scale=scale, n_pages=n_pages),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, D), q.dtype),
+        interpret=interpret,
+    )(flat_bt, context_lens.astype(jnp.int32), qg, k_pool, v_pool)
+    return out.reshape(B, Hq, D)

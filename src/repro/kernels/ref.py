@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, kv_pool, block_tables, context_lens,
+                        scale: float) -> jnp.ndarray:
+    """Decode attention over a paged KV pool.
+
+    q:            (B, Hq, D)
+    kv_pool:      (2, nb, bs, Hkv, D)   (single layer; 0=K, 1=V)
+    block_tables: (B, max_blocks) int32 physical block ids
+    context_lens: (B,) int32
+    Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    _, nb, bs, Hkv, _ = kv_pool.shape
+    max_blocks = block_tables.shape[1]
+    S = max_blocks * bs
+    group = Hq // Hkv
+
+    k = kv_pool[0][block_tables]            # (B, max_blocks, bs, Hkv, D)
+    v = kv_pool[1][block_tables]
+    k = k.reshape(B, S, Hkv, D)
+    v = v.reshape(B, S, Hkv, D)
+
+    qg = q.reshape(B, Hkv, group, D).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bshd->bhgs", qg, k.astype(jnp.float32)) * scale
+    valid = jnp.arange(S)[None, :] < context_lens[:, None]       # (B, S)
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+def block_copy_ref(src_pool, dst_pool, src_blocks, dst_blocks) -> jnp.ndarray:
+    """Copy blocks src_pool[src_blocks[i]] -> dst_pool[dst_blocks[i]].
+
+    src_pool: (nb_src, blk_elems); dst_pool: (nb_dst, blk_elems);
+    src_blocks/dst_blocks: (n,) int32.  Returns updated dst_pool.
+    """
+    return dst_pool.at[dst_blocks].set(src_pool[src_blocks])
+
+
+def mha_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """Full attention oracle.  q,k,v: (B, T, H, D) (same H: pre-expanded)."""
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+    logits = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((T, S), bool), k=S - T)
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,141 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+for the production meshes and emit memory/cost/roofline artifacts.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun
+
+Exit code != 0 if any requested case fails to compile.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import INPUT_SHAPES, SHAPES_BY_NAME, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_case, supports_case
+from repro.roofline import analysis as roofline
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             want_roofline: bool = True, variant: str = "baseline") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    ok, why = supports_case(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    case = build_case(cfg, shape, mesh, variant=variant)
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(case["fn"],
+                         in_shardings=case["in_shardings"],
+                         out_shardings=case.get("out_shardings"),
+                         donate_argnums=case.get("donate_argnums", ()))
+        kwargs = case.get("kwargs", {})
+        lowered = jitted.lower(*case["args"], **kwargs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "status": "ok",
+        "t_lower_s": round(t_lower, 2),
+        "t_compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes_per_device": int(
+                getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes_per_device": int(
+                getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes_per_device": int(
+                getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+    }
+    if want_roofline:
+        mf = roofline.model_flops_estimate(cfg, shape)
+        af, ab = roofline.analytic_floors(cfg, shape, mesh.size)
+        terms = roofline.analyze(compiled, n_chips=mesh.size, model_flops=mf,
+                                 analytic_flops_dev=af,
+                                 analytic_bytes_dev=ab)
+        result["roofline"] = terms.as_dict()
+    return result
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", action="append", default=None,
+                    help="architecture id (repeatable)")
+    ap.add_argument("--shape", action="append", default=None,
+                    help="input shape name (repeatable)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="off")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="'+'-combinable: tp-params, kv-int8, moe-cap-shard")
+    args = ap.parse_args()
+
+    archs = args.arch or (list_archs() if args.all else ["qwen2-1.5b"])
+    shapes = args.shape or ([s.name for s in INPUT_SHAPES] if args.all
+                            else ["train_4k"])
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+
+    results = []
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in pods:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    r = run_case(arch, shape, mp,
+                                 want_roofline=not args.no_roofline,
+                                 variant=args.variant)
+                except Exception as e:  # noqa: BLE001
+                    r = {"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "status": "FAIL",
+                         "error": f"{type(e).__name__}: {e}",
+                         "trace": traceback.format_exc()[-2000:]}
+                    n_fail += 1
+                results.append(r)
+                if r["status"] == "ok":
+                    mem = r["memory"]
+                    rf = r.get("roofline", {})
+                    print(f"OK   {tag:60s} args={mem['argument_bytes_per_device']/2**30:6.2f}GiB "
+                          f"temp={mem['temp_bytes_per_device']/2**30:6.2f}GiB "
+                          f"dom={rf.get('dominant', '-'):10s} "
+                          f"lower={r['t_lower_s']}s compile={r['t_compile_s']}s",
+                          flush=True)
+                elif r["status"] == "skipped":
+                    print(f"SKIP {tag:60s} {r['reason']}", flush=True)
+                else:
+                    print(f"FAIL {tag:60s} {r['error']}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

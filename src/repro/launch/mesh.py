@@ -1,0 +1,22 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model").
+
+Defined as functions so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS *before* any jax import.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs (same axis names, size 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

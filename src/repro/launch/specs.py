@@ -1,0 +1,276 @@
+"""Dry-run case construction: ShapeDtypeStruct inputs + shardings for every
+(architecture x input shape), plus the jit-able step function for each kind.
+
+``input_specs(cfg, shape)`` gives weak-type-correct, shardable stand-ins —
+no device allocation ever happens in the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import sharding as shard_rules
+from repro.models import steps
+from repro.models import transformer as T
+from repro.train.optimizer import adamw_init
+
+SDS = jax.ShapeDtypeStruct
+
+
+def supports_case(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """long_500k only runs on sub-quadratic-decode archs (DESIGN.md)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context_decode:
+        return False, ("skip: pure full-attention arch without a "
+                       "windowed/recurrent variant (DESIGN.md long_500k rule)")
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# input ShapeDtypeStructs
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.encoder_decoder:
+        # decoder seq bounded by the model's max positions; encoder frames
+        # carry the (stubbed) audio frontend embeddings
+        S = min(S, cfg.max_seq_len)
+    batch = {"tokens": SDS((B, S), jnp.int32),
+             "labels": SDS((B, S), jnp.int32)}
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        batch["extra_embeds"] = SDS((B, cfg.frontend.n_tokens,
+                                     cfg.frontend.d_embed), jnp.float32)
+    if cfg.encoder_decoder:
+        batch["encoder_frames"] = SDS((B, cfg.n_encoder_tokens, cfg.d_model),
+                                      jnp.float32)
+    return batch
+
+
+def decode_input_specs(cfg: ModelConfig, shape: InputShape, kv_dtype=None):
+    B, S = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, B, S, kv_dtype=kv_dtype))
+    token = SDS((B,), jnp.int32)
+    pos = SDS((), jnp.int32)
+    return caches, token, pos
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axsize(mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def _fit(dim: int, mesh: Mesh, ax):
+    return ax if dim % _axsize(mesh, ax) == 0 else None
+
+
+def batch_spec(mesh: Mesh, batch: int, all_axes: bool = False) -> Any:
+    """all_axes: spread the batch over the WHOLE mesh (ZeRO-3-style fully
+    data-parallel activations — params stay 2-D sharded and GSPMD
+    all-gathers them per layer inside the scan).  Used for train_step where
+    attention logits dominate per-device temp memory."""
+    if all_axes:
+        full = tuple(mesh.axis_names)
+        if batch % _axsize(mesh, full) == 0:
+            return full
+    ba = _batch_axes(mesh)
+    if batch % _axsize(mesh, ba) == 0:
+        return ba
+    if batch % mesh.shape["data"] == 0:
+        return "data"
+    return None
+
+
+def train_batch_shardings(cfg, mesh: Mesh, batch_specs_tree):
+    def one(leaf):
+        bax = batch_spec(mesh, leaf.shape[0], all_axes=True)
+        return NamedSharding(mesh, P(bax, *([None] * (len(leaf.shape) - 1))))
+    return jax.tree.map(one, batch_specs_tree)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, caches_shape,
+                    global_batch: int, long_context: bool):
+    """Per-leaf decode-cache shardings (see DESIGN.md §5):
+    batch over (pod, data); for (L,B,S,H,D)-like leaves shard seq over
+    `model` (uniform rule that works for every kv_heads count); when
+    batch == 1 (long context) shard seq over (data, model)."""
+    bax = batch_spec(mesh, global_batch)
+
+    def leaf_spec(leaf) -> P:
+        shp = leaf.shape
+        nd = len(shp)
+        spec = [None] * nd
+        # locate the batch dim: first dim equal to global_batch after any
+        # leading stack axes
+        b_idx = None
+        for i, d in enumerate(shp):
+            if d == global_batch and i <= 2:
+                b_idx = i
+                break
+        if b_idx is None:
+            return P()
+        if bax is not None and global_batch > 1:
+            spec[b_idx] = bax
+        # sequence dim = the large dim following batch (>= 256)
+        s_idx = None
+        for i in range(b_idx + 1, nd - 1):
+            if shp[i] >= 256:
+                s_idx = i
+                break
+        if s_idx is not None:
+            if long_context:
+                ax = _fit(shp[s_idx], mesh, ("data", "model"))
+                spec[s_idx] = ax if ax else _fit(shp[s_idx], mesh, "model")
+            else:
+                spec[s_idx] = _fit(shp[s_idx], mesh, "model")
+        else:
+            # stateful caches (SSM/RWKV): shard heads over model
+            for i in range(b_idx + 1, nd):
+                if shp[i] >= 8 and shp[i] % mesh.shape["model"] == 0:
+                    spec[i] = "model"
+                    break
+        return P(*spec)
+
+    return jax.tree.map(lambda l: NamedSharding(mesh, leaf_spec(l)),
+                        caches_shape)
+
+
+# ---------------------------------------------------------------------------
+# case assembly
+# ---------------------------------------------------------------------------
+
+def activation_ctx_for(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                       variants=()):
+    """Activation-sharding context for trace time (DESIGN.md §5):
+      * train: batch over ALL axes (ZeRO-3: params all-gathered per layer);
+      * prefill/decode: batch over (pod, data), K/V sequence over model."""
+    from repro.models.sharding import ActivationCtx
+    cap = "moe-cap-shard" in variants
+    if shape.kind == "train":
+        bax = batch_spec(mesh, shape.global_batch, all_axes=True)
+        return ActivationCtx(mesh=mesh, batch_axes=bax, kv_seq_axis=None,
+                             moe_cap_shard=cap)
+    bax = batch_spec(mesh, shape.global_batch)
+    return ActivationCtx(mesh=mesh, batch_axes=bax, kv_seq_axis="model",
+                         moe_cap_shard=cap)
+
+
+def _with_act_ctx(fn, ctx):
+    """Wrap a step fn so the activation context is set during tracing."""
+    import functools as _ft
+
+    from repro.models.sharding import (reset_activation_ctx,
+                                       set_activation_ctx)
+
+    @_ft.wraps(fn)
+    def wrapped(*args, **kw):
+        tok = set_activation_ctx(ctx)
+        try:
+            return fn(*args, **kw)
+        finally:
+            reset_activation_ctx(tok)
+    return wrapped
+
+
+def build_case(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               key=None, variant: str = "baseline") -> Dict[str, Any]:
+    """Returns dict(fn, args (ShapeDtypeStructs), in_shardings,
+    out_shardings, donate) ready for jit().lower(...).
+
+    §Perf hillclimb variants ('+'-combinable, e.g. "tp-params+kv-int8"):
+      * "tp-params": pure tensor-parallel params (no data-axis ZeRO shard)
+        — removes the per-step weight all-gather for decode;
+      * "kv-int8": int8-quantized attention KV cache — halves the
+        memory-bound decode's dominant HBM term;
+      * "moe-cap-shard": shard MoE dispatch capacity over `data` — removes
+        the data-axis replication of expert matmuls.
+    """
+    variants = set(variant.split("+")) if variant else {"baseline"}
+    known = {"baseline", "tp-params", "kv-int8", "moe-cap-shard"}
+    assert variants <= known, variants
+    params_shape = jax.eval_shape(
+        lambda k: T.init_params(cfg, k), SDS((2,), jnp.uint32))
+    pshard = shard_rules.param_shardings(
+        cfg, mesh, params_shape, replicate_data="tp-params" in variants)
+    repl = NamedSharding(mesh, P())
+    act_ctx = activation_ctx_for(cfg, shape, mesh, variants=variants)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        # optimizer moments share the param shardings; step is replicated
+        from repro.train.optimizer import AdamWState
+        opt_shard = AdamWState(step=repl, mu=pshard, nu=pshard)
+        batch = train_batch_specs(cfg, shape)
+        bshard = train_batch_shardings(cfg, mesh, batch)
+        fn = _with_act_ctx(functools.partial(steps.train_step, cfg=cfg),
+                           act_ctx)
+        return dict(fn=fn, args=(params_shape, opt_shape, batch),
+                    in_shardings=(pshard, opt_shard, bshard),
+                    out_shardings=(pshard, opt_shard, repl),
+                    donate_argnums=(0, 1))
+
+    if shape.kind == "prefill":
+        B = shape.global_batch
+        S = min(shape.seq_len, cfg.max_seq_len) if cfg.encoder_decoder \
+            else shape.seq_len
+        tokens = SDS((B, S), jnp.int32)
+        bax = batch_spec(mesh, B)
+        tshard = NamedSharding(mesh, P(bax, None))
+        # pack modality inputs into one positional "extras" dict
+        # (pjit rejects kwargs when in_shardings is given)
+        extras = {}
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            extras["extra_embeds"] = SDS(
+                (B, cfg.frontend.n_tokens, cfg.frontend.d_embed), jnp.float32)
+        if cfg.encoder_decoder:
+            extras["encoder_frames"] = SDS(
+                (B, cfg.n_encoder_tokens, cfg.d_model), jnp.float32)
+
+        def fn(params, tokens, extras):
+            return steps.prefill(params, cfg, tokens, **extras)
+
+        extras_sh = {k: NamedSharding(mesh, P(bax, None, None))
+                     for k in extras}
+        fn = _with_act_ctx(fn, act_ctx)
+        # prefill output caches: let GSPMD choose (unconstrained)
+        return dict(fn=fn, args=(params_shape, tokens, extras),
+                    in_shardings=(pshard, tshard, extras_sh),
+                    out_shardings=None,
+                    donate_argnums=())
+
+    # decode
+    S = min(shape.seq_len, cfg.max_seq_len) if cfg.encoder_decoder \
+        else shape.seq_len
+    eff_shape = shape if S == shape.seq_len else InputShape(
+        shape.name, S, shape.global_batch, shape.kind)
+    caches, token, pos = decode_input_specs(
+        cfg, eff_shape,
+        kv_dtype=jnp.int8 if "kv-int8" in variants else None)
+    cshard = cache_shardings(cfg, mesh, caches, shape.global_batch,
+                             long_context=shape.global_batch == 1)
+    bax = batch_spec(mesh, shape.global_batch)
+    tshard = NamedSharding(mesh, P(bax))
+    fn = _with_act_ctx(functools.partial(steps.serve_step, cfg=cfg), act_ctx)
+    return dict(fn=fn, args=(params_shape, caches, token, pos),
+                in_shardings=(pshard, cshard, tshard, repl),
+                out_shardings=(tshard, None, cshard),
+                donate_argnums=(1,))

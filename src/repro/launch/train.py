@@ -1,0 +1,73 @@
+"""Training launcher — end-to-end driver on CPU with a reduced config
+(or the full config via --dry-run, which delegates to dryrun.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b \
+      --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_smoke_config
+    from repro.models import steps as S
+    from repro.models import transformer as T
+    from repro.train.checkpoint import save_checkpoint
+    from repro.train.optimizer import adamw_init
+
+    cfg = get_smoke_config(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_params(cfg, key)
+    opt = adamw_init(params)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n:,}")
+
+    step_fn = jax.jit(lambda p, o, b: S.train_step(p, o, b, cfg=cfg,
+                                                   lr=args.lr, remat=False))
+
+    def make_batch(i):
+        k = jax.random.fold_in(key, i)
+        # synthetic LM data with learnable structure (shifted tokens)
+        base = jax.random.randint(k, (args.batch, args.seq + 1), 0,
+                                  cfg.vocab_size)
+        b = {"tokens": base[:, :-1], "labels": base[:, 1:]}
+        if cfg.frontend is not None and cfg.frontend.kind == "vision":
+            b["extra_embeds"] = jnp.ones(
+                (args.batch, cfg.frontend.n_tokens, cfg.frontend.d_embed),
+                jnp.float32) * 0.02
+        if cfg.encoder_decoder:
+            b["encoder_frames"] = jnp.ones(
+                (args.batch, cfg.n_encoder_tokens, cfg.d_model),
+                jnp.float32) * 0.02
+        return b
+
+    t0 = time.time()
+    for i in range(args.steps):
+        params, opt, loss = step_fn(params, opt, make_batch(i))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(loss):.4f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params)
+        print("saved", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

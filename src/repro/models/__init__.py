@@ -1,0 +1,12 @@
+from repro.models import (  # noqa: F401
+    attention,
+    gla,
+    layers,
+    mamba2,
+    moe,
+    params,
+    rwkv6,
+    sharding,
+    steps,
+    transformer,
+)

@@ -1,0 +1,355 @@
+"""Attention variants: GQA (full / sliding-window / cross) and DeepSeek MLA.
+
+Two execution modes:
+  * sequence mode (train / prefill): full (B, T) -> (B, T) with causal mask;
+  * decode mode: one new token per sequence against a contiguous KV cache
+    (B, S_max, H_kv, D) written at position ``pos``.
+
+The paged-KV decode path used by the serving engine lives in
+``repro.kernels`` (paged_attention) — the contiguous path here is what the
+distributed dry-run lowers.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import _dense_init, apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, nq * hd)),
+        "wk": _dense_init(ks[1], (d, nkv * hd)),
+        "wv": _dense_init(ks[2], (d, nkv * hd)),
+        "wo": _dense_init(ks[3], (nq * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((nkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((nkv * hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, T, cfg.n_heads, hd)
+    k = k.reshape(B, T, cfg.n_kv_heads, hd)
+    v = v.reshape(B, T, cfg.n_kv_heads, hd)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,T,Hq,D) k,v: (B,S,Hkv,D); mask: broadcast (B,1,T,S) bool.
+
+    K/V are consumed in their storage dtype with fp32 ACCUMULATION
+    (preferred_element_type) — materializing fp32 copies of the KV cache
+    would dominate decode HBM traffic (§Perf: observed 24 GB/step/device
+    on mistral-nemo decode_32k before this change)."""
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, group, D)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask[:, :, None] if mask.ndim == 4 else mask,
+                           logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, T, Hq, D).astype(q.dtype)
+
+
+# Sequence lengths above this use the q-chunked path (peak attention
+# memory (B, H, CHUNK_Q, S) instead of (B, H, T, S) — the pure-jnp
+# analogue of flash attention for long-prefill lowering).
+CHUNK_THRESHOLD = 4096
+CHUNK_Q = 1024
+
+
+def _sdpa_chunked(q, k, v, scale, window: Optional[int] = None,
+                  chunk_q: int = CHUNK_Q):
+    """Causal attention, scanned over query chunks.  q: (B,T,Hq,D),
+    k/v: (B,S,Hkv,D) with S == T (self-attention sequence mode).
+
+    §Perf note (refuted hypothesis, kept for the record): statically
+    slicing K/V per chunk to skip fully-masked keys should halve the
+    attention flops, but K/V are SHARDED over `model` on their sequence
+    dim here — slicing a sharded dim forces GSPMD into full-shape
+    resharding (measured: zero flops change, +4x temp memory).  The real
+    tile-skip belongs in the Pallas flash kernel (kernels/flash_attention)
+    where the grid owns the layout.  This path keeps the masked full-S
+    compute with fp32-accumulation einsums (bf16 operand I/O).
+    """
+    B, T, Hq, D = q.shape
+    S = k.shape[1]
+    Hkv = k.shape[2]
+    group = Hq // Hkv
+    pad = (-T) % chunk_q
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // chunk_q
+    qs = jnp.moveaxis(q.reshape(B, nq, chunk_q, Hq, D), 1, 0)
+    kj = jnp.arange(S)[None, :]
+
+    def body(_, xs):
+        ci, qc = xs                                    # qc: (B,cq,Hq,D)
+        qg = qc.reshape(B, chunk_q, Hkv, group, D)
+        logits = jnp.einsum("bthgd,bshd->bhgts", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        qi = ci * chunk_q + jnp.arange(chunk_q)[:, None]
+        m = kj <= qi                                   # (cq, S)
+        if window is not None:
+            m = m & (kj > qi - window)
+        logits = jnp.where(m[None, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgts,bshd->bthgd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+        return None, out.reshape(B, chunk_q, Hq, D).astype(q.dtype)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * chunk_q, Hq, D)
+    return out[:, :T]
+
+
+def causal_mask(T: int, S: int, window: Optional[int] = None,
+                offset: int = 0) -> jnp.ndarray:
+    """(1, 1, T, S) bool; query i attends key j iff j <= i+offset and within
+    window (if set)."""
+    qi = jnp.arange(T)[:, None] + offset
+    kj = jnp.arange(S)[None, :]
+    m = kj <= qi
+    if window is not None:
+        m = m & (kj > qi - window)
+    return m[None, None]
+
+
+def gqa_forward(p, x, cfg: ModelConfig, positions, window: Optional[int] = None):
+    """Sequence mode (train/prefill).  Returns (out, (k, v)) for cache init."""
+    B, T, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    from repro.models.sharding import constrain_kv_seq
+    k = constrain_kv_seq(k)
+    v = constrain_kv_seq(v)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    if T > CHUNK_THRESHOLD:
+        out = _sdpa_chunked(q, k, v, scale, window=window)
+    else:
+        mask = causal_mask(T, T, window)
+        out = _sdpa(q, k, v, mask, scale)
+    out = out.reshape(B, T, -1) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+# int8 KV-cache quantization scale (beyond-paper §Perf optimization for
+# memory-bound decode: halves the dominant HBM term vs bf16).  A fixed
+# symmetric scale keeps the dry-run structural; a deployment would carry
+# per-head running scales alongside the pool.
+KV_QSCALE = 0.05
+
+
+def gqa_decode(p, x, cfg: ModelConfig, cache_k, cache_v, pos,
+               window: Optional[int] = None, ring: bool = False):
+    """Decode one token.  x: (B, 1, d); cache_k/v: (B, S, Hkv, D);
+    pos: scalar int32 — number of tokens already in the cache.
+
+    When ``ring`` is True the cache is a ring buffer of size W (sliding
+    window): the new token is written at pos % W and all S slots are valid
+    once pos >= W.  int8 caches are quantized on write / dequantized on
+    read.  Returns (out, cache_k, cache_v).
+    """
+    B, S, Hkv, D = cache_k.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, jnp.full((B, 1), pos), cfg.rope_theta)
+    k = apply_rope(k, jnp.full((B, 1), pos), cfg.rope_theta)
+    quant = cache_k.dtype == jnp.int8
+    if quant:
+        qz = lambda a: jnp.clip(jnp.round(a.astype(jnp.float32) / KV_QSCALE),
+                                -127, 127).astype(jnp.int8)
+        k_w, v_w = qz(k), qz(v)
+    else:
+        k_w, v_w = k, v
+    slot = pos % S if ring else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_w, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_w, (0, slot, 0, 0))
+    if quant:
+        k_r = cache_k.astype(x.dtype) * KV_QSCALE
+        v_r = cache_v.astype(x.dtype) * KV_QSCALE
+    else:
+        k_r, v_r = cache_k, cache_v
+    kj = jnp.arange(S)
+    if ring:
+        valid = kj < jnp.minimum(pos + 1, S)          # ring: all written slots
+    else:
+        valid = kj <= pos
+        if window is not None:
+            valid = valid & (kj > pos - window)
+    mask = valid[None, None, None, :]                  # (1,1,1,S) -> T=1
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    out = _sdpa(q, k_r, v_r, mask, scale)
+    out = out.reshape(B, 1, -1) @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+def init_cross_attention(key, cfg: ModelConfig):
+    """Whisper-style cross attention (no RoPE, kv from encoder)."""
+    return init_gqa(key, cfg)
+
+
+def cross_attention(p, x, enc_kv, cfg: ModelConfig):
+    """x: (B, T, d); enc_kv: (k, v) each (B, S_enc, Hkv, D)."""
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, T, cfg.n_heads, hd)
+    k, v = enc_kv
+    scale = 1.0 / math.sqrt(hd)
+    out = _sdpa(q, k, v, None, scale)
+    return out.reshape(B, T, -1) @ p["wo"].astype(dt)
+
+
+def project_cross_kv(p, enc_out, cfg: ModelConfig):
+    B, S, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    dt = enc_out.dtype
+    k = (enc_out @ p["wk"].astype(dt)).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(B, S, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek-V2 MLA (Multi-head Latent Attention)
+# ---------------------------------------------------------------------------
+
+class MLACache(NamedTuple):
+    latent: jnp.ndarray   # (B, S, kv_lora_rank)
+    k_rope: jnp.ndarray   # (B, S, rope_head_dim)
+
+
+def init_mla(key, cfg: ModelConfig):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qd = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": _dense_init(ks[0], (d, m.q_lora_rank)),
+        "w_uq": _dense_init(ks[1], (m.q_lora_rank, H * qd)),
+        "w_dkv": _dense_init(ks[2], (d, m.kv_lora_rank)),
+        "w_krope": _dense_init(ks[3], (d, m.rope_head_dim)),
+        "w_uk": _dense_init(ks[4], (m.kv_lora_rank, H * m.nope_head_dim)),
+        "w_uv": _dense_init(ks[5], (m.kv_lora_rank, H * m.v_head_dim)),
+        "wo": _dense_init(ks[6], (H * m.v_head_dim, d)),
+        "q_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+    }
+
+
+def _rms(x, scale, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+            * scale).astype(x.dtype)
+
+
+def mla_forward(p, x, cfg: ModelConfig, positions):
+    """Sequence mode.  Returns (out, MLACache)."""
+    m: MLAConfig = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    dt = x.dtype
+    cq = _rms(x @ p["w_dq"].astype(dt), p["q_norm"])
+    q = (cq @ p["w_uq"].astype(dt)).reshape(B, T, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = _rms(x @ p["w_dkv"].astype(dt), p["kv_norm"])          # (B,T,r)
+    k_rope = apply_rope(x @ p["w_krope"].astype(dt), positions, cfg.rope_theta)
+    k_nope = (latent @ p["w_uk"].astype(dt)).reshape(B, T, H, m.nope_head_dim)
+    v = (latent @ p["w_uv"].astype(dt)).reshape(B, T, H, m.v_head_dim)
+    from repro.models.sharding import constrain_kv_seq
+    k_nope = constrain_kv_seq(k_nope)
+    v = constrain_kv_seq(v)
+
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    # fold the rope parts into standard per-head attention inputs so the
+    # shared (chunked) SDPA path applies
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)              # (B,T,H,dn+dr)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, T, H, m.rope_head_dim))], axis=-1)
+    if m.v_head_dim < q_full.shape[-1]:
+        v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                            (0, q_full.shape[-1] - m.v_head_dim)))
+    else:
+        v_pad = v
+    if T > CHUNK_THRESHOLD:
+        out = _sdpa_chunked(q_full, k_full, v_pad, scale)
+    else:
+        out = _sdpa(q_full, k_full, v_pad, causal_mask(T, T), scale)
+    out = out[..., :m.v_head_dim]
+    out = out.reshape(B, T, -1) @ p["wo"].astype(dt)
+    return out, MLACache(latent=latent, k_rope=k_rope)
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache: MLACache, pos):
+    """Absorbed-weight decode: scores/value read directly on the latent cache
+    (the 18x-smaller cache that makes FastSwitch blocks tiny — see DESIGN.md).
+    x: (B, 1, d)."""
+    m: MLAConfig = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    dt = x.dtype
+    cq = _rms(x @ p["w_dq"].astype(dt), p["q_norm"])
+    q = (cq @ p["w_uq"].astype(dt)).reshape(B, 1, H, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    q_rope = apply_rope(q_rope, jnp.full((B, 1), pos), cfg.rope_theta)
+
+    latent_t = _rms(x @ p["w_dkv"].astype(dt), p["kv_norm"])        # (B,1,r)
+    k_rope_t = apply_rope(x @ p["w_krope"].astype(dt),
+                          jnp.full((B, 1), pos), cfg.rope_theta)
+    latent = jax.lax.dynamic_update_slice(cache.latent, latent_t, (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache.k_rope, k_rope_t, (0, pos, 0))
+
+    # absorb w_uk into q:  q_abs (B,H,r)
+    w_uk = p["w_uk"].astype(dt).reshape(m.kv_lora_rank, H, m.nope_head_dim)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk)
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    # latent cache consumed in storage dtype, fp32 accumulation (§Perf)
+    logits = (jnp.einsum("bhr,bsr->bhs", q_abs, latent,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], k_rope,
+                           preferred_element_type=jnp.float32)) * scale
+    S = latent.shape[1]
+    valid = (jnp.arange(S) <= pos)[None, None, :]
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", probs.astype(latent.dtype), latent,
+                     preferred_element_type=jnp.float32)  # (B,H,r)
+    w_uv = p["w_uv"].astype(dt).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bhr,rhd->bhd", ctx.astype(dt), w_uv)
+    out = out.reshape(B, 1, -1) @ p["wo"].astype(dt)
+    return out, MLACache(latent=latent, k_rope=k_rope)

@@ -1,0 +1,161 @@
+"""Chunked gated linear attention — the shared recurrence engine for RWKV6
+(per-channel data-dependent decay) and Mamba2/SSD (per-head scalar decay).
+
+Recurrence (per batch, head):
+    S_t = diag(w_t) @ S_{t-1} + k_t v_t^T          S: (N, P)
+    mamba read:  y_t = q_t @ S_t                    (current token decayed-in)
+    rwkv  read:  y_t = q_t @ (S_{t-1} + diag(u) k_t v_t^T)
+
+Both are expressed through one chunked pass.  With L = inclusive cumsum of
+log w along time, the contribution of j<=i is  (q_i * exp(L_i - L_j)) . k_j:
+  * mamba mode: j <= i, diagonal coefficient exp(0)=1
+  * rwkv  mode: strictly j < i with weight exp(L_{i-1}-L_j)
+    = exp(L_i - L_j) * exp(-logw_i)  (absorbed into q), plus the u-bonus
+    diagonal term (q_i * u) . k_i.
+
+All exponents are <= 0 within a chunk (log w <= 0), so the chunked form is
+numerically stable without sub-chunking.
+
+Shapes: q, k: (B, H, T, N); v: (B, H, T, P); logw: (B, H, T, N) (broadcast
+from (B, H, T, 1) for scalar decay).  Returns y: (B, H, T, P) and the final
+state (B, H, N, P).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gla_scan_ref(q, k, v, logw, u: Optional[jnp.ndarray] = None,
+                 mode: str = "mamba", initial_state=None):
+    """O(T) sequential oracle (per-token scan).  Used by tests and decode."""
+    B, H, T, N = q.shape
+    P = v.shape[-1]
+    w = jnp.exp(logw.astype(jnp.float32))
+    q32, k32, v32 = (x.astype(jnp.float32) for x in (q, k, v))
+    S0 = (jnp.zeros((B, H, N, P), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(S, inp):
+        qt, kt, vt, wt = inp                      # (B,H,N),(B,H,N),(B,H,P),(B,H,N)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,N,P)
+        if mode == "rwkv":
+            read = S + u[None, :, :, None] * kv if u is not None else S + kv
+            y = jnp.einsum("bhn,bhnp->bhp", qt, read)
+            S = wt[..., None] * S + kv
+        else:  # mamba
+            S = wt[..., None] * S + kv
+            y = jnp.einsum("bhn,bhnp->bhp", qt, S)
+        return S, y
+
+    xs = (jnp.moveaxis(q32, 2, 0), jnp.moveaxis(k32, 2, 0),
+          jnp.moveaxis(v32, 2, 0), jnp.moveaxis(w, 2, 0))
+    S, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 2).astype(q.dtype), S
+
+
+@partial(jax.jit, static_argnames=("mode", "chunk", "scalar_decay"))
+def gla_chunked(q, k, v, logw, u: Optional[jnp.ndarray] = None,
+                mode: str = "mamba", chunk: int = 64,
+                initial_state=None,
+                scalar_decay: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunk-parallel gated linear attention.
+
+    Scans over T//chunk chunks; inside a chunk everything is batched einsum.
+    Per-channel decay uses an (i, j, n) materialization per chunk — exact and
+    stable; the scalar-decay (mamba) path uses pure matmuls.
+    """
+    B, H, T, N = q.shape
+    P = v.shape[-1]
+    f32 = jnp.float32
+    logw = jnp.broadcast_to(logw.astype(f32), (B, H, T, N))
+    T_orig = T
+    pad = (-T) % chunk
+    if pad:
+        # zero-pad the tail: k=0 contributes nothing to the state and
+        # logw=0 (decay 1) leaves the carried state unchanged.
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v, logw = zpad(q), zpad(k), zpad(v), zpad(logw)
+        T = T + pad
+    C, nc = chunk, T // chunk
+    qc = q.astype(f32).reshape(B, H, nc, C, N)
+    kc = k.astype(f32).reshape(B, H, nc, C, N)
+    vc = v.astype(f32).reshape(B, H, nc, C, P)
+    lw = logw.reshape(B, H, nc, C, N)
+    L = jnp.cumsum(lw, axis=3)                       # inclusive, (B,H,nc,C,N)
+
+    if mode == "rwkv":
+        q_eff = qc * jnp.exp(-lw)                    # shift read to S_{t-1}
+        strict = True
+    else:
+        q_eff = qc
+        strict = False
+
+    # Intra-chunk term.
+    i_idx = jnp.arange(C)[:, None]
+    j_idx = jnp.arange(C)[None, :]
+    mask = (j_idx < i_idx) if strict else (j_idx <= i_idx)
+
+    def chunk_body(S, xs):
+        q_e, k_e, v_e, L_e, lw_e = xs                # (B,H,C,*)
+        # inter-chunk: read carried state with decay exp(L_i)
+        y_inter = jnp.einsum("bhcn,bhnp->bhcp", q_e * jnp.exp(L_e), S)
+        # intra-chunk
+        # NOTE: clamp the decay exponent at 0 — for masked (j > i) entries
+        # L_i - L_j > 0 can overflow exp; the overflowed values are masked
+        # in the forward pass but poison the backward (0 * inf = NaN).
+        # Valid (j <= i) entries always have exponent <= 0, so clamping is
+        # exact.
+        if scalar_decay:
+            Ls = L_e[..., 0]                         # (B,H,C)
+            A = jnp.einsum("bhin,bhjn->bhij", q_e, k_e)
+            A = A * jnp.exp(jnp.minimum(
+                Ls[..., :, None] - Ls[..., None, :], 0.0))
+        else:
+            # per-channel decay: (B,H,C,C,N) materialization, exact
+            D = jnp.exp(jnp.minimum(
+                L_e[..., :, None, :] - L_e[..., None, :, :], 0.0))  # i,j,n
+            A = jnp.einsum("bhin,bhijn,bhjn->bhij", q_e, D, k_e)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhij,bhjp->bhip", A, v_e)
+        y = y_inter + y_intra
+        # state update: S' = exp(L_C) * S + sum_j exp(L_C - L_j) k_j v_j
+        L_tot = L_e[..., -1, :]                      # (B,H,N)
+        k_scaled = k_e * jnp.exp(L_tot[..., None, :] - L_e)
+        S = jnp.exp(L_tot)[..., :, None] * S + jnp.einsum(
+            "bhcn,bhcp->bhnp", k_scaled, v_e)
+        return S, y
+
+    # NOTE: the rwkv u-bonus diagonal is handled outside the scan body
+    # (vectorized over T below).
+    S0 = (jnp.zeros((B, H, N, P), f32) if initial_state is None
+          else initial_state.astype(f32))
+    xs = tuple(jnp.moveaxis(a, 2, 0) for a in (q_eff, kc, vc, L, lw))
+    S_final, ys = jax.lax.scan(chunk_body, S0, xs)
+    y = jnp.moveaxis(ys, 0, 2).reshape(B, H, T, P)
+
+    if mode == "rwkv" and u is not None:
+        diag = jnp.einsum("bhtn,hn,bhtn->bht",
+                          q.astype(f32), u.astype(f32), k.astype(f32))
+        y = y + (diag[..., None] * v.astype(f32)).astype(y.dtype)
+
+    return y[:, :, :T_orig].astype(q.dtype), S_final
+
+
+def gla_decode_step(q, k, v, logw, S, u=None, mode: str = "mamba"):
+    """Single-token decode: q,k: (B,H,N); v: (B,H,P); logw: (B,H,N) or (B,H,1).
+    Returns (y: (B,H,P), S')."""
+    f32 = jnp.float32
+    w = jnp.exp(jnp.broadcast_to(logw.astype(f32), q.shape))
+    kv = k.astype(f32)[..., :, None] * v.astype(f32)[..., None, :]
+    if mode == "rwkv":
+        read = S + (u[None, :, :, None] * kv if u is not None else kv)
+        y = jnp.einsum("bhn,bhnp->bhp", q.astype(f32), read)
+        S = w[..., None] * S + kv
+    else:
+        S = w[..., None] * S + kv
+        y = jnp.einsum("bhn,bhnp->bhp", q.astype(f32), S)
+    return y.astype(q.dtype), S

@@ -1,0 +1,141 @@
+"""Mamba2 (SSD) block for the Zamba2 hybrid backbone.
+
+Structure (arXiv:2405.21060 / zamba2 arXiv:2411.15242):
+  in_proj -> (z gate, x, B, C, dt); causal conv1d over [x, B, C];
+  SSD recurrence per head with scalar decay  a_t = exp(A * softplus(dt + bias))
+  (A < 0 learned per head), k=B_t (N), v=x_t (P=head_dim), read q=C_t;
+  y = y + D * x (skip), gated by silu(z), RMS-norm, out_proj.
+
+Sequence mode uses the chunked GLA engine (scalar-decay matmul path);
+decode is the O(1) state update.  State = (conv window, S) per layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.gla import gla_chunked, gla_decode_step
+from repro.models.layers import _dense_init, rmsnorm
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray    # (B, K-1, conv_channels) trailing inputs
+    S: jnp.ndarray       # (B, H, N, P) fp32
+
+
+def _dims(cfg: ModelConfig):
+    s: SSMConfig = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = s.n_heads or d_inner // s.head_dim
+    conv_channels = d_inner + 2 * s.state_dim * 1   # x + B + C (single group)
+    return s, d_inner, n_heads, conv_channels
+
+
+def init_mamba2_block(key, cfg: ModelConfig):
+    s, d_inner, H, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * s.state_dim + H     # z, x, B, C, dt
+    p = {
+        "w_in": _dense_init(ks[0], (d, proj_out)),
+        "conv_w": _dense_init(ks[1], (s.conv_kernel, conv_ch), scale=0.2),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),  # A = -exp(A_log) < 0
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), jnp.float32),
+        "w_out": _dense_init(ks[2], (d_inner, d)),
+    }
+    return p
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    s, d_inner, H, _ = _dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * s.state_dim]
+    dt = proj[..., -H:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev):
+    """xbc: (B, T, C); prev: (B, K-1, C) trailing context. Returns (out, new_prev)."""
+    K = conv_w.shape[0]
+    x_ext = jnp.concatenate([prev.astype(xbc.dtype), xbc], axis=1)  # (B, T+K-1, C)
+    out = jnp.zeros_like(xbc)
+    for i in range(K):
+        out = out + x_ext[:, i:i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+    out = jax.nn.silu(out + conv_b.astype(xbc.dtype))
+    new_prev = x_ext[:, -(K - 1):] if K > 1 else prev
+    return out, new_prev
+
+
+def _ssd_inputs(p, xbc, dt_raw, cfg: ModelConfig):
+    """Build (q=C, k=B, v=x, logw) for the GLA engine."""
+    s, d_inner, H, _ = _dims(cfg)
+    B_, T = xbc.shape[0], xbc.shape[1]
+    P = s.head_dim
+    N = s.state_dim
+    xpart = xbc[..., :d_inner].reshape(B_, T, H, P)
+    Bpart = xbc[..., d_inner:d_inner + N]                    # (B,T,N) shared
+    Cpart = xbc[..., d_inner + N:]                           # (B,T,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    logw = (dt * A)[..., None]                                # (B,T,H,1) <= 0
+    # v scaled by dt (discretized input), k = B, q = C shared across heads
+    v = (xpart.astype(jnp.float32) * dt[..., None]).astype(xbc.dtype)
+    q = jnp.broadcast_to(Cpart[:, :, None, :], (B_, T, H, N))
+    k = jnp.broadcast_to(Bpart[:, :, None, :], (B_, T, H, N))
+    # to (B,H,T,*)
+    tr = lambda a: a.transpose(0, 2, 1, 3)
+    return tr(q), tr(k), tr(v), tr(logw), xpart
+
+
+def mamba2_block_forward(p, x, cfg: ModelConfig, state: MambaState
+                         ) -> Tuple[jnp.ndarray, MambaState]:
+    s, d_inner, H, _ = _dims(cfg)
+    B_, T, d = x.shape
+    dt_ = x.dtype
+    proj = x @ p["w_in"].astype(dt_)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    q, k, v, logw, xpart = _ssd_inputs(p, xbc, dt_raw, cfg)
+    y, S = gla_chunked(q, k, v, logw, mode="mamba",
+                       chunk=min(s.chunk_size, T), initial_state=state.S,
+                       scalar_decay=True)
+    y = y.transpose(0, 2, 1, 3)                              # (B,T,H,P)
+    y = y + xpart * p["D_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B_, T, d_inner) * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["norm_scale"]}, y, cfg.norm_eps)
+    out = y @ p["w_out"].astype(dt_)
+    return out, MambaState(conv=new_conv, S=S)
+
+
+def mamba2_block_decode(p, x, cfg: ModelConfig, state: MambaState
+                        ) -> Tuple[jnp.ndarray, MambaState]:
+    s, d_inner, H, _ = _dims(cfg)
+    B_, _, d = x.shape
+    dt_ = x.dtype
+    proj = x @ p["w_in"].astype(dt_)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], state.conv)
+    q, k, v, logw, xpart = _ssd_inputs(p, xbc, dt_raw, cfg)
+    y, S = gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0], logw[:, :, 0],
+                           state.S, mode="mamba")
+    y = y[:, None, :, :] if y.ndim == 3 else y               # (B,1,H,P)
+    y = y.reshape(B_, 1, H, s.head_dim) + xpart * p["D_skip"].astype(dt_)[None, None, :, None]
+    y = y.reshape(B_, 1, d_inner) * jax.nn.silu(z)
+    y = rmsnorm({"scale": p["norm_scale"]}, y, cfg.norm_eps)
+    out = y @ p["w_out"].astype(dt_)
+    return out, MambaState(conv=new_conv, S=S)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    s, d_inner, H, conv_ch = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, s.conv_kernel - 1, conv_ch), dtype),
+        S=jnp.zeros((batch, H, s.state_dim, s.head_dim), jnp.float32),
+    )

@@ -1,0 +1,99 @@
+"""Mixture-of-Experts FFN with top-k routing (OLMoE / DeepSeek-V2 style).
+
+Dispatch is gather/scatter based (no (T, E, C) one-hot einsum): token ranks
+within their expert come from an exclusive cumsum over the one-hot routing
+matrix, tokens beyond expert capacity are dropped (scatter mode='drop'),
+and expert outputs are scatter-added back with their gate weights.  This
+keeps peak memory at (E, C, D) which shards over the `model` axis
+(expert parallelism) under GSPMD.
+
+Returns an auxiliary load-balance loss (Switch-style) for training.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import _dense_init
+
+
+def init_moe(key, cfg: ModelConfig):
+    m: MoEConfig = cfg.moe
+    d, f = cfg.d_model, m.d_expert_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, m.n_experts), scale=0.02),
+        "w_gate": _dense_init(ks[1], (m.n_experts, d, f)),
+        "w_up": _dense_init(ks[2], (m.n_experts, d, f)),
+        "w_down": _dense_init(ks[3], (m.n_experts, f, d)),
+    }
+    if m.n_shared_experts:
+        from repro.models.layers import init_swiglu
+        p["shared"] = init_swiglu(ks[4], d, f * m.n_shared_experts)
+    return p
+
+
+def moe_forward(p, x, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, d) -> (out, aux_loss)."""
+    m: MoEConfig = cfg.moe
+    B, T, d = x.shape
+    dt = x.dtype
+    xf = x.reshape(B * T, d)
+    n_tok = B * T
+    E, K = m.n_experts, m.top_k
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (N, E)
+    gate_vals, eids = jax.lax.top_k(probs, K)                    # (N, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # ---- load-balance aux loss (Switch): E * sum_e f_e * p_e -------------
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    one_hot_top1 = jax.nn.one_hot(eids[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux_loss = E * jnp.sum(me * ce)
+
+    # ---- capacity + ranks -------------------------------------------------
+    capacity = int(math.ceil(n_tok * K / E * m.capacity_factor))
+    capacity = max(capacity, 4)
+    flat_eids = eids.reshape(-1)                                  # (N*K,)
+    flat_gates = gate_vals.reshape(-1)
+    onehot = jax.nn.one_hot(flat_eids, E, dtype=jnp.int32)        # (N*K, E)
+    ranks_all = jnp.cumsum(onehot, axis=0) - onehot               # exclusive
+    ranks = jnp.take_along_axis(ranks_all, flat_eids[:, None], 1)[:, 0]
+    overflow = ranks >= capacity
+    slot = jnp.where(overflow, capacity, ranks)                   # drop slot
+
+    # ---- gather tokens into (E, C) buffers --------------------------------
+    tok_idx = jnp.arange(n_tok * K, dtype=jnp.int32) // K         # source token
+    buf_tok = jnp.full((E, capacity), n_tok, jnp.int32)           # sentinel
+    buf_tok = buf_tok.at[flat_eids, slot].set(tok_idx, mode="drop")
+    buf_gate = jnp.zeros((E, capacity), jnp.float32)
+    buf_gate = buf_gate.at[flat_eids, slot].set(flat_gates, mode="drop")
+
+    x_pad = jnp.concatenate([xf, jnp.zeros((1, d), dt)], axis=0)
+    xe = x_pad[buf_tok]                                           # (E, C, d)
+    from repro.models.sharding import constrain_experts
+    xe = constrain_experts(xe)                                    # EP over model
+
+    # ---- expert compute (per-expert SwiGLU) --------------------------------
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", xe, p["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))    # (E, C, d)
+
+    # ---- combine: scatter-add back ----------------------------------------
+    ye_w = ye * buf_gate[..., None].astype(dt)
+    out = jnp.zeros((n_tok + 1, d), dt)
+    out = out.at[buf_tok.reshape(-1)].add(ye_w.reshape(-1, d), mode="drop")
+    out = out[:n_tok]
+
+    if m.n_shared_experts:
+        from repro.models.layers import swiglu
+        out = out + swiglu(p["shared"], xf)
+
+    return out.reshape(B, T, d), aux_loss

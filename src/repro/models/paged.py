@@ -1,0 +1,78 @@
+"""Paged-KV decode step for the serving engine (real-model mode).
+
+Runs a uniform-pattern GQA transformer one token per sequence against the
+paged GPU pool via block tables, using the Pallas paged-attention kernel.
+The engine pads the batch to a fixed size; padding rows point their block
+table at a reserved trash block and are masked by the caller.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    return (cfg.layer_pattern == "uniform" and cfg.mla is None
+            and not cfg.encoder_decoder)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def paged_decode_step(params, pool, block_tables, context_lens, tokens,
+                      *, cfg: ModelConfig):
+    """pool: (L, 2, nb, bs, Hkv, D); block_tables: (B, n_pages) int32;
+    context_lens: (B,) tokens already cached; tokens: (B,) int32 current
+    input tokens.  Returns (next_tokens, logits, new_pool)."""
+    assert supports_paged(cfg), cfg.name
+    B = tokens.shape[0]
+    bs = pool.shape[3]
+    x = L.embed(params["embed"], tokens[:, None])          # (B, 1, d)
+    positions = context_lens[:, None]                      # rope positions
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    use_moe = cfg.moe is not None
+    barange = jnp.arange(B)
+
+    def body(x, xs):
+        lp, pool_l = xs                                    # pool_l: (2,nb,bs,H,D)
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn._project_qkv(lp["attn"], h, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        blk = block_tables[barange, context_lens // bs]
+        off = context_lens % bs
+        pool_l = pool_l.at[0, blk, off].set(k[:, 0].astype(pool_l.dtype))
+        pool_l = pool_l.at[1, blk, off].set(v[:, 0].astype(pool_l.dtype))
+        a = ops.paged_attention(q[:, 0], pool_l[0], pool_l[1],
+                                block_tables, context_lens + 1, scale)
+        x = x + (a.reshape(B, 1, -1) @ lp["attn"]["wo"].astype(x.dtype))
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if use_moe:
+            f, _ = moe_mod.moe_forward(lp["ffn"], h, cfg)
+        else:
+            f = L.swiglu(lp["ffn"], h)
+        return x + f, pool_l
+
+    x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = L.unembed(head, x[:, 0])
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, logits, new_pool
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def prefill_kv(params, tokens, *, cfg: ModelConfig):
+    """Full-context prefill returning per-layer K/V for pool insertion.
+    tokens: (1, T).  Returns (last_logits (V,), k, v: (L, T, Hkv, D))."""
+    from repro.models import transformer as T
+    logits, caches, _ = T.forward_seq(params, cfg, tokens, remat=False)
+    k, v = caches                                          # (L, 1, T, H, D)
+    return logits[0, -1], k[:, 0], v[:, 0]

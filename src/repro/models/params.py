@@ -1,0 +1,35 @@
+"""Parameter counting via jax.eval_shape (exact, zero allocation)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@functools.lru_cache(maxsize=64)
+def _count_cached(cfg: ModelConfig) -> int:
+    from repro.models.transformer import init_params
+    import math
+    shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(shapes))
+
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Exact param count from eval_shape.  ``active_only`` subtracts the
+    non-activated routed-expert weights (MoE): active = total
+    - (E - top_k)/E * routed_expert_params."""
+    total = _count_cached(cfg)
+    if not active_only or cfg.moe is None:
+        return total
+    m = cfg.moe
+    # routed expert params per layer: 3 matrices (gate/up/down) of d*dff
+    per_layer = 3 * cfg.d_model * m.d_expert_ff * m.n_experts
+    n_moe_layers = cfg.n_layers - (1 if m.layer_pattern == "skip_first" else 0)
+    routed_total = per_layer * n_moe_layers
+    inactive_frac = (m.n_experts - m.top_k) / m.n_experts
+    return total - int(routed_total * inactive_frac)

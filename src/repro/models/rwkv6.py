@@ -1,0 +1,173 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Faithful structure (arXiv:2404.05892):
+  * token-shift with data-dependent linear interpolation (ddlerp, LoRA-based)
+    for the r/k/v/w/g branches;
+  * per-channel decay  w_t = exp(-exp(w0 + lora_w(x_w)))  in (0, 1);
+  * recurrence  S_t = diag(w_t) S_{t-1} + k_t^T v_t,
+    read  o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)  (u = per-channel bonus);
+  * group-norm over heads, silu(g) gate, output projection;
+  * channel-mix: r = sigmoid(W_r x_r), k = relu(W_k x_k)^2, out = r * W_v k.
+
+Sequence mode uses the chunked GLA engine; decode mode is the O(1) state
+update.  State = (token_shift_tm, token_shift_cm, S) per layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RWKVConfig
+from repro.models.gla import gla_chunked, gla_decode_step
+from repro.models.layers import _dense_init
+
+
+class RWKVState(NamedTuple):
+    shift_tm: jnp.ndarray   # (B, d) last token seen by time-mix
+    shift_cm: jnp.ndarray   # (B, d) last token seen by channel-mix
+    S: jnp.ndarray          # (B, H, N, N) recurrence state (fp32)
+
+
+def init_rwkv_block(key, cfg: ModelConfig):
+    r: RWKVConfig = cfg.rwkv
+    d = cfg.d_model
+    H = cfg.n_heads
+    N = r.head_dim
+    assert H * N == d, f"rwkv requires n_heads*head_dim == d_model ({H}*{N} != {d})"
+    ks = jax.random.split(key, 16)
+    # decay init: spread across channels like the reference impl
+    decay_speed = -6.0 + 5.0 * (jnp.arange(d) / max(d - 1, 1)) ** 0.9
+    p = {
+        # ddlerp base mixes (mu) for x,r,k,v,w,g and LoRA for the 5 branches
+        "mu_base": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,w,g
+        "lora_A": _dense_init(ks[0], (d, 5 * r.decay_lora_rank), scale=0.01),
+        "lora_B": _dense_init(ks[1], (5, r.decay_lora_rank, d), scale=0.01),
+        "w_r": _dense_init(ks[2], (d, d)),
+        "w_k": _dense_init(ks[3], (d, d)),
+        "w_v": _dense_init(ks[4], (d, d)),
+        "w_g": _dense_init(ks[5], (d, d)),
+        "w_o": _dense_init(ks[6], (d, d)),
+        "decay_base": decay_speed,                       # w0, (d,)
+        "decay_lora_A": _dense_init(ks[7], (d, r.decay_lora_rank), scale=0.01),
+        "decay_lora_B": _dense_init(ks[8], (r.decay_lora_rank, d), scale=0.01),
+        "u_bonus": 0.5 * jnp.ones((H, N), jnp.float32),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "gn_bias": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "cm_mu": 0.5 * jnp.ones((2, d), jnp.float32),    # r, k
+        "cm_wr": _dense_init(ks[9], (d, d)),
+        "cm_wk": _dense_init(ks[10], (d, cfg.d_ff)),
+        "cm_wv": _dense_init(ks[11], (cfg.d_ff, d)),
+    }
+    return p
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent lerp between current and shifted token for 5 branches.
+    x, x_prev: (B, T, d).  Returns tuple of 5 mixed tensors."""
+    dt = x.dtype
+    delta = x_prev - x
+    base = x + delta * p["mu_base"][:, None, None, :].astype(dt)   # (5,B,T,d)
+    lora = jnp.tanh(x @ p["lora_A"].astype(dt))                    # (B,T,5R)
+    R = p["lora_B"].shape[1]
+    lora = lora.reshape(*lora.shape[:-1], 5, R)
+    adj = jnp.einsum("btfr,frd->fbtd", lora, p["lora_B"].astype(dt))
+    return base + adj * delta[None]
+
+
+def _group_norm(x, scale, bias, n_heads, eps=1e-5):
+    """x: (B, T, d) grouped by head."""
+    B, T, d = x.shape
+    xg = x.reshape(B, T, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xg, -1, keepdims=True)
+    var = jnp.var(xg, -1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, T, d) * scale + bias).astype(x.dtype)
+
+
+def _time_mix_qkvwg(p, x, x_prev, cfg: ModelConfig):
+    r: RWKVConfig = cfg.rwkv
+    B, T, d = x.shape
+    H, N = cfg.n_heads, r.head_dim
+    dt = x.dtype
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    rr = (xr @ p["w_r"].astype(dt)).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    kk = (xk @ p["w_k"].astype(dt)).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    vv = (xv @ p["w_v"].astype(dt)).reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["w_g"].astype(dt))                      # (B,T,d)
+    # data-dependent per-channel decay, logw <= 0
+    dlo = jnp.tanh(xw @ p["decay_lora_A"].astype(dt)) @ p["decay_lora_B"].astype(dt)
+    logw = -jnp.exp(p["decay_base"].astype(jnp.float32)
+                    + dlo.astype(jnp.float32))                     # (B,T,d)
+    logw = logw.reshape(B, T, H, N).transpose(0, 2, 1, 3)
+    return rr, kk, vv, logw, g
+
+
+def rwkv_block_forward(p, x, cfg: ModelConfig, state: RWKVState
+                       ) -> Tuple[jnp.ndarray, RWKVState]:
+    """Sequence mode.  x: (B, T, d)."""
+    r: RWKVConfig = cfg.rwkv
+    B, T, d = x.shape
+    H, N = cfg.n_heads, r.head_dim
+    # token shift: previous token (carry state.shift_tm for t=0)
+    x_prev = jnp.concatenate([state.shift_tm[:, None, :], x[:, :-1]], axis=1)
+    rr, kk, vv, logw, g = _time_mix_qkvwg(p, x, x_prev, cfg)
+    y, S = gla_chunked(rr, kk, vv, logw, u=p["u_bonus"], mode="rwkv",
+                       chunk=min(r.chunk_size, T), initial_state=state.S)
+    y = y.transpose(0, 2, 1, 3).reshape(B, T, d)
+    y = _group_norm(y, p["gn_scale"], p["gn_bias"], H)
+    out_tm = (y * g) @ p["w_o"].astype(x.dtype)
+    h = x + out_tm
+
+    # channel mix
+    h_prev = jnp.concatenate([state.shift_cm[:, None, :], h[:, :-1]], axis=1)
+    dt = h.dtype
+    delta = h_prev - h
+    hr = h + delta * p["cm_mu"][0].astype(dt)
+    hk = h + delta * p["cm_mu"][1].astype(dt)
+    rgate = jax.nn.sigmoid(hr @ p["cm_wr"].astype(dt))
+    kk2 = jnp.square(jax.nn.relu(hk @ p["cm_wk"].astype(dt)))
+    out_cm = rgate * (kk2 @ p["cm_wv"].astype(dt))
+    out = h + out_cm
+
+    new_state = RWKVState(shift_tm=x[:, -1, :], shift_cm=h[:, -1, :], S=S)
+    return out, new_state
+
+
+def rwkv_block_decode(p, x, cfg: ModelConfig, state: RWKVState
+                      ) -> Tuple[jnp.ndarray, RWKVState]:
+    """Decode one token.  x: (B, 1, d)."""
+    r: RWKVConfig = cfg.rwkv
+    B, _, d = x.shape
+    H, N = cfg.n_heads, r.head_dim
+    x_prev = state.shift_tm[:, None, :]
+    rr, kk, vv, logw, g = _time_mix_qkvwg(p, x, x_prev, cfg)
+    y, S = gla_decode_step(rr[:, :, 0], kk[:, :, 0], vv[:, :, 0],
+                           logw[:, :, 0], state.S, u=p["u_bonus"], mode="rwkv")
+    y = y.reshape(B, 1, d)
+    y = _group_norm(y, p["gn_scale"], p["gn_bias"], H)
+    out_tm = (y * g) @ p["w_o"].astype(x.dtype)
+    h = x + out_tm
+
+    h_prev = state.shift_cm[:, None, :]
+    dt = h.dtype
+    delta = h_prev - h
+    hr = h + delta * p["cm_mu"][0].astype(dt)
+    hk = h + delta * p["cm_mu"][1].astype(dt)
+    rgate = jax.nn.sigmoid(hr @ p["cm_wr"].astype(dt))
+    kk2 = jnp.square(jax.nn.relu(hk @ p["cm_wk"].astype(dt)))
+    out = h + rgate * (kk2 @ p["cm_wv"].astype(dt))
+
+    new_state = RWKVState(shift_tm=x[:, 0, :], shift_cm=h[:, 0, :], S=S)
+    return out, new_state
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> RWKVState:
+    r: RWKVConfig = cfg.rwkv
+    return RWKVState(
+        shift_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        shift_cm=jnp.zeros((batch, cfg.d_model), dtype),
+        S=jnp.zeros((batch, cfg.n_heads, r.head_dim, r.head_dim), jnp.float32),
+    )

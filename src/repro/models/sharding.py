@@ -1,0 +1,248 @@
+"""Sharding rules: map param/cache pytree paths to PartitionSpecs.
+
+Scheme (see DESIGN.md §5): 2-D sharding —
+  * tensor-parallel over ``model``: attention heads (via the fused head dim),
+    FFN hidden dim, MoE experts, vocab;
+  * ZeRO-style over ``data`` for the other matrix dim (d_model),
+    falling back to replication when not divisible;
+  * batch over (``pod``, ``data``) for activations;
+  * decode KV caches over batch x kv-heads (replicated heads when
+    kv_heads % model_axis != 0); long-context (batch=1) caches shard the
+    sequence dim over ``data``.
+
+Divisibility is checked against the actual mesh; any non-divisible axis
+falls back to None (replicated) so every (arch x mesh) lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _fit(dim: int, mesh: Mesh, axis):
+    """Return axis if dim divisible by its size else None."""
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def param_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh,
+               replicate_data: bool = False) -> P:
+    """Heuristic name-based rules.  ``path`` is '/'.joined tree path; leaves
+    may be stacked with leading scan axes (we only shard the trailing dims).
+
+    ``replicate_data``: drop the ZeRO-style `data`-axis sharding (pure
+    tensor parallelism).  For decode steps of small models this removes the
+    per-step weight all-gather over the data axis (§Perf hillclimb)."""
+    shape = leaf.shape
+    nd = len(shape)
+
+    def spec(*trailing):
+        """Pad with None for leading (scan-stacked) axes."""
+        lead = nd - len(trailing)
+        return P(*([None] * lead + list(trailing)))
+
+    # 1-D (norm scales, biases): replicate.
+    if nd == 0 or shape[-1] <= 8:
+        return P()
+    name = path.split("/")[-1]
+
+    # Embedding / LM head: (V, d) -> vocab over model, d over data.
+    if name == "table":
+        return spec(_fit(shape[-2], mesh, "model"), _fit(shape[-1], mesh, "data"))
+    if path.endswith("mm_proj/w"):
+        return spec(_fit(shape[-2], mesh, "data"), None)
+
+    # MoE expert weights: (..., E, d, f) / (..., E, f, d): experts over model.
+    if (cfg.moe is not None and name in ("w_gate", "w_up", "w_down")
+            and nd >= 3 and shape[-3] == cfg.moe.n_experts):
+        e_ax = _fit(shape[-3], mesh, "model")
+        return spec(e_ax, _fit(shape[-2], mesh, "data"), None)
+    if name == "router":
+        return spec(_fit(shape[-2], mesh, "data"), None)
+
+    # Attention projections: output dim = heads*hd -> model; input -> data.
+    if name in ("wq", "wk", "wv", "w_uq", "w_uk", "w_uv", "w_krope",
+                "w_dq", "w_dkv"):
+        return spec(_fit(shape[-2], mesh, "data"), _fit(shape[-1], mesh, "model"))
+    if name in ("wo", "w_o", "w_out"):
+        return spec(_fit(shape[-2], mesh, "model"), _fit(shape[-1], mesh, "data"))
+    if name in ("bq", "bk", "bv"):
+        return spec(_fit(shape[-1], mesh, "model"))
+
+    # Dense MLP: hidden dim over model.
+    if name in ("w_gate", "w_up", "w_in"):
+        return spec(_fit(shape[-2], mesh, "data"), _fit(shape[-1], mesh, "model"))
+    if name == "w_down":
+        return spec(_fit(shape[-2], mesh, "model"), _fit(shape[-1], mesh, "data"))
+    if name in ("b_in",):
+        return spec(_fit(shape[-1], mesh, "model"))
+    if name in ("b_out", "b_out_mlp"):
+        return spec()
+
+    # RWKV square mixing matrices / mamba in-proj: (d, d') -> data x model.
+    if name in ("w_r", "w_k", "w_v", "w_g", "cm_wr", "cm_wk", "w_in_rwkv",
+                "lora_A", "decay_lora_A"):
+        return spec(_fit(shape[-2], mesh, "data"), _fit(shape[-1], mesh, "model"))
+    if name in ("cm_wv",):
+        return spec(_fit(shape[-2], mesh, "model"), _fit(shape[-1], mesh, "data"))
+
+    # Fallback for 2-D+ weights: shard the two trailing dims data x model
+    # when divisible.
+    if nd >= 2 and min(shape[-1], shape[-2]) >= 64:
+        return spec(_fit(shape[-2], mesh, "data"), _fit(shape[-1], mesh, "model"))
+    return P()
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape: Any,
+                    replicate_data: bool = False):
+    """Build a NamedSharding pytree matching ``params_shape``."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        path_str = "/".join(
+            p.key if hasattr(p, "key") else str(p.idx) if hasattr(p, "idx") else str(p)
+            for p in path)
+        spec = param_spec(path_str, leaf, cfg, mesh)
+        if replicate_data:
+            spec = P(*[None if ax == "data"
+                       else tuple(a for a in ax if a != "data") or None
+                       if isinstance(ax, tuple) else ax
+                       for ax in spec])
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activations / inputs / caches
+# ---------------------------------------------------------------------------
+
+def tokens_spec(mesh: Mesh, batch: int) -> P:
+    ba = batch_axes(mesh)
+    if batch % _axis_size(mesh, ba) == 0:
+        return P(ba)
+    if batch % _axis_size(mesh, "data") == 0:
+        return P("data")
+    return P()
+
+
+def cache_spec(cfg: ModelConfig, mesh: Mesh, batch: int, leaf_ndim: int,
+               *, seq_axis: Optional[int] = None, heads_axis: Optional[int] = None,
+               long_context: bool = False) -> P:
+    """Spec for a (L, B, S, H, D)-like cache leaf.
+
+    Default: B over (pod,data), H over model when divisible.
+    long_context (batch=1): S over data instead (flash-decoding style).
+    """
+    spec = [None] * leaf_ndim
+    ba = batch_axes(mesh)
+    if batch % _axis_size(mesh, ba) == 0:
+        spec[1] = ba
+    elif batch % _axis_size(mesh, "data") == 0:
+        spec[1] = "data"
+    elif long_context and seq_axis is not None:
+        spec[seq_axis] = "data"
+    if heads_axis is not None:
+        spec[heads_axis] = "model"
+    return P(*spec)
+
+
+def shard_params(params, shardings):
+    return jax.tree.map(jax.device_put, params, shardings)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (set by the launcher at trace time)
+# ---------------------------------------------------------------------------
+# GSPMD propagation alone double-books the `model` axis (TP weights vs
+# batch) and can replicate the batch through attention (observed: 205 GiB
+# per-device temps).  Layer bodies therefore anchor the residual stream and
+# the KV sequence dim explicitly through this context.
+
+import contextvars
+from typing import NamedTuple as _NamedTuple
+
+
+class ActivationCtx(_NamedTuple):
+    mesh: Mesh
+    batch_axes: Any            # axes for the batch dim of activations
+    kv_seq_axis: Optional[str]  # axis for K/V sequence dim (prefill/decode)
+    moe_cap_shard: bool = False  # shard MoE capacity over `data` (§Perf)
+
+
+_ACT_CTX: "contextvars.ContextVar[Optional[ActivationCtx]]" = \
+    contextvars.ContextVar("repro_activation_sharding", default=None)
+
+
+def set_activation_ctx(ctx: Optional[ActivationCtx]):
+    return _ACT_CTX.set(ctx)
+
+
+def reset_activation_ctx(token) -> None:
+    _ACT_CTX.reset(token)
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Anchor an activation's batch dim to the context's batch axes."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or x is None:
+        return x
+    if x.shape[batch_dim] % _axis_size(ctx.mesh, ctx.batch_axes) != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = ctx.batch_axes
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def constrain_kv_seq(x, seq_dim: int = 1, batch_dim: int = 0):
+    """Anchor K/V (B, S, H, D) with the sequence dim over kv_seq_axis."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or x is None or ctx.kv_seq_axis is None:
+        return x
+    spec = [None] * x.ndim
+    if x.shape[batch_dim] % _axis_size(ctx.mesh, ctx.batch_axes) == 0:
+        spec[batch_dim] = ctx.batch_axes
+    if x.shape[seq_dim] % _axis_size(ctx.mesh, ctx.kv_seq_axis) == 0:
+        spec[seq_dim] = ctx.kv_seq_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))
+
+
+def constrain_experts(x, expert_dim: int = 0):
+    """Anchor an (E, C, d) MoE buffer to expert-parallel over `model`.
+
+    With ctx.moe_cap_shard (the "moe-cap-shard" §Perf variant) the capacity
+    dim also shards over `data` — without it the expert compute is
+    REPLICATED across the data axis (observed: olmoe prefill useful-flops
+    ratio 0.04, i.e. ~16x redundant expert matmuls on a 16x16 mesh)."""
+    ctx = _ACT_CTX.get()
+    if ctx is None or x is None:
+        return x
+    if x.shape[expert_dim] % ctx.mesh.shape["model"] != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[expert_dim] = "model"
+    if (ctx.moe_cap_shard and x.ndim > expert_dim + 1
+            and x.shape[expert_dim + 1] % ctx.mesh.shape["data"] == 0):
+        spec[expert_dim + 1] = "data"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*spec)))

@@ -1,0 +1,203 @@
+"""Step functions lowered by the launcher: train_step / prefill / serve_step.
+
+These are the pure pjit-able functions the multi-pod dry-run compiles for
+every (arch x input shape).  They operate on contiguous decode caches
+(``transformer.init_caches``); the serving engine's *paged* decode path
+lives in ``repro.core.engine`` / ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Loss / train step
+# ---------------------------------------------------------------------------
+
+CE_CHUNK = 512
+
+
+def chunked_ce_loss(hidden, head_table, labels, chunk: int = CE_CHUNK):
+    """Cross-entropy without materializing the full (B, T, V) fp32 logits:
+    scans over sequence chunks — peak memory (B, chunk, V) per step."""
+    B, T, d = hidden.shape
+    pad = (-T) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nt = hidden.shape[1] // chunk
+    hs = jnp.moveaxis(hidden.reshape(B, nt, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, nt, chunk), 1, 0)
+    w = head_table.astype(jnp.float32)
+
+    def body(carry, xs):
+        total, count = carry
+        hc, lc = xs
+        logits = hc.astype(jnp.float32) @ w.T                  # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lc, 0)
+        ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        total = total + jnp.sum((lse - ll) * mask)
+        count = count + jnp.sum(mask)
+        return (total, count), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ls))
+    return total / jnp.maximum(count, 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            remat: bool = True) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    hidden, _, aux = T.forward_seq(
+        params, cfg, tokens,
+        extra_embeds=batch.get("extra_embeds"),
+        encoder_frames=batch.get("encoder_frames"),
+        remat=remat, return_hidden=True)
+    # VLM: image tokens are prepended; only score the text positions.
+    if hidden.shape[1] != labels.shape[1]:
+        hidden = hidden[:, hidden.shape[1] - labels.shape[1]:]
+    head = params["embed"] if (cfg.tie_embeddings or "lm_head" not in params) \
+        else params["lm_head"]
+    loss = chunked_ce_loss(hidden, head["table"], labels)
+    return loss + AUX_LOSS_WEIGHT * aux
+
+
+def train_step(params, opt_state: AdamWState, batch, *, cfg: ModelConfig,
+               lr: float = 3e-4, remat: bool = True):
+    loss, grads = jax.value_and_grad(
+        lambda p: lm_loss(p, cfg, batch, remat=remat))(params)
+    new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr)
+    return new_params, new_opt, loss
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4, remat: bool = True):
+    return functools.partial(train_step, cfg=cfg, lr=lr, remat=remat)
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens, extra_embeds=None,
+            encoder_frames=None):
+    """Returns (last_token_logits, caches_prefill, n_prefill_positions).
+
+    caches are sized to the prompt length; ``extend_caches`` grows them to a
+    decode budget and converts layout where needed.
+    """
+    logits, caches, _ = T.forward_seq(params, cfg, tokens,
+                                      extra_embeds=extra_embeds,
+                                      encoder_frames=encoder_frames,
+                                      remat=False, last_only=True)
+    return logits[:, -1], caches
+
+
+def make_prefill(cfg: ModelConfig):
+    return functools.partial(prefill, cfg=cfg)
+
+
+def caches_from_prefill(cfg: ModelConfig, raw, batch: int, cache_len: int):
+    """Convert forward_seq's stacked per-layer cache collection into the
+    decode cache pytree, padded to ``cache_len``."""
+    pat = T._pattern(cfg)
+    full = T.init_caches(cfg, batch, cache_len)
+
+    def put(dst, src, axis):
+        """Write src into dst at offset 0 along `axis` (both stacked)."""
+        sl = [slice(None)] * dst.ndim
+        sl[axis] = slice(0, src.shape[axis])
+        return dst.at[tuple(sl)].set(src.astype(dst.dtype))
+
+    if cfg.encoder_decoder:
+        sk, sv, ck, cv = raw
+        return T.WhisperCaches(
+            self_k=put(full.self_k, sk, 2), self_v=put(full.self_v, sv, 2),
+            cross_k=ck.astype(full.cross_k.dtype),
+            cross_v=cv.astype(full.cross_v.dtype))
+    if cfg.mla is not None:
+        if isinstance(raw, dict):               # skip_first (deepseek)
+            c0, rest = raw["first"], raw["rest"]
+            lat = jnp.concatenate([c0.latent[None], rest.latent])
+            kr = jnp.concatenate([c0.k_rope[None], rest.k_rope])
+        else:
+            lat, kr = raw.latent, raw.k_rope
+        return T.MLACaches(latent=put(full.latent, lat, 2),
+                           k_rope=put(full.k_rope, kr, 2))
+    if pat == "uniform":
+        if isinstance(raw, dict):               # skip_first
+            c0, rest = raw["first"], raw["rest"]
+            k = jnp.concatenate([c0[0][None], rest[0]])
+            v = jnp.concatenate([c0[1][None], rest[1]])
+        else:
+            k, v = raw
+        return T.KVCaches(k=put(full.k, k, 2), v=put(full.v, v, 2))
+    if pat == "gemma3":
+        lk, lv, gk, gv = raw               # lk: (P, R, B, T, H, D)
+        W = full.local_k.shape[3]
+        Tp = lk.shape[3]
+        if Tp >= W:
+            # keep the last W tokens; ring slot for position p is p % W.
+            tail = lk[:, :, :, Tp - W:], lv[:, :, :, Tp - W:]
+            # roll so that token at absolute position p lands in slot p % W
+            shift = (Tp - W) % W
+            lk_w = jnp.roll(tail[0], shift=shift, axis=3)
+            lv_w = jnp.roll(tail[1], shift=shift, axis=3)
+            out_lk = full.local_k.at[...].set(lk_w.astype(full.local_k.dtype))
+            out_lv = full.local_v.at[...].set(lv_w.astype(full.local_v.dtype))
+        else:
+            out_lk = put(full.local_k, lk, 3)
+            out_lv = put(full.local_v, lv, 3)
+        return T.Gemma3Caches(local_k=out_lk, local_v=out_lv,
+                              global_k=put(full.global_k, gk, 2),
+                              global_v=put(full.global_v, gv, 2))
+    if pat == "zamba2":
+        conv_p, ssm_p, conv_rem, ssm_rem, ak, av = raw
+        out = T.Zamba2Caches(
+            conv_p=conv_p.astype(full.conv_p.dtype),
+            ssm_p=ssm_p.astype(full.ssm_p.dtype),
+            conv_rem=(conv_rem.astype(full.conv_rem.dtype)
+                      if conv_rem is not None else full.conv_rem),
+            ssm_rem=(ssm_rem.astype(full.ssm_rem.dtype)
+                     if ssm_rem is not None else full.ssm_rem),
+            attn_k=put(full.attn_k, ak, 2),
+            attn_v=put(full.attn_v, av, 2))
+        return out
+    if pat == "rwkv":
+        return T.RWKVCaches(shift_tm=raw.shift_tm.astype(full.shift_tm.dtype),
+                            shift_cm=raw.shift_cm.astype(full.shift_cm.dtype),
+                            S=raw.S)
+    raise ValueError(pat)
+
+
+# ---------------------------------------------------------------------------
+# Serve (decode) step
+# ---------------------------------------------------------------------------
+
+def serve_step(params, caches, token, pos, *, cfg: ModelConfig):
+    """One new token for every sequence against a ``pos``-token cache.
+    Returns (next_token (B,), logits (B, V), new caches) — greedy."""
+    logits, new_caches = T.decode_step(params, cfg, caches, token, pos)
+    next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_token, logits, new_caches
+
+
+def make_serve_step(cfg: ModelConfig):
+    return functools.partial(serve_step, cfg=cfg)
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params = T.init_params(cfg, key)
+    return params, adamw_init(params)

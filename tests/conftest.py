@@ -1,0 +1,10 @@
+import os
+import sys
+
+# src-layout import path (tests run as `PYTHONPATH=src pytest tests/`,
+# but make it work without the env var too).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device (the 512-device mesh exists only inside
+# repro.launch.dryrun, which sets XLA_FLAGS before importing jax).

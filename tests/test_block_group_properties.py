@@ -1,0 +1,127 @@
+"""Hypothesis property tests for the Dynamic Block Group Manager."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.block_group import (DynamicBlockGroupManager,
+                                    OutOfBlocksError)
+
+
+def _apply_ops(mgr, ops):
+    """ops: list of (req_id, n_tokens) alloc or (req_id, None) release."""
+    live = set()
+    for rid, n in ops:
+        if n is None:
+            if rid in live:
+                mgr.release_request(rid)
+                live.discard(rid)
+        else:
+            try:
+                mgr.allocate_tokens(rid, n)
+                mgr.note_tokens(rid, n)
+                live.add(rid)
+            except OutOfBlocksError:
+                pass
+        mgr.check_invariants()
+    return live
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(
+    st.tuples(st.integers(0, 7),
+              st.one_of(st.none(), st.integers(1, 300))),
+    min_size=1, max_size=60),
+    st.integers(1, 64))
+def test_no_overlap_no_leak(ops, group_blocks):
+    mgr = DynamicBlockGroupManager(128, 16, initial_group_blocks=group_blocks)
+    live = _apply_ops(mgr, ops)
+    # full accounting: free + owned == capacity
+    owned = sum(g.length for st_ in mgr.requests.values() for g in st_.groups)
+    assert owned + mgr.free_blocks() == mgr.num_blocks
+    # releasing everything returns the pool to one merged group
+    for rid in list(live):
+        mgr.release_request(rid)
+    mgr.check_invariants()
+    assert mgr.free_blocks() == mgr.num_blocks
+    assert len(mgr.free) == 1, "free list must fully merge"
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 200)),
+                min_size=1, max_size=40))
+def test_capacity_covers_tokens(allocs):
+    """A request's block capacity always covers its recorded tokens."""
+    mgr = DynamicBlockGroupManager(256, 16, initial_group_blocks=60)
+    for rid, n in allocs:
+        try:
+            mgr.allocate_tokens(rid, n)
+            mgr.note_tokens(rid, n)
+        except OutOfBlocksError:
+            continue
+        st_ = mgr.requests[rid]
+        cap = st_.used_blocks() * mgr.block_size_tokens
+        assert cap >= mgr.request_tokens(rid)
+        mgr.check_invariants()
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 500))
+def test_block_table_is_consistent(group_blocks, tokens):
+    mgr = DynamicBlockGroupManager(512, 16, initial_group_blocks=group_blocks)
+    mgr.allocate_tokens(1, tokens)
+    mgr.note_tokens(1, tokens)
+    ids = mgr.request_block_ids(1)
+    assert len(ids) == len(set(ids)), "block table must not repeat blocks"
+    need = (tokens + 15) // 16
+    assert len(ids) >= need
+    runs = mgr.request_runs(1)
+    assert sum(n for _, n in runs) == len(ids)
+    # runs are maximal: no two adjacent
+    for (s1, n1), (s2, n2) in zip(runs, runs[1:]):
+        assert s1 + n1 < s2
+
+
+def test_steal_from_active_group():
+    mgr = DynamicBlockGroupManager(64, 16, initial_group_blocks=60)
+    mgr.allocate_tokens(1, 16)          # gets a (shrunk) group, uses 1 block
+    mgr.note_tokens(1, 16)
+    free_before = mgr.free_blocks()
+    tail = mgr.requests[1].active.free_tail
+    assert tail > 0
+    # demand more than the free pool: forces a steal from req 1's tail
+    want = free_before + 2
+    mgr.allocate_tokens(2, 16 * want)
+    mgr.note_tokens(2, 16 * want)
+    mgr.check_invariants()
+    assert mgr.n_steals >= 1
+    assert len(mgr.request_block_ids(2)) == want
+
+
+def test_vllm_baseline_is_per_block():
+    mgr = DynamicBlockGroupManager(64, 16, initial_group_blocks=1)
+    mgr.allocate_tokens(1, 16 * 5)
+    mgr.note_tokens(1, 16 * 5)
+    st_ = mgr.requests[1]
+    assert all(g.length == 1 for g in st_.groups)
+
+
+def test_oom_raises():
+    mgr = DynamicBlockGroupManager(4, 16, initial_group_blocks=1)
+    mgr.allocate_tokens(1, 16 * 4)
+    mgr.note_tokens(1, 64)
+    with pytest.raises(OutOfBlocksError):
+        mgr.allocate_tokens(2, 16)
+
+
+def test_merge_restores_contiguity():
+    mgr = DynamicBlockGroupManager(100, 16, initial_group_blocks=10)
+    for rid in range(5):
+        mgr.allocate_tokens(rid, 16 * 10)
+        mgr.note_tokens(rid, 160)
+    for rid in [1, 3]:
+        mgr.release_request(rid)
+    mgr.check_invariants()
+    for rid in [0, 2, 4]:
+        mgr.release_request(rid)
+    assert len(mgr.free) == 1 and mgr.free_blocks() == 100

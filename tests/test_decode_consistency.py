@@ -1,0 +1,72 @@
+"""Decode-path correctness: prefill(T) + decode k steps must match
+prefill(T + k) logits for every architecture family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs
+from repro.models import steps, transformer as T
+
+# tolerance: decode recomputes in bf16 with different reduction orders
+ATOL = 0.12
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_prefill(arch):
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    B, T0, K = 2, 24, 4
+    tokens = jax.random.randint(key, (B, T0 + K), 0, cfg.vocab_size)
+    extras = {}
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        extras["extra_embeds"] = 0.1 * jnp.ones(
+            (B, cfg.frontend.n_tokens, cfg.frontend.d_embed), jnp.float32)
+    if cfg.encoder_decoder:
+        extras["encoder_frames"] = 0.1 * jnp.ones(
+            (B, cfg.n_encoder_tokens, cfg.d_model), jnp.float32)
+
+    # reference: full prefill over T0+K tokens
+    ref_logits, _, _ = T.forward_seq(params, cfg, tokens, **{
+        k: v for k, v in extras.items() if k == "extra_embeds"},
+        encoder_frames=extras.get("encoder_frames"))
+    n_img = (cfg.frontend.n_tokens
+             if cfg.frontend and cfg.frontend.kind == "vision" else 0)
+
+    # prefill T0 then decode K steps
+    logits0, raw = steps.prefill(params, cfg, tokens[:, :T0],
+                                 extra_embeds=extras.get("extra_embeds"),
+                                 encoder_frames=extras.get("encoder_frames"))
+    caches = steps.caches_from_prefill(cfg, raw, B, T0 + K + n_img + 8)
+    np.testing.assert_allclose(
+        np.asarray(logits0, np.float32),
+        np.asarray(ref_logits[:, n_img + T0 - 1], np.float32), atol=ATOL,
+        err_msg="prefill last-token logits mismatch")
+
+    for i in range(K):
+        pos = n_img + T0 + i
+        _, logits, caches = steps.serve_step(
+            params, caches, tokens[:, T0 + i], jnp.int32(pos), cfg=cfg)
+        np.testing.assert_allclose(
+            np.asarray(logits, np.float32),
+            np.asarray(ref_logits[:, n_img + T0 + i], np.float32),
+            atol=ATOL, err_msg=f"{arch}: decode step {i} diverged")
+
+
+def test_int8_kv_cache_decode_close():
+    """kv-int8 §Perf variant: quantized-cache decode stays close to bf16."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("llama3.2-3b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.array([1, 2], jnp.int32)
+    c_bf = T.init_caches(cfg, 2, 32)
+    c_i8 = T.init_caches(cfg, 2, 32, kv_dtype=jnp.int8)
+    assert c_i8.k.dtype == jnp.int8
+    for i in range(5):
+        _, l1, c_bf = steps.serve_step(params, c_bf, tok, jnp.int32(i), cfg=cfg)
+        _, l2, c_i8 = steps.serve_step(params, c_i8, tok, jnp.int32(i), cfg=cfg)
+        err = float(jnp.max(jnp.abs(l1.astype(jnp.float32)
+                                    - l2.astype(jnp.float32))))
+        assert err < 0.25, f"step {i}: int8 cache drifted {err}"
+        tok = jnp.argmax(l1, -1).astype(jnp.int32)

@@ -1,0 +1,71 @@
+"""Chunked gated linear attention vs the sequential oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.gla import gla_chunked, gla_decode_step, gla_scan_ref
+
+
+def _inputs(B, H, T, N, P, key, scalar_decay=False):
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, H, T, N)) * 0.5
+    k = jax.random.normal(ks[1], (B, H, T, N)) * 0.5
+    v = jax.random.normal(ks[2], (B, H, T, P)) * 0.5
+    shape = (B, H, T, 1) if scalar_decay else (B, H, T, N)
+    logw = -jnp.exp(jax.random.normal(ks[3], shape) * 0.5 - 1.0)
+    return q, k, v, logw
+
+
+@pytest.mark.parametrize("mode,scalar", [("mamba", True), ("mamba", False),
+                                         ("rwkv", False)])
+@pytest.mark.parametrize("T,chunk", [(64, 16), (128, 32), (96, 32), (32, 32)])
+def test_chunked_matches_scan(mode, scalar, T, chunk):
+    B, H, N, P = 2, 3, 16, 24
+    q, k, v, logw = _inputs(B, H, T, N, P, jax.random.PRNGKey(0),
+                            scalar_decay=scalar)
+    u = 0.3 * jnp.ones((H, N)) if mode == "rwkv" else None
+    lw = jnp.broadcast_to(logw, (B, H, T, N))
+    ref, S_ref = gla_scan_ref(q, k, v, lw, u=u, mode=mode)
+    out, S = gla_chunked(q, k, v, lw, u=u, mode=mode, chunk=chunk,
+                         scalar_decay=scalar)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["mamba", "rwkv"])
+def test_decode_continues_state(mode):
+    """Chunked pass over T tokens == chunked over T-4 + 4 decode steps."""
+    B, H, T, N, P = 1, 2, 32, 8, 8
+    q, k, v, logw = _inputs(B, H, T, N, P, jax.random.PRNGKey(1))
+    u = 0.5 * jnp.ones((H, N)) if mode == "rwkv" else None
+    full, S_full = gla_scan_ref(q, k, v, logw, u=u, mode=mode)
+    part, S = gla_scan_ref(q[:, :, :T - 4], k[:, :, :T - 4],
+                           v[:, :, :T - 4], logw[:, :, :T - 4],
+                           u=u, mode=mode)
+    outs = []
+    for t in range(T - 4, T):
+        y, S = gla_decode_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                               logw[:, :, t], S, u=u, mode=mode)
+        outs.append(y)
+    tail = jnp.stack(outs, axis=2)
+    np.testing.assert_allclose(np.asarray(tail),
+                               np.asarray(full[:, :, T - 4:]),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_full),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_initial_state_carries():
+    B, H, T, N, P = 1, 1, 32, 8, 8
+    q, k, v, logw = _inputs(B, H, T, N, P, jax.random.PRNGKey(2))
+    full, _ = gla_chunked(q, k, v, logw, mode="mamba", chunk=16)
+    h1, S1 = gla_chunked(q[:, :, :16], k[:, :, :16], v[:, :, :16],
+                         logw[:, :, :16], mode="mamba", chunk=16)
+    h2, _ = gla_chunked(q[:, :, 16:], k[:, :, 16:], v[:, :, 16:],
+                        logw[:, :, 16:], mode="mamba", chunk=16,
+                        initial_state=S1)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(full[:, :, 16:]),
+                               atol=1e-4, rtol=1e-4)

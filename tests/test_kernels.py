@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.block_copy import block_copy, block_copy_grouped
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ref import block_copy_ref, mha_ref, paged_attention_ref
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,bs,npages", [
+    (1, 4, 4, 64, 16, 2),      # MHA
+    (3, 8, 2, 64, 16, 4),      # GQA group=4
+    (2, 16, 16, 128, 16, 3),   # MHA wide head
+    (2, 12, 2, 128, 32, 2),    # qwen2-like, bigger block
+    (1, 8, 1, 64, 16, 8),      # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, Hq, Hkv, D, bs, npages, dtype):
+    key = jax.random.PRNGKey(42)
+    nb = npages * B + 3
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, Hq, D), dtype)
+    kp = jax.random.normal(ks[1], (nb, bs, Hkv, D), dtype)
+    vp = jax.random.normal(ks[2], (nb, bs, Hkv, D), dtype)
+    bt = jax.random.permutation(ks[3], nb)[:B * npages] \
+        .reshape(B, npages).astype(jnp.int32)
+    # context lens including edge cases: 1 token, partial block, full
+    lens = np.linspace(1, npages * bs, B).astype(np.int32)
+    ctx = jnp.asarray(lens)
+    scale = D ** -0.5
+    out = paged_attention(q, kp, vp, bt, ctx, scale)
+    ref = paged_attention_ref(q, jnp.stack([kp, vp]), bt, ctx, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_paged_attention_zero_context_is_finite():
+    q = jnp.ones((2, 4, 64))
+    kp = jnp.ones((4, 16, 2, 64))
+    vp = jnp.ones((4, 16, 2, 64))
+    bt = jnp.zeros((2, 2), jnp.int32)
+    ctx = jnp.array([0, 5], jnp.int32)
+    out = paged_attention(q, kp, vp, bt, ctx, 0.125)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("n_src,n_dst,n_copy,E", [
+    (8, 8, 3, 128), (16, 4, 4, 256), (32, 32, 32, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_block_copy_sweep(n_src, n_dst, n_copy, E, dtype):
+    key = jax.random.PRNGKey(0)
+    src = jax.random.normal(key, (n_src, E), dtype)
+    dst = jnp.zeros((n_dst, E), dtype)
+    rng = np.random.RandomState(1)
+    si = jnp.asarray(rng.choice(n_src, n_copy, replace=False), jnp.int32)
+    di = jnp.asarray(rng.choice(n_dst, n_copy, replace=False), jnp.int32)
+    out = block_copy(src, dst, si, di)
+    ref = block_copy_ref(src, dst, si, di)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("runs", [
+    [(0, 4), (10, 2)],
+    [(3, 1)],
+    [(0, 8), (8, 8), (20, 4)],
+])
+def test_block_copy_grouped_sweep(runs):
+    key = jax.random.PRNGKey(7)
+    src = jax.random.normal(key, (32, 96), jnp.float32)
+    dst = jnp.zeros((40, 96), jnp.float32)
+    dst_starts = []
+    d = 1
+    for _, n in runs:
+        dst_starts.append(d)
+        d += n + 1
+    ref = dst
+    for (s, n), ds in zip(runs, dst_starts):
+        ref = ref.at[ds:ds + n].set(src[s:s + n])
+    out = block_copy_grouped(
+        src, dst,
+        jnp.asarray([r[0] for r in runs], jnp.int32),
+        jnp.asarray(dst_starts, jnp.int32),
+        jnp.asarray([r[1] for r in runs], jnp.int32),
+        run_blocks=max(r[1] for r in runs))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("B,H,T,D,bq,bk", [
+    (1, 2, 128, 64, 64, 64),
+    (2, 4, 256, 64, 128, 64),
+    (1, 1, 512, 128, 128, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, H, T, D, bq, bk, causal, dtype):
+    key = jax.random.PRNGKey(3)
+    q, k, v = (jax.random.normal(kk, (B, H, T, D), dtype)
+               for kk in jax.random.split(key, 3))
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    ref = mha_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                  v.transpose(0, 2, 1, 3), causal=causal).transpose(0, 2, 1, 3)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# Pallas chunked GLA (Mamba2/SSD scalar decay)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,T,N,P,chunk", [
+    (1, 1, 64, 8, 8, 16),
+    (2, 3, 128, 16, 32, 32),
+    (1, 2, 96, 32, 16, 32),      # T not a chunk multiple of 64
+    (2, 1, 64, 64, 64, 64),      # one chunk == T
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gla_scan_scalar_sweep(B, H, T, N, P, chunk, dtype):
+    from repro.kernels.gla_scan import gla_scan_scalar
+    from repro.models.gla import gla_scan_ref
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = (jax.random.normal(ks[0], (B, H, T, N)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, H, T, N)) * 0.5).astype(dtype)
+    v = (jax.random.normal(ks[2], (B, H, T, P)) * 0.5).astype(dtype)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, H, T)) * 0.5 - 1.0)
+    y, S = gla_scan_scalar(q, k, v, logw, chunk=chunk)
+    ref, S_ref = gla_scan_ref(
+        q, k, v, jnp.broadcast_to(logw[..., None], (B, H, T, N)),
+        mode="mamba")
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_ref),
+                               atol=tol, rtol=tol)

@@ -1,0 +1,81 @@
+"""KV Cache Reuse Mechanism invariants (FastSwitch §3.3)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reuse import KVCacheReuseManager
+
+
+def test_increment_only_transfer():
+    r = KVCacheReuseManager(1024, 16, enabled=True)
+    r.update_priority(1, 0.5)
+    inc, runs = r.record_swap_out(1, 500, requesting_priority=0.5)
+    assert inc == 500                       # first swap-out: everything
+    assert r.valid_tokens(1) == 500
+    # swap in retains the copy
+    assert r.record_swap_in(1) == 500
+    assert r.valid_tokens(1) == 500
+    # next turn grew the context: only the delta moves
+    inc2, _ = r.record_swap_out(1, 800, requesting_priority=0.5)
+    assert inc2 == 300
+    assert r.valid_tokens(1) == 800
+
+
+def test_disabled_baseline_always_full():
+    r = KVCacheReuseManager(4096, 16, enabled=False)
+    r.update_priority(1, 0.5)
+    inc, _ = r.record_swap_out(1, 500)
+    assert inc == 500
+    inc, _ = r.record_swap_out(1, 800)
+    assert inc == 800                       # baseline re-writes everything
+    assert r.record_swap_in(1) == 0         # no reuse accounting
+
+
+def test_contamination_only_hits_lower_priority():
+    r = KVCacheReuseManager(64, 16, enabled=True, prealloc_blocks=0)
+    r.update_priority(1, 0.9)               # high priority victim candidate
+    r.record_swap_out(1, 64 * 16 - 256, requesting_priority=0.9)
+    r.update_priority(2, 0.5)
+    # lower-priority requester cannot contaminate the higher-priority copy
+    before = r.valid_tokens(1)
+    r.record_swap_out(2, 1024, requesting_priority=0.5)
+    assert r.valid_tokens(1) == before
+
+
+def test_contamination_shrinks_victim_prefix():
+    r = KVCacheReuseManager(64, 16, enabled=True, prealloc_blocks=0)
+    r.update_priority(1, 0.1)               # low priority
+    r.record_swap_out(1, 60 * 16, requesting_priority=0.1)
+    assert r.valid_tokens(1) == 960
+    r.update_priority(2, 0.9)
+    inc, _ = r.record_swap_out(2, 30 * 16, requesting_priority=0.9)
+    assert inc == 480
+    # the victim's copy shrank but never exceeds what is physically stored
+    assert r.valid_tokens(1) < 960
+    assert r.n_contaminations >= 1
+    cap = r.mgr.request_tokens(1)
+    assert r.valid_tokens(1) <= cap
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(1, 900),
+                          st.floats(0, 1)),
+                min_size=1, max_size=30))
+def test_valid_prefix_never_exceeds_stored(ops):
+    """Property: valid_tokens(r) <= tokens physically allocated on CPU —
+    a request can never reuse contaminated/unstored cache."""
+    r = KVCacheReuseManager(128, 16, enabled=True, prealloc_blocks=2)
+    for rid, tokens, prio in ops:
+        r.update_priority(rid, prio)
+        r.record_swap_out(rid, tokens, requesting_priority=prio)
+        for other in list(r.copies):
+            assert r.valid_tokens(other) <= r.mgr.request_tokens(other)
+        r.mgr.check_invariants()
+
+
+def test_release_frees_cpu_space():
+    r = KVCacheReuseManager(64, 16, enabled=True, prealloc_blocks=0)
+    r.update_priority(1, 0.5)
+    r.record_swap_out(1, 500, requesting_priority=0.5)
+    used = r.mgr.free_blocks()
+    r.release(1)
+    assert r.mgr.free_blocks() == 64
+    assert r.valid_tokens(1) == 0

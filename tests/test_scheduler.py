@@ -1,0 +1,89 @@
+"""Priority scheduler invariants."""
+from repro.core.scheduler import PriorityScheduler, Request, ReqState
+from repro.data.priority import PriorityTrace
+from repro.data.sharegpt import Conversation, Turn
+
+
+def _req(rid, prompt=100, resp=50, turns=1):
+    conv = Conversation(conv_id=rid, arrival_s=0.0,
+                        turns=[Turn(prompt, resp)] * turns)
+    r = Request(conv=conv)
+    r.begin_turn(0.0)
+    return r
+
+
+def test_desired_running_priority_order():
+    trace = PriorityTrace("random", update_freq=1.0, seed=0)
+    s = PriorityScheduler(trace, max_running=8)
+    for i in range(6):
+        s.add_request(_req(i))
+    # fix priorities directly
+    trace._prio = {i: i / 10 for i in range(6)}
+    desired = s.desired_running(block_budget_tokens=10_000, block_size=16)
+    # highest priority first until budget; all fit here
+    assert desired[0] == 5
+    assert set(desired) == set(range(6))
+
+
+def test_budget_limits_admission():
+    trace = PriorityTrace("random", update_freq=1.0, seed=0)
+    s = PriorityScheduler(trace, max_running=8)
+    for i in range(6):
+        s.add_request(_req(i, prompt=100))
+    trace._prio = {i: i / 10 for i in range(6)}
+    # each request needs ~116 tokens; budget of 250 fits exactly 2
+    desired = s.desired_running(block_budget_tokens=250, block_size=16)
+    assert desired == [5, 4]
+
+
+def test_classify_rebalance():
+    trace = PriorityTrace("random", update_freq=1.0, seed=0)
+    s = PriorityScheduler(trace, max_running=8)
+    for i in range(4):
+        s.add_request(_req(i))
+    s.move(0, ReqState.RUNNING)
+    s.move(1, ReqState.RUNNING)
+    s.move(2, ReqState.SWAPPED)
+    # desired: 1 (keep), 2 (swap in), 3 (admit); 0 preempted
+    pre, swin, adm = s.classify_rebalance([1, 2, 3])
+    assert pre == [0] and swin == [2] and adm == [3]
+
+
+def test_move_is_exclusive():
+    trace = PriorityTrace("random", update_freq=1.0, seed=0)
+    s = PriorityScheduler(trace, max_running=8)
+    s.add_request(_req(1))
+    for dst in (ReqState.RUNNING, ReqState.SWAPPED, ReqState.SWAPPING_IN,
+                ReqState.WAITING, ReqState.RUNNING):
+        s.move(1, dst)
+        queues = [s.waiting, s.running, s.swapped, s.swapping_in]
+        assert sum(q.count(1) for q in queues) == 1
+
+
+def test_victims_lowest_priority_first():
+    trace = PriorityTrace("random", update_freq=1.0, seed=0)
+    s = PriorityScheduler(trace, max_running=8)
+    for i in range(4):
+        s.add_request(_req(i))
+        s.move(i, ReqState.RUNNING)
+    trace._prio = {0: 0.9, 1: 0.2, 2: 0.5, 3: 0.7}
+    assert s.victims_for_space(exclude=set()) == [1, 2, 3, 0]
+    assert s.victims_for_space(exclude={1}) == [2, 3, 0]
+
+
+def test_markov_trace_stickiness():
+    trace = PriorityTrace("markov", update_freq=1.0, seed=1, stickiness=1.0)
+    ids = list(range(10))
+    for rid in ids:
+        trace.priority(rid)
+    updated = trace.step(ids, running_ids=[0, 1])
+    assert updated
+    # running requests got boosted into [0.5, 1.0]
+    assert trace.priority(0) >= 0.5
+    assert trace.priority(1) >= 0.5
+
+
+def test_update_period():
+    trace = PriorityTrace("random", update_freq=0.25, seed=1)
+    hits = sum(trace.step([1], []) for _ in range(100))
+    assert hits == 25
