@@ -1,0 +1,99 @@
+"""Decode hot-path benchmark: steps/s and jit-cache growth over a
+growing-context run (ISSUE 1 acceptance: bucketed shapes compile
+O(log2 max_pages) variants, the legacy exact-shape path compiled one per
+page-boundary crossing).
+
+Two single-request runs over the same token budget, context growing from
+1 token across >= 8 page boundaries:
+  * ``legacy``   — exact-width block tables through ``paged_decode_step``
+                   (recompiles at every page boundary, host sync per step)
+  * ``bucketed`` — the DecodeRunner (persistent device block table,
+                   pow2 buckets, donated pool, deferred token sync)
+
+CSV: name,us_per_call,derived  (derived = steps/s and compile counts).
+"""
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.decode_runner import DecodeRequestView, DecodeRunner
+from repro.models import transformer as T
+from repro.models.paged import paged_decode_step, paged_decode_step_device
+
+BS = 8              # tokens per page (small so boundaries come fast)
+MAX_PAGES = 10      # context grows across MAX_PAGES - 1 = 9 boundaries
+N_STEPS = MAX_PAGES * BS - 2
+
+
+def _setup():
+    cfg = get_smoke_config("qwen2-1.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    nb = MAX_PAGES + 2                      # + spare + trash
+    pool = jnp.zeros((cfg.n_layers, 2, nb, BS, cfg.n_kv_heads,
+                      cfg.resolved_head_dim), jnp.bfloat16)
+    return cfg, params, pool, nb - 1        # trash = last block
+
+
+def _blocks_for(ctx: int) -> list:
+    """Identity block table covering positions [0, ctx] (the write slot)."""
+    return list(range(ctx // BS + 1))
+
+
+def run_legacy(cfg, params, pool):
+    hist = [1]
+    c0 = paged_decode_step._cache_size()
+    t0 = time.perf_counter()
+    for _ in range(N_STEPS):
+        ctx = len(hist) - 1
+        bt = jnp.asarray([_blocks_for(ctx)], jnp.int32)   # exact width
+        nxt, _, pool = paged_decode_step(
+            params, pool, bt, jnp.asarray([ctx], jnp.int32),
+            jnp.asarray([hist[-1]], jnp.int32), cfg=cfg)
+        hist.append(int(nxt[0]))                          # per-step sync
+    dt = time.perf_counter() - t0
+    return dt, paged_decode_step._cache_size() - c0, hist
+
+
+def run_bucketed(cfg, params, pool, trash):
+    runner = DecodeRunner({"cfg": cfg, "params": params},
+                          block_size=BS, trash_block=trash)
+    hist = [1]
+    c0 = DecodeRunner.jit_cache_size()
+    t0 = time.perf_counter()
+    # the context counter is driver-owned (like the engine's
+    # ``context_tokens``): with the deferred token sync, len(hist) lags
+    # the device state by one step at the time blocks are allocated
+    for ctx in range(N_STEPS):
+        pool = runner.decode(
+            [DecodeRequestView(0, _blocks_for(ctx), hist)], pool)
+    runner.flush()
+    dt = time.perf_counter() - t0
+    return dt, DecodeRunner.jit_cache_size() - c0, hist, runner.stats
+
+
+def main() -> None:
+    cfg, params, pool0, trash = _setup()
+    bound = math.ceil(math.log2(MAX_PAGES)) + 1
+
+    dt_l, compiles_l, hist_l = run_legacy(cfg, params, pool0)
+    _, _, pool0, trash = _setup()                 # fresh pool (donated away)
+    dt_b, compiles_b, hist_b, stats = run_bucketed(cfg, params, pool0, trash)
+
+    assert hist_b == hist_l, "bucketed decode diverged from exact-shape path"
+    assert compiles_b <= bound, \
+        f"bucketed path compiled {compiles_b} > bound {bound}"
+
+    print(f"decode_hotpath_legacy,{dt_l / N_STEPS * 1e6:.1f},"
+          f"steps_s={N_STEPS / dt_l:.2f};compiles={compiles_l}")
+    print(f"decode_hotpath_bucketed,{dt_b / N_STEPS * 1e6:.1f},"
+          f"steps_s={N_STEPS / dt_b:.2f};compiles={compiles_b}"
+          f";bound={bound};rows_updated={stats.rows_updated}"
+          f";host_syncs={stats.host_syncs}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,12 +4,13 @@ import sys
 import time
 import traceback
 
-from benchmarks import (baselines_related_work, fig1_latency_breakdown,
-                        fig2_waiting_requests, fig8_slo_latency,
-                        fig8_throughput, fig9_callstack, fig10_ctx_switch,
-                        fig11_sensitivity, fig12_token_efficiency,
-                        fig13_cpu_memory, kernel_microbench,
-                        roofline_report, table1_microbench)
+from benchmarks import (baselines_related_work, decode_hotpath,
+                        fig1_latency_breakdown, fig2_waiting_requests,
+                        fig8_slo_latency, fig8_throughput, fig9_callstack,
+                        fig10_ctx_switch, fig11_sensitivity,
+                        fig12_token_efficiency, fig13_cpu_memory,
+                        kernel_microbench, roofline_report,
+                        table1_microbench)
 
 ALL = [
     ("fig1", fig1_latency_breakdown),
@@ -24,6 +25,7 @@ ALL = [
     ("table1", table1_microbench),
     ("baselines", baselines_related_work),
     ("kernels", kernel_microbench),
+    ("decode_hotpath", decode_hotpath),
     ("roofline", roofline_report),
 ]
 

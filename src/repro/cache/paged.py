@@ -84,7 +84,30 @@ class PagedPools:
         if not self.with_data:
             return
         bs = self.spec.block_size
+        k = np.asarray(k)
+        v = np.asarray(v)
         T = k.shape[1]
+        if T == 0:
+            return
+        if token_offset % bs == 0:
+            # fused path (the engine always writes block-aligned): one
+            # scatter for all touched blocks instead of 2 updates each.
+            # The zero-padded tail of a partial last block lies beyond the
+            # context length — masked by attention and overwritten by the
+            # decode step before it ever becomes visible.
+            L, _, H, D = k.shape
+            nblk = (T + bs - 1) // bs
+            pad = nblk * bs - T
+            if pad:
+                pw = ((0, 0), (0, pad), (0, 0), (0, 0))
+                k = np.pad(k, pw)
+                v = np.pad(v, pw)
+            b0 = token_offset // bs
+            blocks = np.asarray(block_ids[b0:b0 + nblk])
+            kv = np.stack([k, v], axis=1).reshape(L, 2, nblk, bs, H, D)
+            self.gpu = self.gpu.at[:, :, blocks].set(
+                jnp.asarray(kv, jnp.bfloat16))
+            return
         gpu = self.gpu
         for t0 in range(0, T, bs):
             t1 = min(t0 + bs, T)

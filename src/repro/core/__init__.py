@@ -9,6 +9,10 @@ from repro.core.block_group import (  # noqa: F401
     DynamicBlockGroupManager,
     OutOfBlocksError,
 )
+from repro.core.decode_runner import (  # noqa: F401
+    DecodeRequestView,
+    DecodeRunner,
+)
 from repro.core.engine import EngineMetrics, FastSwitchEngine  # noqa: F401
 from repro.core.policies import (  # noqa: F401
     DBG_ONLY,

@@ -1,0 +1,245 @@
+"""Device-resident decode runner — the real-mode token hot path.
+
+The engine's original decode loop paid three per-token costs that dwarf
+the swap overheads FastSwitch optimizes: (1) ``paged_decode_step``
+recompiled whenever the longest running request crossed a page boundary
+(the block-table width was the exact max page count), (2) the whole KV
+pool was copied every step because the jitted step returned it without
+buffer donation, and (3) every iteration rebuilt block tables in Python,
+re-uploaded them, and blocked on a device->host sync to pull each next
+token out with ``int(nxt[i])``.
+
+The DecodeRunner keeps the entire per-step decode state ON DEVICE and
+fixed-shape (DESIGN.md §3):
+
+  * **Shape bucketing** — the block-table width (pages) and the batch
+    dimension are rounded up to powers of two with high-water retention,
+    so a context that grows across P page boundaries triggers
+    O(log2(P)) compilations instead of O(P).
+  * **Persistent block tables** — a (B_bucket, pages_bucket) int32 array
+    lives on device; each step only the rows whose block lists changed
+    since the last step are scattered in (typically one row per bs
+    tokens per request).  Context lengths and last-token ids advance on
+    device inside the jitted step (``active`` mask), so steady state
+    uploads nothing at all.
+  * **Pool donation** — ``paged_decode_step_device`` donates pool,
+    context and token arrays; the per-layer KV write is in-place.
+  * **Deferred host sync** — the next-token array is NOT pulled to the
+    host at dispatch.  It is materialized lazily (``flush``) at the
+    start of the NEXT decode — after the engine's control plane for that
+    iteration has already run — so scheduling overlaps the in-flight
+    device step.  Anyone reading ``token_history`` must flush first.
+
+Row-occupancy invariant: a row is either *registered* (owned by a live
+request, block table = its pages) or *freed* (block table = trash page,
+context 0) — freed rows still execute the step, but their masked output
+is discarded and their KV write lands in the reserved trash block.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.paged import paged_decode_step_device
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+@dataclass
+class DecodeRequestView:
+    """What the runner needs to know about one decoding request."""
+    rid: int
+    block_ids: Sequence[int]       # GPU pages covering context+1 tokens
+    token_history: List[int]       # shared list; flush() appends to it
+
+
+@dataclass
+class RunnerStats:
+    steps: int = 0
+    rebuilds: int = 0              # bucket growth -> full state re-upload
+    rows_updated: int = 0          # incremental row scatters
+    host_syncs: int = 0            # deferred next-token materializations
+
+
+class DecodeRunner:
+    def __init__(self, model_bundle: dict, *, block_size: int,
+                 trash_block: int, min_pages_bucket: int = 1):
+        self.mb = model_bundle
+        self.bs = block_size
+        self.trash = trash_block
+        self._min_pages = max(1, min_pages_bucket)
+        # bucket high-water marks (never shrink: shrinking would thrash
+        # the jit cache for no memory win at these sizes)
+        self._pages_bucket = 0
+        self._batch_bucket = 0
+        # host mirrors of device state
+        self._rows: Dict[int, int] = {}               # rid -> row
+        self._row_blocks: List[Tuple[int, ...]] = []  # what device bt holds
+        self._row_ctx: List[int] = []
+        self._free: List[int] = []
+        # device state
+        self._bt = None                               # (B, P) int32
+        self._ctx = None                              # (B,) int32
+        self._tok = None                              # (B,) int32
+        self._active = None                           # (B,) bool
+        self._active_rows: frozenset = frozenset()
+        # deferred next-token sync: ([(row, token_history)], device array)
+        self._pending: Optional[Tuple[list, jnp.ndarray]] = None
+        self.stats = RunnerStats()
+
+    # ------------------------------------------------------------------
+    # deferred host sync
+    # ------------------------------------------------------------------
+
+    def flush(self) -> None:
+        """Materialize the previous step's next tokens into the request
+        histories.  One device sync for the whole batch; by the time the
+        engine calls this (start of the next decode, or before reading a
+        history) the device step has usually already finished."""
+        if self._pending is None:
+            return
+        rows_hist, nxt = self._pending
+        self._pending = None
+        vals = np.asarray(nxt)
+        self.stats.host_syncs += 1
+        for row, hist in rows_hist:
+            hist.append(int(vals[row]))
+
+    # ------------------------------------------------------------------
+    # device-state maintenance
+    # ------------------------------------------------------------------
+
+    def _rebuild(self, views: List[DecodeRequestView],
+                 pages_bucket: int, batch_bucket: int) -> None:
+        """Bucket grew: re-upload the whole (small) control state."""
+        self._pages_bucket, self._batch_bucket = pages_bucket, batch_bucket
+        self.stats.rebuilds += 1
+        self._rows = {}
+        self._row_blocks = [()] * batch_bucket
+        self._row_ctx = [0] * batch_bucket
+        bt = np.full((batch_bucket, pages_bucket), self.trash, np.int32)
+        ctx = np.zeros((batch_bucket,), np.int32)
+        tok = np.zeros((batch_bucket,), np.int32)
+        act = np.zeros((batch_bucket,), bool)
+        for i, v in enumerate(views):
+            ids = tuple(v.block_ids)
+            self._rows[v.rid] = i
+            self._row_blocks[i] = ids
+            self._row_ctx[i] = len(v.token_history) - 1
+            bt[i, :len(ids)] = ids
+            ctx[i] = self._row_ctx[i]
+            tok[i] = v.token_history[-1]
+            act[i] = True
+        self._free = list(range(len(views), batch_bucket))
+        self._bt = jnp.asarray(bt)
+        self._ctx = jnp.asarray(ctx)
+        self._tok = jnp.asarray(tok)
+        self._active = jnp.asarray(act)
+        self._active_rows = frozenset(range(len(views)))
+
+    def _update_rows(self, views: List[DecodeRequestView]) -> None:
+        """Incremental path: scatter in only the rows that changed."""
+        current = {v.rid for v in views}
+        # per-row pending write: (block_ids, ctx or None, tok or None);
+        # ctx/tok are None for continuing rows whose device counters are
+        # already right.  Keyed by row so a free + immediate re-register of
+        # the same row collapses to one write (duplicate scatter indices
+        # have undefined order).
+        pending: Dict[int, Tuple[Tuple[int, ...], Optional[int],
+                                 Optional[int]]] = {}
+        for rid in [r for r in self._rows if r not in current]:
+            row = self._rows.pop(rid)
+            self._row_blocks[row] = ()
+            self._row_ctx[row] = 0
+            self._free.append(row)
+            pending[row] = ((), 0, 0)             # point at trash, mask off
+        for v in views:
+            ids = tuple(v.block_ids)
+            row = self._rows.get(v.rid)
+            hist_ctx = len(v.token_history) - 1
+            if row is None:
+                row = self._free.pop()
+                self._rows[v.rid] = row
+                self._row_blocks[row] = ids
+                self._row_ctx[row] = hist_ctx
+                pending[row] = (ids, hist_ctx, v.token_history[-1])
+            elif self._row_ctx[row] != hist_ctx:
+                # context jumped outside the decode loop: a turn-boundary
+                # re-admission extends the history and rewrites prefill KV
+                # without the rid ever leaving the batch (no decode ran
+                # while it slept, so the row was never freed) — the device
+                # ctx/token are stale; full re-register
+                self._row_blocks[row] = ids
+                self._row_ctx[row] = hist_ctx
+                pending[row] = (ids, hist_ctx, v.token_history[-1])
+            elif ids != self._row_blocks[row]:
+                self._row_blocks[row] = ids       # page-boundary growth or
+                pending[row] = (ids, None, None)  # swap-in relocation
+        if pending:
+            pb = self._pages_bucket
+            entries = [(r, ids, c, t)
+                       for r, (ids, c, t) in sorted(pending.items())]
+            rows = jnp.asarray([e[0] for e in entries], jnp.int32)
+            btrows = np.full((len(entries), pb), self.trash, np.int32)
+            for j, (_, ids, _, _) in enumerate(entries):
+                btrows[j, :len(ids)] = ids
+            self._bt = self._bt.at[rows].set(jnp.asarray(btrows))
+            full = [(r, c, t) for r, _, c, t in entries if c is not None]
+            if full:
+                frows = jnp.asarray([f[0] for f in full], jnp.int32)
+                self._ctx = self._ctx.at[frows].set(
+                    jnp.asarray([f[1] for f in full], jnp.int32))
+                self._tok = self._tok.at[frows].set(
+                    jnp.asarray([f[2] for f in full], jnp.int32))
+            self.stats.rows_updated += len(entries)
+        active = frozenset(self._rows[v.rid] for v in views)
+        if active != self._active_rows:
+            self._active_rows = active
+            act = np.zeros((self._batch_bucket,), bool)
+            act[list(active)] = True
+            self._active = jnp.asarray(act)
+
+    # ------------------------------------------------------------------
+    # the step
+    # ------------------------------------------------------------------
+
+    def decode(self, views: List[DecodeRequestView], pool):
+        """Launch one decode step for ``views`` against ``pool``.
+
+        Returns the new pool (the passed-in pool is DONATED — the caller
+        must rebind its reference).  Next tokens stay on device until
+        ``flush()``."""
+        assert views, "decode() needs at least one request"
+        self.flush()
+        need_pages = max(len(v.block_ids) for v in views)
+        pages_bucket = max(self._pages_bucket,
+                           next_pow2(max(need_pages, self._min_pages)))
+        batch_bucket = max(self._batch_bucket, next_pow2(len(views)))
+        if (pages_bucket != self._pages_bucket
+                or batch_bucket != self._batch_bucket):
+            self._rebuild(views, pages_bucket, batch_bucket)
+        else:
+            self._update_rows(views)
+
+        nxt, pool, self._ctx, self._tok = paged_decode_step_device(
+            self.mb["params"], pool, self._bt, self._ctx, self._tok,
+            self._active, cfg=self.mb["cfg"])
+        self._pending = ([(self._rows[v.rid], v.token_history)
+                          for v in views], nxt)
+        for v in views:
+            self._row_ctx[self._rows[v.rid]] += 1
+        self.stats.steps += 1
+        return pool
+
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def jit_cache_size() -> int:
+        """Compiled-variant count of the decode step (all shapes/configs
+        in this process) — the recompile metric for decode_hotpath."""
+        return int(paged_decode_step_device._cache_size())

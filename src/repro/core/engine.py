@@ -32,7 +32,9 @@ import numpy as np
 from repro.cache.paged import PagedPools, PoolSpec
 from repro.core.block_group import (DynamicBlockGroupManager,
                                     OutOfBlocksError)
+from repro.core.decode_runner import DecodeRequestView, DecodeRunner
 from repro.core.policies import EngineConfig
+from repro.kernels.block_copy import runs_to_indices
 from repro.core.reuse import KVCacheReuseManager
 from repro.core.scheduler import PriorityScheduler, Request, ReqState
 from repro.core.swap_manager import MultithreadingSwapManager, SimClock
@@ -136,6 +138,13 @@ class FastSwitchEngine:
         self._token_hist_by_conv: Dict[int, List[int]] = {}
         # per-request CPU block-id mirror for the data plane
         self._trash_block = config.num_gpu_blocks - 1
+        # device-resident decode hot path (real mode): persistent block
+        # tables, bucketed shapes, donated pool — see DESIGN.md §3
+        self.runner: Optional[DecodeRunner] = None
+        if self.pools is not None:
+            self.runner = DecodeRunner(
+                model_bundle, block_size=config.block_size,
+                trash_block=self._trash_block)
 
     # ------------------------------------------------------------------
     # helpers
@@ -157,7 +166,7 @@ class FastSwitchEngine:
         pol = self.config.policy
         if pol.use_block_groups:
             return runs
-        blocks = [b for s, n in runs for b in range(s, s + n)]
+        blocks = runs_to_indices(runs)
         mb = max(1, pol.merge_buffer_blocks)
         if mb == 1:
             return [(b, 1) for b in blocks]
@@ -203,7 +212,7 @@ class FastSwitchEngine:
             rid, total, requesting_priority=self.sched.priority(rid))
         valid_before = total - inc
         gpu_runs = self._runs_for_tokens(rid, valid_before, total)
-        gpu_blocks = [b for s, n in gpu_runs for b in range(s, s + n)]
+        gpu_blocks = runs_to_indices(gpu_runs)
         if gpu_runs:
             # conflicts: blocks we're about to read may be swap-in targets
             self.swap.resolve_conflicts(self.clock, gpu_blocks)
@@ -233,7 +242,7 @@ class FastSwitchEngine:
             self.gpu_mgr.release_request(rid)
             return False                     # stays swapped; retry later
         gpu_runs = self.gpu_mgr.request_runs(rid)
-        gpu_blocks = [b for s, n in gpu_runs for b in range(s, s + n)]
+        gpu_blocks = runs_to_indices(gpu_runs)
         # the newly allocated target blocks may still be the SOURCE of an
         # in-flight swap-out — synchronize before overwriting them
         self.swap.resolve_conflicts(self.clock, gpu_blocks)
@@ -305,7 +314,7 @@ class FastSwitchEngine:
             self.gpu_mgr.release_request(rid)   # roll back partial alloc
             return False
         gpu_runs = self.gpu_mgr.request_runs(rid)
-        gpu_blocks = [b for s, n in gpu_runs for b in range(s, s + n)]
+        gpu_blocks = runs_to_indices(gpu_runs)
         self.swap.resolve_conflicts(self.clock, gpu_blocks)
         # prefix-with-prefill: reused tokens are swapped in, the rest computed
         if reused > 0:
@@ -321,8 +330,7 @@ class FastSwitchEngine:
                 len(self.sched.running), n_reused_blocks)
             self.swap.dispatch(
                 self.clock, rid, "in", self._transfer_runs(runs_in),
-                self.block_bytes,
-                [b for s, n in runs_in for b in range(s, s + n)],
+                self.block_bytes, runs_to_indices(runs_in),
                 asynchronous=False,          # prefill needs the prefix NOW
                 copy_fn=(self._make_copy_in(rid, reused)
                          if self.pools is not None else None))
@@ -381,9 +389,9 @@ class FastSwitchEngine:
 
     def _real_reprefill(self, req: Request) -> None:
         import jax.numpy as jnp
-        import numpy as np
 
         from repro.models.paged import prefill_kv
+        self.runner.flush()          # history must be current before re-read
         mb = self.model_bundle
         hist = req.token_history
         # KV for all but the last token (its K/V is written by the next
@@ -403,6 +411,7 @@ class FastSwitchEngine:
         import jax.numpy as jnp
 
         from repro.models.paged import prefill_kv
+        self.runner.flush()          # history must be current before extend
         mb = self.model_bundle
         cfg = mb["cfg"]
         rid = req.rid
@@ -417,39 +426,20 @@ class FastSwitchEngine:
         logits, k, v = prefill_kv(mb["params"], tokens, cfg=cfg)
         ids = self.gpu_mgr.request_block_ids(rid)
         with self.swap._pool_lock:
-            self.pools.write_tokens(ids, 0, np.asarray(k.transpose(0, 1, 2, 3)),
-                                    np.asarray(v))
+            self.pools.write_tokens(ids, 0, np.asarray(k), np.asarray(v))
         first = int(np.argmax(np.asarray(logits)))
         hist.append(first)
 
     def _real_decode(self, rids: List[int]) -> None:
-        """Batched paged decode for the running requests."""
-        import jax.numpy as jnp
-
-        from repro.models.paged import paged_decode_step
-        mb = self.model_bundle
-        cfg = mb["cfg"]
-        B = self.config.max_batch
-        bs = self.config.block_size
-        n_pages = max(
-            (len(self.gpu_mgr.request_block_ids(r)) for r in rids), default=1)
-        bt = np.full((B, n_pages), self._trash_block, np.int32)
-        ctx = np.zeros((B,), np.int32)
-        toks = np.zeros((B,), np.int32)
-        for i, r in enumerate(rids):
-            ids = self.gpu_mgr.request_block_ids(r)
-            bt[i, :len(ids)] = ids
-            req = self._req(r)
-            ctx[i] = len(req.token_history) - 1
-            toks[i] = req.token_history[-1]
+        """Batched paged decode through the device-resident runner: only
+        changed block-table rows are uploaded, the pool is donated, and
+        the next-token host sync is deferred to the next iteration's
+        decode (overlapping this step with the next control plane)."""
+        views = [DecodeRequestView(r, self.gpu_mgr.request_block_ids(r),
+                                   self._req(r).token_history)
+                 for r in rids]
         with self.swap._pool_lock:
-            nxt, _, new_pool = paged_decode_step(
-                mb["params"], self.pools.gpu, jnp.asarray(bt),
-                jnp.asarray(ctx), jnp.asarray(toks), cfg=cfg)
-            self.pools.gpu = new_pool
-        nxt = np.asarray(nxt)
-        for i, r in enumerate(rids):
-            self._req(r).token_history.append(int(nxt[i]))
+            self.pools.gpu = self.runner.decode(views, self.pools.gpu)
 
     # ------------------------------------------------------------------
     # the iteration
@@ -607,6 +597,8 @@ class FastSwitchEngine:
 
     def _finish_turn(self, rid: int) -> None:
         req = self._req(rid)
+        if self.runner is not None:
+            self.runner.flush()      # materialize the turn's last tokens
         if req.token_history:
             self._token_hist_by_conv[rid] = list(req.token_history)
         # retain the KV copy for the next turn (reuse mechanism); baseline
@@ -649,5 +641,7 @@ class FastSwitchEngine:
         while not self.done() and it < max_iterations:
             self.step()
             it += 1
+        if self.runner is not None:
+            self.runner.flush()
         self.swap.shutdown()
         return self.metrics

@@ -141,6 +141,9 @@ class MultithreadingSwapManager:
         n_ops, n_blocks, nbytes, disp, ex = self._op_costs(
             runs, block_bytes, h2d)
         sync_cost = self._sync_points(n_ops)
+        # capture the issue time BEFORE any synchronous stall advances the
+        # clock, or sync tasks would record issued_at == done_at
+        issued_at = clock.now_us
         start = max(clock.now_us, self.stream_free_at)
         duration = disp + ex + sync_cost
         done_at = start + duration
@@ -158,7 +161,7 @@ class MultithreadingSwapManager:
 
         task = SwapTask(req_id=req_id, direction=direction, n_ops=n_ops,
                         n_blocks=n_blocks, bytes_total=nbytes,
-                        issued_at=clock.now_us, done_at=done_at,
+                        issued_at=issued_at, done_at=done_at,
                         gpu_blocks=set(gpu_blocks),
                         synchronous=not asynchronous)
         if copy_fn is not None:

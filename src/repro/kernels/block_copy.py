@@ -104,9 +104,9 @@ def block_copy_grouped(src_pool, dst_pool, src_starts, dst_starts, run_lens,
       run_lens.astype(jnp.int32), dst_pool, src_pool)
 
 
-def runs_to_indices(runs: List[Tuple[int, int]]) -> Tuple[list, list]:
-    """Expand [(start, n)] to per-block index lists."""
-    idx = []
+def runs_to_indices(runs: List[Tuple[int, int]]) -> List[int]:
+    """Expand [(start, n)] runs to ONE flat per-block index list."""
+    idx: List[int] = []
     for start, n in runs:
         idx.extend(range(start, start + n))
     return idx

@@ -19,9 +19,11 @@ INTERPRET = True
 
 
 def paged_attention(q, k_pool, v_pool, block_tables, context_lens, scale,
+                    pages_per_compute_block: int = 1,
                     interpret: bool | None = None):
     return _pa.paged_attention(q, k_pool, v_pool, block_tables, context_lens,
                                scale,
+                               pages_per_compute_block=pages_per_compute_block,
                                interpret=INTERPRET if interpret is None else interpret)
 
 

@@ -4,6 +4,17 @@ Runs a uniform-pattern GQA transformer one token per sequence against the
 paged GPU pool via block tables, using the Pallas paged-attention kernel.
 The engine pads the batch to a fixed size; padding rows point their block
 table at a reserved trash block and are masked by the caller.
+
+Hot-path contract (see DESIGN.md §3):
+  * ``paged_decode_step`` / ``paged_decode_step_device`` DONATE the pool
+    operand — the per-layer KV write is an in-place scatter, not a
+    full-pool copy per token.  Callers must rebind their pool reference to
+    the returned array; the donated input buffer is invalid afterwards.
+  * ``paged_decode_step_device`` additionally donates and returns the
+    context-length and last-token arrays so steady-state decode keeps its
+    entire per-step state device-resident (the DecodeRunner threads it).
+  * Shapes (batch, n_pages) must be bucketed by the caller — every unique
+    shape is one XLA compilation.
 """
 from __future__ import annotations
 
@@ -25,20 +36,29 @@ def supports_paged(cfg: ModelConfig) -> bool:
             and not cfg.encoder_decoder)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def paged_decode_step(params, pool, block_tables, context_lens, tokens,
-                      *, cfg: ModelConfig):
-    """pool: (L, 2, nb, bs, Hkv, D); block_tables: (B, n_pages) int32;
-    context_lens: (B,) tokens already cached; tokens: (B,) int32 current
-    input tokens.  Returns (next_tokens, logits, new_pool)."""
+def page_tile(n_pages: int) -> int:
+    """Pages streamed per attention grid step: the largest of {4, 2, 1}
+    dividing n_pages (bucketed page counts are powers of two, so steady
+    state always gets the 4-page tile)."""
+    for p in (4, 2):
+        if n_pages % p == 0 and n_pages >= p:
+            return p
+    return 1
+
+
+def _decode_core(params, pool, block_tables, context_lens, tokens,
+                 cfg: ModelConfig):
+    """Shared decode body: one token per row through the paged pool."""
     assert supports_paged(cfg), cfg.name
     B = tokens.shape[0]
     bs = pool.shape[3]
+    n_pages = block_tables.shape[1]
     x = L.embed(params["embed"], tokens[:, None])          # (B, 1, d)
     positions = context_lens[:, None]                      # rope positions
     scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
     use_moe = cfg.moe is not None
     barange = jnp.arange(B)
+    ppcb = page_tile(n_pages)
 
     def body(x, xs):
         lp, pool_l = xs                                    # pool_l: (2,nb,bs,H,D)
@@ -51,7 +71,8 @@ def paged_decode_step(params, pool, block_tables, context_lens, tokens,
         pool_l = pool_l.at[0, blk, off].set(k[:, 0].astype(pool_l.dtype))
         pool_l = pool_l.at[1, blk, off].set(v[:, 0].astype(pool_l.dtype))
         a = ops.paged_attention(q[:, 0], pool_l[0], pool_l[1],
-                                block_tables, context_lens + 1, scale)
+                                block_tables, context_lens + 1, scale,
+                                pages_per_compute_block=ppcb)
         x = x + (a.reshape(B, 1, -1) @ lp["attn"]["wo"].astype(x.dtype))
         h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
         if use_moe:
@@ -66,6 +87,32 @@ def paged_decode_step(params, pool, block_tables, context_lens, tokens,
     logits = L.unembed(head, x[:, 0])
     next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return next_tokens, logits, new_pool
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
+def paged_decode_step(params, pool, block_tables, context_lens, tokens,
+                      *, cfg: ModelConfig):
+    """pool: (L, 2, nb, bs, Hkv, D) — DONATED (in-place KV write);
+    block_tables: (B, n_pages) int32; context_lens: (B,) tokens already
+    cached; tokens: (B,) int32 current input tokens.
+    Returns (next_tokens, logits, new_pool)."""
+    return _decode_core(params, pool, block_tables, context_lens, tokens, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnums=(1, 3, 4))
+def paged_decode_step_device(params, pool, block_tables, context_lens,
+                             tokens, active, *, cfg: ModelConfig):
+    """Device-resident variant for the DecodeRunner: pool, context_lens and
+    tokens are DONATED and threaded step to step without host round-trips.
+    ``active``: (B,) bool — rows decoding this step.  Inactive rows keep
+    their state and their (masked, trash-directed) compute is discarded.
+    Returns (next_tokens, new_pool, new_context_lens, new_tokens)."""
+    nxt, _, new_pool = _decode_core(params, pool, block_tables,
+                                    context_lens, tokens, cfg)
+    new_ctx = jnp.where(active, context_lens + 1, context_lens)
+    new_tok = jnp.where(active, nxt, tokens)
+    return nxt, new_pool, new_ctx, new_tok
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))

@@ -2,7 +2,10 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="dev-only dep; see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.block_group import (DynamicBlockGroupManager,
                                     OutOfBlocksError)

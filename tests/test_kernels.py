@@ -39,6 +39,29 @@ def test_paged_attention_sweep(B, Hq, Hkv, D, bs, npages, dtype):
                                atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("ppcb", [1, 2, 4])
+@pytest.mark.parametrize("npages", [3, 4, 5, 8])
+def test_paged_attention_multipage_tiles(ppcb, npages):
+    """pages_per_compute_block > 1 streams several KV pages per grid step;
+    npages not divisible by ppcb exercises the ragged final tile."""
+    B, Hq, Hkv, D, bs = 2, 8, 2, 64, 16
+    nb = npages * B + 3
+    ks = jax.random.split(jax.random.PRNGKey(42), 4)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    kp = jax.random.normal(ks[1], (nb, bs, Hkv, D))
+    vp = jax.random.normal(ks[2], (nb, bs, Hkv, D))
+    bt = jax.random.permutation(ks[3], nb)[:B * npages] \
+        .reshape(B, npages).astype(jnp.int32)
+    ctx = jnp.asarray(np.linspace(1, npages * bs, B).astype(np.int32))
+    scale = D ** -0.5
+    out = paged_attention(q, kp, vp, bt, ctx, scale,
+                          pages_per_compute_block=ppcb)
+    ref = paged_attention_ref(q, jnp.stack([kp, vp]), bt, ctx, scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=1e-5, rtol=1e-5)
+
+
 def test_paged_attention_zero_context_is_finite():
     q = jnp.ones((2, 4, 64))
     kp = jnp.ones((4, 16, 2, 64))

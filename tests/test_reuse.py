@@ -1,5 +1,9 @@
 """KV Cache Reuse Mechanism invariants (FastSwitch §3.3)."""
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="dev-only dep; see requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.reuse import KVCacheReuseManager
 
