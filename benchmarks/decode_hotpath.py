@@ -1,17 +1,25 @@
-"""Decode hot-path benchmark: steps/s and jit-cache growth over a
-growing-context run (ISSUE 1 acceptance: bucketed shapes compile
-O(log2 max_pages) variants, the legacy exact-shape path compiled one per
-page-boundary crossing).
+"""Decode hot-path benchmark: steps/s, jit-cache growth and prefill
+insertion over a growing-context run (ISSUE 1 acceptance: bucketed
+shapes compile O(log2 max_pages) variants, the legacy exact-shape path
+compiled one per page-boundary crossing; ISSUE 2: runner-managed prefill
+insertion replaces the host KV round-trip).
 
-Two single-request runs over the same token budget, context growing from
-1 token across >= 8 page boundaries:
+Single-request runs over the same token budget, context growing from
+1 token across page boundaries:
   * ``legacy``   — exact-width block tables through ``paged_decode_step``
                    (recompiles at every page boundary, host sync per step)
   * ``bucketed`` — the DecodeRunner (persistent device block table,
                    pow2 buckets, donated pool, deferred token sync)
+plus a prefill-insertion comparison:
+  * ``prefill_host``   — ``PagedPools.write_tokens``-style path: KV pulled
+                         to the host and scattered back per request
+  * ``prefill_runner`` — ``DecodeRunner.prefill``: jitted shape-bucketed
+                         scatter, KV stays on device end to end
 
 CSV: name,us_per_call,derived  (derived = steps/s and compile counts).
+``--smoke`` shrinks the run for the tier-1 verify wrapper.
 """
+import argparse
 import math
 import time
 
@@ -21,18 +29,17 @@ import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.core.decode_runner import DecodeRequestView, DecodeRunner
+from repro.kernels.ops import insert_prefill_cache_size
 from repro.models import transformer as T
-from repro.models.paged import paged_decode_step, paged_decode_step_device
+from repro.models.paged import paged_decode_step, prefill_kv
 
 BS = 8              # tokens per page (small so boundaries come fast)
-MAX_PAGES = 10      # context grows across MAX_PAGES - 1 = 9 boundaries
-N_STEPS = MAX_PAGES * BS - 2
 
 
-def _setup():
+def _setup(max_pages):
     cfg = get_smoke_config("qwen2-1.5b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    nb = MAX_PAGES + 2                      # + spare + trash
+    nb = max_pages + 2                      # + spare + trash
     pool = jnp.zeros((cfg.n_layers, 2, nb, BS, cfg.n_kv_heads,
                       cfg.resolved_head_dim), jnp.bfloat16)
     return cfg, params, pool, nb - 1        # trash = last block
@@ -43,11 +50,11 @@ def _blocks_for(ctx: int) -> list:
     return list(range(ctx // BS + 1))
 
 
-def run_legacy(cfg, params, pool):
+def run_legacy(cfg, params, pool, n_steps):
     hist = [1]
     c0 = paged_decode_step._cache_size()
     t0 = time.perf_counter()
-    for _ in range(N_STEPS):
+    for _ in range(n_steps):
         ctx = len(hist) - 1
         bt = jnp.asarray([_blocks_for(ctx)], jnp.int32)   # exact width
         nxt, _, pool = paged_decode_step(
@@ -58,7 +65,7 @@ def run_legacy(cfg, params, pool):
     return dt, paged_decode_step._cache_size() - c0, hist
 
 
-def run_bucketed(cfg, params, pool, trash):
+def run_bucketed(cfg, params, pool, trash, n_steps):
     runner = DecodeRunner({"cfg": cfg, "params": params},
                           block_size=BS, trash_block=trash)
     hist = [1]
@@ -67,7 +74,7 @@ def run_bucketed(cfg, params, pool, trash):
     # the context counter is driver-owned (like the engine's
     # ``context_tokens``): with the deferred token sync, len(hist) lags
     # the device state by one step at the time blocks are allocated
-    for ctx in range(N_STEPS):
+    for ctx in range(n_steps):
         pool = runner.decode(
             [DecodeRequestView(0, _blocks_for(ctx), hist)], pool)
     runner.flush()
@@ -75,24 +82,84 @@ def run_bucketed(cfg, params, pool, trash):
     return dt, DecodeRunner.jit_cache_size() - c0, hist, runner.stats
 
 
-def main() -> None:
-    cfg, params, pool0, trash = _setup()
-    bound = math.ceil(math.log2(MAX_PAGES)) + 1
+def run_prefill_host(cfg, params, pool, prompts):
+    """Legacy path, exactly as the pre-refactor engine ran it: KV pulled
+    to the host, then ``PagedPools.write_tokens`` (fused block-aligned
+    scatter) back into the pool."""
+    from repro.cache.paged import PagedPools, PoolSpec
+    nb = pool.shape[2]
+    pools = PagedPools(PoolSpec(n_layers=cfg.n_layers,
+                                n_kv_heads=cfg.n_kv_heads,
+                                head_dim=cfg.resolved_head_dim,
+                                block_size=BS, num_gpu_blocks=nb,
+                                num_cpu_blocks=1))
+    pools.gpu = pool
+    t0 = time.perf_counter()
+    for toks in prompts:
+        _, k, v = prefill_kv(params, jnp.asarray([toks], jnp.int32), cfg=cfg)
+        nblk = (len(toks) + BS - 1) // BS
+        pools.write_tokens(list(range(nblk)), 0,
+                           np.asarray(k), np.asarray(v))  # d2h round trip
+    pools.gpu.block_until_ready()
+    return time.perf_counter() - t0, pools.gpu
 
-    dt_l, compiles_l, hist_l = run_legacy(cfg, params, pool0)
-    _, _, pool0, trash = _setup()                 # fresh pool (donated away)
-    dt_b, compiles_b, hist_b, stats = run_bucketed(cfg, params, pool0, trash)
+
+def run_prefill_runner(cfg, params, pool, trash, prompts):
+    """Runner-managed insertion: device-resident, bucketed jit scatter."""
+    runner = DecodeRunner({"cfg": cfg, "params": params},
+                          block_size=BS, trash_block=trash)
+    c0 = insert_prefill_cache_size()
+    t0 = time.perf_counter()
+    for toks in prompts:
+        hist = list(toks)
+        view = DecodeRequestView(0, _blocks_for(len(hist) - 1), hist)
+        pool = runner.prefill(view, pool, emit_first=True)
+    pool.block_until_ready()
+    return time.perf_counter() - t0, insert_prefill_cache_size() - c0, pool
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced run for the tier-1 verify wrapper")
+    # parse_known_args: benchmarks/run.py invokes main() with its own
+    # positional selectors still in sys.argv
+    args, _ = ap.parse_known_args()
+    max_pages = 4 if args.smoke else 10
+    n_steps = max_pages * BS - 2
+    bound = math.ceil(math.log2(max_pages)) + 1
+
+    cfg, params, pool0, trash = _setup(max_pages)
+    dt_l, compiles_l, hist_l = run_legacy(cfg, params, pool0, n_steps)
+    _, _, pool0, trash = _setup(max_pages)        # fresh pool (donated away)
+    dt_b, compiles_b, hist_b, stats = run_bucketed(cfg, params, pool0,
+                                                   trash, n_steps)
 
     assert hist_b == hist_l, "bucketed decode diverged from exact-shape path"
     assert compiles_b <= bound, \
         f"bucketed path compiled {compiles_b} > bound {bound}"
 
-    print(f"decode_hotpath_legacy,{dt_l / N_STEPS * 1e6:.1f},"
-          f"steps_s={N_STEPS / dt_l:.2f};compiles={compiles_l}")
-    print(f"decode_hotpath_bucketed,{dt_b / N_STEPS * 1e6:.1f},"
-          f"steps_s={N_STEPS / dt_b:.2f};compiles={compiles_b}"
+    print(f"decode_hotpath_legacy,{dt_l / n_steps * 1e6:.1f},"
+          f"steps_s={n_steps / dt_l:.2f};compiles={compiles_l}")
+    print(f"decode_hotpath_bucketed,{dt_b / n_steps * 1e6:.1f},"
+          f"steps_s={n_steps / dt_b:.2f};compiles={compiles_b}"
           f";bound={bound};rows_updated={stats.rows_updated}"
           f";host_syncs={stats.host_syncs}")
+
+    # prefill insertion: same prompt lengths through both paths
+    rng = np.random.RandomState(0)
+    lens = [5, 11, 18, 25][: 2 if args.smoke else 4]
+    prompts = [rng.randint(1, cfg.vocab_size, n).tolist() for n in lens]
+    _, _, pool0, trash = _setup(max_pages)
+    dt_h, _ = run_prefill_host(cfg, params, pool0, prompts)
+    _, _, pool0, trash = _setup(max_pages)
+    dt_r, icompiles, _ = run_prefill_runner(cfg, params, pool0, trash,
+                                            prompts)
+    n = len(prompts)
+    print(f"prefill_insert_host,{dt_h / n * 1e6:.1f},"
+          f"prefills_s={n / dt_h:.2f}")
+    print(f"prefill_insert_runner,{dt_r / n * 1e6:.1f},"
+          f"prefills_s={n / dt_r:.2f};insert_compiles={icompiles}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,9 @@
+#!/usr/bin/env sh
+# Tier-1 verify in one command (ISSUE 2 tooling satellite):
+#   scripts/tier1.sh            # full test suite + hot-path smoke bench
+#   scripts/tier1.sh -k engine  # extra args forwarded to pytest
+set -e
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m pytest -x -q "$@"
+python benchmarks/decode_hotpath.py --smoke

@@ -80,7 +80,11 @@ class PagedPools:
     def write_tokens(self, block_ids: List[int], token_offset: int,
                      k: np.ndarray, v: np.ndarray) -> None:
         """Write per-layer K/V for contiguous tokens into the paged GPU pool.
-        k, v: (L, T, Hkv, D); token_offset = index of first token in request."""
+        k, v: (L, T, Hkv, D); token_offset = index of first token in request.
+
+        Host-side data-plane utility (tools/tests/parity baselines): the
+        engine's prefill path now inserts KV on device through the
+        DecodeRunner (``kernels.ops.insert_prefill``, DESIGN.md §3.5)."""
         if not self.with_data:
             return
         bs = self.spec.block_size

@@ -30,6 +30,23 @@ fixed-shape (DESIGN.md §3):
     iteration has already run — so scheduling overlaps the in-flight
     device step.  Anyone reading ``token_history`` must flush first.
 
+The runner is also the single owner of the rest of the real-mode token
+pipeline (DESIGN.md §3.5/§3.6):
+
+  * **Runner-managed prefill insertion** — ``prefill()`` computes KV for
+    a (re-)admitted request and scatters it into the donated pool
+    through the block table with a jitted, shape-bucketed insert
+    (``kernels.ops.insert_prefill``), then registers the row directly in
+    the persistent device tables; the engine no longer round-trips
+    prefill KV through the host (``PagedPools.write_tokens``).
+  * **Device-side sampling** — temperature/top-k/top-p sampling is fused
+    into the decode step with a per-row on-device array of base PRNG
+    keys; the step folds the position in, so the random stream is a pure
+    function of (seed, rid, position).  The parameters are traced
+    scalars, so greedy (temperature 0, bit-exact argmax) and sampled
+    runs share one compiled variant and the deferred sync stays one
+    token array per step.
+
 Row-occupancy invariant: a row is either *registered* (owned by a live
 request, block table = its pages) or *freed* (block table = trash page,
 context 0) — freed rows still execute the step, but their masked output
@@ -40,10 +57,13 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.paged import paged_decode_step_device
+from repro.kernels import ops
+from repro.models.paged import (paged_decode_step_device, prefill_kv,
+                                sample_tokens)
 
 
 def next_pow2(n: int) -> int:
@@ -64,15 +84,24 @@ class RunnerStats:
     rebuilds: int = 0              # bucket growth -> full state re-upload
     rows_updated: int = 0          # incremental row scatters
     host_syncs: int = 0            # deferred next-token materializations
+    prefills: int = 0              # runner-managed prefill insertions
 
 
 class DecodeRunner:
     def __init__(self, model_bundle: dict, *, block_size: int,
-                 trash_block: int, min_pages_bucket: int = 1):
+                 trash_block: int, min_pages_bucket: int = 1,
+                 temperature: float = 0.0, top_k: int = 0,
+                 top_p: float = 1.0, seed: int = 0):
         self.mb = model_bundle
         self.bs = block_size
         self.trash = trash_block
         self._min_pages = max(1, min_pages_bucket)
+        # sampling config: traced scalars (uploaded once, never a new
+        # compiled variant) + the base PRNG key the per-row keys fold from
+        self._temp = jnp.float32(temperature)
+        self._top_k = jnp.int32(top_k)
+        self._top_p = jnp.float32(top_p)
+        self._base_key = jax.random.PRNGKey(seed)
         # bucket high-water marks (never shrink: shrinking would thrash
         # the jit cache for no memory win at these sizes)
         self._pages_bucket = 0
@@ -86,11 +115,22 @@ class DecodeRunner:
         self._bt = None                               # (B, P) int32
         self._ctx = None                              # (B,) int32
         self._tok = None                              # (B,) int32
+        self._keys = None                             # (B, 2) uint32
         self._active = None                           # (B,) bool
         self._active_rows: frozenset = frozenset()
         # deferred next-token sync: ([(row, token_history)], device array)
         self._pending: Optional[Tuple[list, jnp.ndarray]] = None
         self.stats = RunnerStats()
+
+    def _row_key(self, rid: int, salt: int = 0):
+        """Position-independent per-row base PRNG key, folded from
+        (seed, rid).  The decode step folds the position in on device
+        (``sample_tokens``), so the sampled stream is a pure function of
+        (seed, rid, position) — reproducible under any preemption order,
+        row re-registration or bucket rebuild.  ``salt`` separates the
+        prefill first-token draw from the row's decode stream."""
+        k = jax.random.fold_in(self._base_key, rid)
+        return jax.random.fold_in(k, salt) if salt else k
 
     # ------------------------------------------------------------------
     # deferred host sync
@@ -125,6 +165,7 @@ class DecodeRunner:
         bt = np.full((batch_bucket, pages_bucket), self.trash, np.int32)
         ctx = np.zeros((batch_bucket,), np.int32)
         tok = np.zeros((batch_bucket,), np.int32)
+        keys = np.zeros((batch_bucket, 2), np.uint32)
         act = np.zeros((batch_bucket,), bool)
         for i, v in enumerate(views):
             ids = tuple(v.block_ids)
@@ -134,30 +175,61 @@ class DecodeRunner:
             bt[i, :len(ids)] = ids
             ctx[i] = self._row_ctx[i]
             tok[i] = v.token_history[-1]
+            keys[i] = np.asarray(self._row_key(v.rid))
             act[i] = True
         self._free = list(range(len(views), batch_bucket))
         self._bt = jnp.asarray(bt)
         self._ctx = jnp.asarray(ctx)
         self._tok = jnp.asarray(tok)
+        self._keys = jnp.asarray(keys)
         self._active = jnp.asarray(act)
         self._active_rows = frozenset(range(len(views)))
+
+    def _scatter_rows(self, pending: Dict[int, Tuple[Tuple[int, ...],
+                                                     Optional[int],
+                                                     Optional[int],
+                                                     Optional[np.ndarray]]]
+                      ) -> None:
+        """One batched device scatter for the changed rows.  Entry value is
+        (block_ids, ctx, tok, key_data); ctx/tok/key are None for rows
+        whose device counters are already right (block-table-only write)."""
+        if not pending:
+            return
+        pb = self._pages_bucket
+        entries = [(r, ids, c, t, kd)
+                   for r, (ids, c, t, kd) in sorted(pending.items())]
+        rows = jnp.asarray([e[0] for e in entries], jnp.int32)
+        btrows = np.full((len(entries), pb), self.trash, np.int32)
+        for j, (_, ids, _, _, _) in enumerate(entries):
+            btrows[j, :len(ids)] = ids
+        self._bt = self._bt.at[rows].set(jnp.asarray(btrows))
+        full = [(r, c, t, kd) for r, _, c, t, kd in entries if c is not None]
+        if full:
+            frows = jnp.asarray([f[0] for f in full], jnp.int32)
+            self._ctx = self._ctx.at[frows].set(
+                jnp.asarray([f[1] for f in full], jnp.int32))
+            self._tok = self._tok.at[frows].set(
+                jnp.asarray([f[2] for f in full], jnp.int32))
+            self._keys = self._keys.at[frows].set(
+                jnp.asarray(np.stack([np.asarray(f[3], np.uint32)
+                                      for f in full])))
+        self.stats.rows_updated += len(entries)
 
     def _update_rows(self, views: List[DecodeRequestView]) -> None:
         """Incremental path: scatter in only the rows that changed."""
         current = {v.rid for v in views}
-        # per-row pending write: (block_ids, ctx or None, tok or None);
-        # ctx/tok are None for continuing rows whose device counters are
-        # already right.  Keyed by row so a free + immediate re-register of
-        # the same row collapses to one write (duplicate scatter indices
-        # have undefined order).
+        # per-row pending write, keyed by row so a free + immediate
+        # re-register of the same row collapses to one write (duplicate
+        # scatter indices have undefined order)
         pending: Dict[int, Tuple[Tuple[int, ...], Optional[int],
-                                 Optional[int]]] = {}
+                                 Optional[int], Optional[np.ndarray]]] = {}
+        zero_key = np.zeros((2,), np.uint32)
         for rid in [r for r in self._rows if r not in current]:
             row = self._rows.pop(rid)
             self._row_blocks[row] = ()
             self._row_ctx[row] = 0
             self._free.append(row)
-            pending[row] = ((), 0, 0)             # point at trash, mask off
+            pending[row] = ((), 0, 0, zero_key)   # point at trash, mask off
         for v in views:
             ids = tuple(v.block_ids)
             row = self._rows.get(v.rid)
@@ -167,7 +239,8 @@ class DecodeRunner:
                 self._rows[v.rid] = row
                 self._row_blocks[row] = ids
                 self._row_ctx[row] = hist_ctx
-                pending[row] = (ids, hist_ctx, v.token_history[-1])
+                pending[row] = (ids, hist_ctx, v.token_history[-1],
+                                self._row_key(v.rid))
             elif self._row_ctx[row] != hist_ctx:
                 # context jumped outside the decode loop: a turn-boundary
                 # re-admission extends the history and rewrites prefill KV
@@ -176,27 +249,12 @@ class DecodeRunner:
                 # ctx/token are stale; full re-register
                 self._row_blocks[row] = ids
                 self._row_ctx[row] = hist_ctx
-                pending[row] = (ids, hist_ctx, v.token_history[-1])
+                pending[row] = (ids, hist_ctx, v.token_history[-1],
+                                self._row_key(v.rid))
             elif ids != self._row_blocks[row]:
                 self._row_blocks[row] = ids       # page-boundary growth or
-                pending[row] = (ids, None, None)  # swap-in relocation
-        if pending:
-            pb = self._pages_bucket
-            entries = [(r, ids, c, t)
-                       for r, (ids, c, t) in sorted(pending.items())]
-            rows = jnp.asarray([e[0] for e in entries], jnp.int32)
-            btrows = np.full((len(entries), pb), self.trash, np.int32)
-            for j, (_, ids, _, _) in enumerate(entries):
-                btrows[j, :len(ids)] = ids
-            self._bt = self._bt.at[rows].set(jnp.asarray(btrows))
-            full = [(r, c, t) for r, _, c, t in entries if c is not None]
-            if full:
-                frows = jnp.asarray([f[0] for f in full], jnp.int32)
-                self._ctx = self._ctx.at[frows].set(
-                    jnp.asarray([f[1] for f in full], jnp.int32))
-                self._tok = self._tok.at[frows].set(
-                    jnp.asarray([f[2] for f in full], jnp.int32))
-            self.stats.rows_updated += len(entries)
+                pending[row] = (ids, None, None, None)  # swap-in relocation
+        self._scatter_rows(pending)
         active = frozenset(self._rows[v.rid] for v in views)
         if active != self._active_rows:
             self._active_rows = active
@@ -226,15 +284,102 @@ class DecodeRunner:
         else:
             self._update_rows(views)
 
-        nxt, pool, self._ctx, self._tok = paged_decode_step_device(
-            self.mb["params"], pool, self._bt, self._ctx, self._tok,
-            self._active, cfg=self.mb["cfg"])
+        nxt, pool, self._ctx, self._tok = \
+            paged_decode_step_device(
+                self.mb["params"], pool, self._bt, self._ctx, self._tok,
+                self._active, self._keys, self._temp, self._top_k,
+                self._top_p, cfg=self.mb["cfg"])
         self._pending = ([(self._rows[v.rid], v.token_history)
                           for v in views], nxt)
         for v in views:
             self._row_ctx[self._rows[v.rid]] += 1
         self.stats.steps += 1
         return pool
+
+    # ------------------------------------------------------------------
+    # runner-managed prefill insertion
+    # ------------------------------------------------------------------
+
+    def _register(self, view: DecodeRequestView) -> bool:
+        """Write a (re-)admitted request's row state straight through the
+        persistent device tables so the next decode uploads nothing.
+        Returns False when the current buckets can't hold the row — the
+        next decode()'s rebuild picks it up from the views instead."""
+        if self._bt is None:
+            return False
+        ids = tuple(view.block_ids)
+        hist_ctx = len(view.token_history) - 1
+        if len(ids) > self._pages_bucket:
+            return False
+        row = self._rows.get(view.rid)
+        if row is None:
+            if not self._free:
+                return False
+            row = self._free.pop()
+            self._rows[view.rid] = row
+        self._row_blocks[row] = ids
+        self._row_ctx[row] = hist_ctx
+        self._scatter_rows({row: (ids, hist_ctx, view.token_history[-1],
+                                  self._row_key(view.rid))})
+        return True
+
+    def prefill_compute(self, view: DecodeRequestView, *,
+                        emit_first: bool) -> Tuple:
+        """Phase 1 of runner-managed prefill (DESIGN.md §3.5): compute KV
+        for the view's history, pad it to the page bucket, and — with
+        ``emit_first`` (a fresh turn, not a recompute re-prefill) — emit
+        the response's first token from the prompt's last position
+        (sampled on device per the runner's sampling config; bit-exact
+        greedy argmax at temperature 0) into ``view.token_history``.
+
+        Touches NO pool state, so the engine runs it OUTSIDE the pool
+        lock — prefill compute (the expensive part) no longer blocks
+        in-flight swap copies.  Returns the staged (k, v, blocks) for
+        ``prefill_insert``."""
+        self.flush()              # history must be current before reading
+        hist = view.token_history
+        toks = hist if emit_first else hist[:-1]
+        logits, k, v = prefill_kv(self.mb["params"],
+                                  jnp.asarray([toks], jnp.int32),
+                                  cfg=self.mb["cfg"])
+        bs = self.bs
+        ids = list(view.block_ids)
+        n_pages = max(1, -(-len(toks) // bs))
+        pages = next_pow2(max(n_pages, self._min_pages))
+        blocks = np.full((pages,), self.trash, np.int32)
+        real = ids[:n_pages]
+        blocks[:len(real)] = real
+        pad = pages * bs - len(toks)
+        if pad:
+            pw = ((0, 0), (0, pad), (0, 0), (0, 0))
+            k = jnp.pad(k, pw)
+            v = jnp.pad(v, pw)
+        if emit_first:
+            first_key = self._row_key(view.rid, salt=1)
+            tok = sample_tokens(logits[None, :], first_key[None, :],
+                                jnp.asarray([len(hist)], jnp.int32),
+                                self._temp, self._top_k, self._top_p)
+            hist.append(int(tok[0]))
+        return k, v, blocks
+
+    def prefill_insert(self, view: DecodeRequestView, pool, staged):
+        """Phase 2: scatter the staged KV into the DONATED pool through
+        the block table (jitted, shape-bucketed — O(log2 pages) compiled
+        variants) and register the row in the persistent device tables.
+        Run under the pool lock; returns the new pool — the caller must
+        rebind its reference."""
+        k, v, blocks = staged
+        pool = ops.insert_prefill(pool, k, v, blocks, self.bs)
+        self.stats.prefills += 1
+        self._register(view)
+        return pool
+
+    def prefill(self, view: DecodeRequestView, pool, *,
+                emit_first: bool):
+        """Convenience: both prefill phases back to back (single-threaded
+        callers — tests, benchmarks).  The pool is DONATED."""
+        staged = self.prefill_compute(view, emit_first=emit_first)
+        return self.prefill_insert(view, pool, staged)
 
     # ------------------------------------------------------------------
 

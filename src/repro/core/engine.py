@@ -144,7 +144,9 @@ class FastSwitchEngine:
         if self.pools is not None:
             self.runner = DecodeRunner(
                 model_bundle, block_size=config.block_size,
-                trash_block=self._trash_block)
+                trash_block=self._trash_block,
+                temperature=config.temperature, top_k=config.top_k,
+                top_p=config.top_p, seed=config.seed)
 
     # ------------------------------------------------------------------
     # helpers
@@ -206,7 +208,15 @@ class FastSwitchEngine:
             req.resume_tokens = req.context_tokens
             self.metrics.preemptions += 1
             return
-        total = req.context_tokens
+        # Only context_tokens - 1 positions hold written KV: the last
+        # slot's K/V is produced by the NEXT decode step (which consumes
+        # the pending token as input).  Claiming it would freeze garbage
+        # into the CPU copy — once the reuse increment pointer moves past
+        # that slot it is never re-copied, and a later swap-in would
+        # restore the garbage into attended positions (token corruption
+        # whenever a preemption lands on a block-aligned context).  The
+        # now-valid slot is picked up by the NEXT increment instead.
+        total = max(req.context_tokens - 1, 0)
         self.reuse.update_priority(rid, self.sched.priority(rid))
         inc, _cpu_runs = self.reuse.record_swap_out(
             rid, total, requesting_priority=self.sched.priority(rid))
@@ -355,12 +365,51 @@ class FastSwitchEngine:
         self._emit_first_token(rid)
         return True
 
+    def _allocate_token_slot(self, rid: int, skipped: Optional[set] = None
+                             ) -> bool:
+        """Allocate the one-token block slot the next decode will write
+        KV into: on OutOfBlocksError preempt a victim (recorded in
+        ``skipped`` so the caller drops it from this iteration's decode
+        set) and retry; synchronize swap conflicts on any block the
+        allocation acquired — it may be a just-freed block an async d2h
+        copy is still reading (torn victim KV otherwise).  Returns False
+        when the pool stays full."""
+        before = set(self.gpu_mgr.request_block_ids(rid))
+        try:
+            self.gpu_mgr.allocate_tokens(rid, 1)
+            self.gpu_mgr.note_tokens(rid, 1)
+        except OutOfBlocksError:
+            victim = self._find_victim(exclude={rid})
+            if victim is None:
+                return False
+            self._preempt(victim)
+            if skipped is not None:
+                skipped.add(victim)
+            try:
+                self.gpu_mgr.allocate_tokens(rid, 1)
+                self.gpu_mgr.note_tokens(rid, 1)
+            except OutOfBlocksError:
+                return False
+        grown = [b for b in self.gpu_mgr.request_block_ids(rid)
+                 if b not in before]
+        if grown:
+            self.swap.resolve_conflicts(self.clock, grown)
+        return True
+
     def _emit_first_token(self, rid: int) -> None:
         """The prompt's last position produced the response's first token."""
         req = self._req(rid)
         req.context_tokens += 1
-        self.gpu_mgr.allocate_tokens(rid, 1)
-        self.gpu_mgr.note_tokens(rid, 1)
+        if not self._allocate_token_slot(rid):
+            # a rebalance-time admission landed on a pool that stays full
+            # even after the victim fallback: bounce THIS request; the
+            # emitted token stays in its history and the resumption path
+            # (swap-in / re-prefill) allocates its next-token slot
+            req.finish_token(self.clock.now_us)
+            self.metrics.ttfts_us.append(req.ttfts_us[-1])
+            self.metrics.total_tokens += 1
+            self._preempt(rid)
+            return
         req.finish_token(self.clock.now_us)
         self.metrics.ttfts_us.append(req.ttfts_us[-1])
         self.metrics.total_tokens += 1
@@ -388,47 +437,47 @@ class FastSwitchEngine:
         return True
 
     def _real_reprefill(self, req: Request) -> None:
-        import jax.numpy as jnp
-
-        from repro.models.paged import prefill_kv
-        self.runner.flush()          # history must be current before re-read
-        mb = self.model_bundle
-        hist = req.token_history
-        # KV for all but the last token (its K/V is written by the next
-        # decode step, which consumes hist[-1] as input)
-        tokens = jnp.asarray([hist[:-1]], jnp.int32)
-        _, k, v = prefill_kv(mb["params"], tokens, cfg=mb["cfg"])
-        ids = self.gpu_mgr.request_block_ids(req.rid)
+        """Recompute-preemption resume: the runner regenerates KV for the
+        already-known history (all but the last token — its K/V is written
+        by the next decode step, which consumes hist[-1] as input) and
+        inserts it through its persistent block tables."""
+        view = DecodeRequestView(req.rid,
+                                 self.gpu_mgr.request_block_ids(req.rid),
+                                 req.token_history)
+        # KV compute runs OUTSIDE the pool lock (it never touches the
+        # pool); only the scatter + rebind serialize with swap copies
+        staged = self.runner.prefill_compute(view, emit_first=False)
         with self.swap._pool_lock:
-            self.pools.write_tokens(ids, 0, np.asarray(k), np.asarray(v))
+            self.pools.gpu = self.runner.prefill_insert(
+                view, self.pools.gpu, staged)
 
     # ------------------------------------------------------------------
     # real-model data plane
     # ------------------------------------------------------------------
 
     def _real_prefill(self, req: Request) -> None:
-        """Compute KV for the full current context and write it to the pool."""
-        import jax.numpy as jnp
-
-        from repro.models.paged import prefill_kv
-        self.runner.flush()          # history must be current before extend
-        mb = self.model_bundle
-        cfg = mb["cfg"]
+        """Runner-managed prefill: synthesize the turn's prompt, then the
+        runner computes KV, inserts it through its persistent block tables
+        (device-side scatter — no host KV round-trip) and emits the first
+        response token (device-side sampling; greedy at temperature 0)."""
+        cfg = self.model_bundle["cfg"]
         rid = req.rid
-        # deterministic synthetic prompt tokens per (conv, turn)
         hist = req.token_history
+        self.runner.flush()          # history must be current before extend
+        # deterministic synthetic prompt tokens per (conv, turn)
         turn = req.current_turn()
         rng = np.random.RandomState((rid * 1009 + req.turn_idx) % (2 ** 31))
         prompt = rng.randint(1, cfg.vocab_size,
                              size=turn.prompt_tokens).tolist()
         hist.extend(prompt)
-        tokens = jnp.asarray([hist], jnp.int32)
-        logits, k, v = prefill_kv(mb["params"], tokens, cfg=cfg)
-        ids = self.gpu_mgr.request_block_ids(rid)
+        view = DecodeRequestView(rid, self.gpu_mgr.request_block_ids(rid),
+                                 hist)
+        # KV compute + first-token draw run OUTSIDE the pool lock; only
+        # the scatter + rebind serialize with swap copies
+        staged = self.runner.prefill_compute(view, emit_first=True)
         with self.swap._pool_lock:
-            self.pools.write_tokens(ids, 0, np.asarray(k), np.asarray(v))
-        first = int(np.argmax(np.asarray(logits)))
-        hist.append(first)
+            self.pools.gpu = self.runner.prefill_insert(
+                view, self.pools.gpu, staged)
 
     def _real_decode(self, rids: List[int]) -> None:
         """Batched paged decode through the device-resident runner: only
@@ -455,6 +504,14 @@ class FastSwitchEngine:
         for task in self.swap.poll_completed(self.clock):
             if task.req_id in self.sched.swapping_in:
                 self.sched.move(task.req_id, ReqState.RUNNING)
+        # a fine-grained conflict sync (resolve_conflicts) can retire a
+        # swap-in task between polls; its data is resident, so promote the
+        # request too — it would otherwise be stranded in SWAPPING_IN
+        if self.sched.swapping_in:
+            ongoing = {t.req_id for t in self.swap.ongoing_swap_in}
+            for rid in list(self.sched.swapping_in):
+                if rid not in ongoing:
+                    self.sched.move(rid, ReqState.RUNNING)
 
         # Step 2: arrivals & wake-ups
         now_s = self.clock.now_us / 1e6
@@ -535,42 +592,37 @@ class FastSwitchEngine:
             if reqp.prefill_remaining == 0:
                 self._emit_first_token(rid_p)
         if rids or prefilling:
-            # block allocation for the new token (conflict-checked)
-            newly_allocated: List[int] = []
-            for rid in rids:
-                req = self._req(rid)
-                before = set(self.gpu_mgr.request_block_ids(rid))
-                try:
-                    self.gpu_mgr.allocate_tokens(rid, 1)
-                    self.gpu_mgr.note_tokens(rid, 1)
-                except OutOfBlocksError:
-                    victim = self._find_victim(exclude={rid})
-                    if victim is None:
-                        continue
-                    self._preempt(victim)
-                    if victim in rids:
-                        rids.remove(victim)
-                    try:
-                        self.gpu_mgr.allocate_tokens(rid, 1)
-                        self.gpu_mgr.note_tokens(rid, 1)
-                    except OutOfBlocksError:
-                        continue           # try again next iteration
-                after = self.gpu_mgr.request_block_ids(rid)
-                newly_allocated.extend(b for b in after if b not in before)
-            if newly_allocated:
-                self.swap.resolve_conflicts(self.clock, newly_allocated)
-            if rids and self.pools is not None:
-                self._real_decode([r for r in rids
-                                   if r in self.sched.running])
-            total_ctx = sum(self._req(r).context_tokens for r in rids)
-            t_iter = self.iter_cost.decode_iter_us(len(rids), total_ctx)
+            # block allocation for the new token (conflict-checked in
+            # _allocate_token_slot).  Iterate over a SNAPSHOT and track a
+            # ``skipped`` set: a victim preempted from inside the batch
+            # must not shift the iteration (the old in-place
+            # ``rids.remove`` silently skipped the next request's
+            # allocation while still decoding and crediting it), and a
+            # request whose allocation failed must sit this iteration out
+            # entirely — decoding it anyway would advance
+            # ``context_tokens`` past its block table (desync).
+            skipped: set = set()
+            for rid in list(rids):
+                if rid in skipped or rid not in self.sched.running:
+                    continue       # preempted as a victim earlier this loop
+                if not self._allocate_token_slot(rid, skipped):
+                    skipped.add(rid)           # retry next iteration
+            decode_rids = [r for r in rids if r not in skipped
+                           and r in self.sched.running]
+            if decode_rids and self.pools is not None:
+                self._real_decode(decode_rids)
+            total_ctx = sum(self._req(r).context_tokens for r in decode_rids)
+            t_iter = self.iter_cost.decode_iter_us(len(decode_rids),
+                                                   total_ctx)
             if chunk_tokens:
                 t_iter += self.iter_cost.prefill_us(chunk_tokens) \
                     - self.iter_cost.hw.iter_overhead_us
+            if not decode_rids and not chunk_tokens:
+                # everyone was skipped (pool exhausted, no victim): charge
+                # the iteration overhead so the sim clock still advances
+                t_iter = self.iter_cost.hw.iter_overhead_us
             self.clock.advance(t_iter)
-            for rid in rids:
-                if rid not in self.sched.running:
-                    continue
+            for rid in decode_rids:
                 req = self._req(rid)
                 req.context_tokens += 1
                 req.finish_token(self.clock.now_us)
@@ -579,8 +631,8 @@ class FastSwitchEngine:
                     m.tbts_us.append(req.tbts_us[-1])
                 if req.turn_done():
                     self._finish_turn(rid)
-            m.iter_records.append((self.clock.now_us, len(rids), t_iter,
-                                   m.prefills - prefills_before,
+            m.iter_records.append((self.clock.now_us, len(decode_rids),
+                                   t_iter, m.prefills - prefills_before,
                                    self.swap.total_stall_us))
         else:
             # idle: advance to the next event

@@ -88,6 +88,13 @@ class EngineConfig:
     model_params: int = 8_000_000_000
     kv_bytes_per_token: int = 131072   # LLaMA-8B bf16: 32L*8H*128D*2*2
     seed: int = 0
+    # real-mode device-side sampling (DecodeRunner / DESIGN.md §3.6):
+    # temperature 0.0 = bit-exact greedy argmax; top_k 0 / top_p 1.0
+    # disable the respective filter.  All three are traced scalars, so
+    # changing them never adds a compiled decode variant.
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
 
     def with_policy(self, name: str) -> "EngineConfig":
         return replace(self, policy=POLICIES[name])

@@ -174,7 +174,11 @@ class MultithreadingSwapManager:
         self.total_bytes += nbytes
         self.ops_by_dir[direction] += n_ops
         self.blocks_by_dir[direction] += n_blocks
-        self.r_info.append(SwapRecord(clock.now_us, direction, n_ops,
+        # record at ISSUE time: a synchronous stall has already advanced
+        # the clock here, and the adaptive profiler must see issue-time
+        # ordering (a sync task would otherwise appear to start at its
+        # own completion)
+        self.r_info.append(SwapRecord(issued_at, direction, n_ops,
                                       n_blocks, duration))
         if len(self.r_info) > self.r_info_window:
             self.r_info = self.r_info[-self.r_info_window:]

@@ -6,8 +6,10 @@ explicitly) to run the compiled Mosaic kernels.
 """
 from __future__ import annotations
 
+import functools
 from typing import List, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -56,6 +58,36 @@ def copy_block_runs(src_pool, dst_pool, runs: Sequence[Tuple[int, int]],
     return _bc.block_copy_grouped(
         src_pool, dst_pool, src_starts, dsts, lens, run_blocks=run_blocks,
         interpret=INTERPRET if interpret is None else interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",),
+                   donate_argnums=(0,))
+def _insert_prefill(pool, k, v, blocks, *, block_size: int):
+    L, T, H, D = k.shape
+    P = T // block_size
+    kv = jnp.stack([k, v], axis=1).reshape(L, 2, P, block_size, H, D)
+    return pool.at[:, :, blocks].set(kv.astype(pool.dtype))
+
+
+def insert_prefill(pool, k, v, blocks, block_size: int):
+    """Scatter block-aligned prefill K/V into the paged pool through a
+    block table row — the runner-managed replacement for the host-side
+    ``PagedPools.write_tokens`` path.
+
+    pool: (L, 2, nb, bs, Hkv, D) — DONATED; the caller must rebind.
+    k, v: (L, T_pad, Hkv, D) with T_pad == len(blocks) * block_size; the
+    caller pads the token axis up to the page bucket (pad pages point at
+    the trash block, the partial last real page is zero-padded — both
+    regions sit beyond the context length and are masked by attention).
+    blocks: (P,) int page ids, one per block_size tokens.
+    """
+    return _insert_prefill(pool, k, v, jnp.asarray(blocks, jnp.int32),
+                           block_size=block_size)
+
+
+def insert_prefill_cache_size() -> int:
+    """Compiled-variant count of the prefill scatter (bucketing metric)."""
+    return int(_insert_prefill._cache_size())
 
 
 def gla_scan_scalar(q, k, v, logw, *, chunk=64, interpret: bool | None = None):

@@ -13,6 +13,12 @@ Hot-path contract (see DESIGN.md §3):
   * ``paged_decode_step_device`` additionally donates and returns the
     context-length and last-token arrays so steady-state decode keeps its
     entire per-step state device-resident (the DecodeRunner threads it).
+  * Sampling (temperature / top-k / top-p) is fused into the device step;
+    the parameters are traced scalars, so greedy (temperature == 0) and
+    sampled runs share ONE compiled variant and greedy stays bit-exact
+    argmax.  The per-row PRNG-key array holds position-independent BASE
+    keys: it is read-only (neither donated nor returned — never rebind
+    it per step); the step folds each row's position in on device.
   * Shapes (batch, n_pages) must be bucketed by the caller — every unique
     shape is one XLA compilation.
 """
@@ -89,6 +95,58 @@ def _decode_core(params, pool, block_tables, context_lens, tokens,
     return next_tokens, logits, new_pool
 
 
+def sample_tokens(logits, keys, ctx, temperature, top_k, top_p):
+    """Fused temperature / top-k / top-p sampling, stateless per step.
+
+    The per-row draw key is derived ON DEVICE as ``fold_in(keys[i],
+    ctx[i])`` — ``keys`` holds each row's position-independent base key
+    (folded from (seed, rid) at registration), so the random stream is a
+    pure function of (seed, rid, position): reproducible under any
+    preemption order, row re-registration or bucket rebuild, with no key
+    state to thread between steps.
+
+    All three parameters are TRACED scalars so one compiled variant
+    serves every configuration; ``temperature <= 0`` selects bit-exact
+    greedy argmax through a ``lax.cond``, so the greedy hot path
+    executes only the argmax — the sort/softmax/Gumbel machinery is
+    compiled in but skipped at runtime.
+
+    logits: (B, V); keys: (B, 2) uint32 threefry key data; ctx: (B,)
+    i32 positions; temperature, top_p: f32 scalars; top_k: i32 scalar
+    (0 = disabled).  Returns tokens (B,) i32.
+    """
+    B, V = logits.shape
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _sampled(_):
+        scaled = logits / jnp.maximum(temperature, 1e-6)
+        sorted_lg = jnp.sort(scaled, axis=-1)[:, ::-1]
+        k_eff = jnp.clip(jnp.where(top_k > 0, top_k, V), 1,
+                         V).astype(jnp.int32)
+        kth = jnp.take_along_axis(sorted_lg,
+                                  jnp.full((B, 1), k_eff - 1), axis=-1)
+        probs = jax.nn.softmax(sorted_lg, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # nucleus: keep the smallest prefix whose mass reaches top_p (the
+        # mass BEFORE an index must be < top_p; index 0 is always kept)
+        keep = (cum - probs) < top_p
+        pth = jnp.min(jnp.where(keep, sorted_lg, jnp.inf), axis=-1,
+                      keepdims=True)
+        masked = jnp.where(scaled >= jnp.maximum(kth, pth), scaled,
+                           -jnp.inf)
+
+        def one_row(key, pos, row_logits):
+            g = jax.random.gumbel(jax.random.fold_in(key, pos), (V,),
+                                  jnp.float32)
+            return jnp.argmax(row_logits + g).astype(jnp.int32)
+
+        return jax.vmap(one_row)(keys, ctx, masked)
+
+    return jax.lax.cond(temperature > 0.0, _sampled, lambda _: greedy,
+                        None)
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",), donate_argnums=(1,))
 def paged_decode_step(params, pool, block_tables, context_lens, tokens,
                       *, cfg: ModelConfig):
@@ -102,14 +160,21 @@ def paged_decode_step(params, pool, block_tables, context_lens, tokens,
 @functools.partial(jax.jit, static_argnames=("cfg",),
                    donate_argnums=(1, 3, 4))
 def paged_decode_step_device(params, pool, block_tables, context_lens,
-                             tokens, active, *, cfg: ModelConfig):
-    """Device-resident variant for the DecodeRunner: pool, context_lens and
-    tokens are DONATED and threaded step to step without host round-trips.
-    ``active``: (B,) bool — rows decoding this step.  Inactive rows keep
-    their state and their (masked, trash-directed) compute is discarded.
-    Returns (next_tokens, new_pool, new_context_lens, new_tokens)."""
-    nxt, _, new_pool = _decode_core(params, pool, block_tables,
-                                    context_lens, tokens, cfg)
+                             tokens, active, keys, temperature, top_k,
+                             top_p, *, cfg: ModelConfig):
+    """Device-resident variant for the DecodeRunner: pool, context_lens
+    and tokens are DONATED and threaded step to step without host
+    round-trips.  ``active``: (B,) bool — rows decoding this step.
+    Inactive rows keep their state and their (masked, trash-directed)
+    compute is discarded.  ``keys``: (B, 2) uint32 per-row POSITION-
+    INDEPENDENT base PRNG keys (the step folds the position in — see
+    ``sample_tokens``); ``temperature``/``top_k``/``top_p``: traced
+    sampling scalars (temperature 0 is greedy).
+    Returns (next_tokens, new_pool, new_ctx, new_tokens)."""
+    _, logits, new_pool = _decode_core(params, pool, block_tables,
+                                       context_lens, tokens, cfg)
+    nxt = sample_tokens(logits, keys, context_lens, temperature, top_k,
+                        top_p)
     new_ctx = jnp.where(active, context_lens + 1, context_lens)
     new_tok = jnp.where(active, nxt, tokens)
     return nxt, new_pool, new_ctx, new_tok

@@ -287,6 +287,93 @@ def test_turn_boundary_context_jump_same_bucket(model):
     assert run_runner() == run_legacy()
 
 
+def test_runner_prefill_matches_host_write_path(model):
+    """Runner-managed prefill insertion (jitted bucketed scatter +
+    direct row registration) vs the legacy host path
+    (``PagedPools.write_tokens``-style per-block writes + exact-shape
+    decode): bit-identical token streams across a prefill, a decode
+    stretch, a turn-boundary re-prefill and another decode stretch."""
+    cfg, params = model
+    nb = 16
+    prompt = [int(x) for x in
+              np.random.RandomState(3).randint(1, cfg.vocab_size, 9)]
+    turn2 = [101, 202, 303]
+    n1, n2 = 6, 4
+
+    def legacy():
+        from repro.models.paged import prefill_kv
+        pool = _mk_pool(cfg, nb)
+        hist = list(prompt)
+
+        def host_prefill(pool, toks):
+            logits, k, v = prefill_kv(params,
+                                      jnp.asarray([toks], jnp.int32), cfg=cfg)
+            k, v = np.asarray(k), np.asarray(v)
+            for t0 in range(0, k.shape[1], BS):
+                t1 = min(t0 + BS, k.shape[1])
+                blk = t0 // BS
+                pool = pool.at[:, 0, blk, :t1 - t0].set(
+                    jnp.asarray(k[:, t0:t1], jnp.bfloat16))
+                pool = pool.at[:, 1, blk, :t1 - t0].set(
+                    jnp.asarray(v[:, t0:t1], jnp.bfloat16))
+            return pool, logits
+
+        def decode(pool, hist, steps):
+            for _ in range(steps):
+                ctx = len(hist) - 1
+                bt = jnp.asarray([list(range(ctx // BS + 1))], jnp.int32)
+                nxt, _, pool = paged_decode_step(
+                    params, pool, bt, jnp.asarray([ctx], jnp.int32),
+                    jnp.asarray([hist[-1]], jnp.int32), cfg=cfg)
+                hist.append(int(nxt[0]))
+            return pool
+
+        pool, logits = host_prefill(pool, hist)
+        hist.append(int(np.argmax(np.asarray(logits))))
+        pool = decode(pool, hist, n1)
+        hist.extend(turn2)
+        pool, logits = host_prefill(pool, hist)
+        hist.append(int(np.argmax(np.asarray(logits))))
+        decode(pool, hist, n2)
+        return hist
+
+    def runner_path():
+        from repro.kernels.ops import insert_prefill_cache_size
+        pool = _mk_pool(cfg, nb)
+        runner = DecodeRunner({"cfg": cfg, "params": params},
+                              block_size=BS, trash_block=nb - 1)
+        c0 = insert_prefill_cache_size()
+        hist = list(prompt)
+
+        def blocks(ctx):
+            return list(range(ctx // BS + 1))
+
+        pool = runner.prefill(
+            DecodeRequestView(0, blocks(len(hist) - 1), hist), pool,
+            emit_first=True)
+        for _ in range(n1):
+            ctx = len(hist) - 1       # flush() inside decode keeps this
+            pool = runner.decode(     # current: single-request lockstep
+                [DecodeRequestView(0, blocks(ctx), hist)], pool)
+            runner.flush()
+        hist.extend(turn2)
+        pool = runner.prefill(
+            DecodeRequestView(0, blocks(len(hist) - 1), hist), pool,
+            emit_first=True)
+        for _ in range(n2):
+            ctx = len(hist) - 1
+            pool = runner.decode(
+                [DecodeRequestView(0, blocks(ctx), hist)], pool)
+            runner.flush()
+        assert runner.stats.prefills == 2
+        # shape-bucketed insert: one compiled variant per pow2 page bucket
+        assert insert_prefill_cache_size() - c0 <= \
+            math.ceil(math.log2(nb)) + 1
+        return hist
+
+    assert runner_path() == legacy()
+
+
 def test_flush_is_idempotent_and_deferred(model):
     cfg, params = model
     pool = _mk_pool(cfg, 4)

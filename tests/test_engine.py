@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import EngineConfig, FastSwitchEngine
+from repro.core.swap_manager import SwapTask
 from repro.data.priority import PriorityTrace
 from repro.data.sharegpt import Conversation, Turn, sample_conversations
 
@@ -104,6 +105,191 @@ def test_conflict_free_decode_blocks():
                 if b in inflight:
                     assert inflight[b] == rid or False, \
                         f"block {b} of running {rid} is swap-in target of {inflight[b]}"
+
+
+# ---------------------------------------------------------------------------
+# decode-batch desync regressions (ISSUE 2): preemption/allocation inside
+# step 5 must never decode a request whose block table wasn't extended
+# ---------------------------------------------------------------------------
+
+
+def _assert_no_desync(eng):
+    """Every running request's context must fit its allocated blocks —
+    the invariant the old in-place ``rids.remove`` / bare ``continue``
+    paths silently broke."""
+    bs = eng.config.block_size
+    for rid in eng.sched.running:
+        req = eng.sched.requests[rid]
+        cap = len(eng.gpu_mgr.request_block_ids(rid)) * bs
+        assert req.context_tokens <= cap, (
+            f"desync: rid {rid} context {req.context_tokens} "
+            f"> block capacity {cap}")
+
+
+def test_victim_inside_batch_preemption_no_desync():
+    """Force an OutOfBlocksError mid-batch whose victim sits EARLIER in
+    the decode list than the allocating request: the old code removed the
+    victim from the list being iterated, skipping the next request's
+    block allocation while still decoding and crediting it."""
+    convs = [
+        Conversation(conv_id=0, arrival_s=0.0, turns=[Turn(24, 40)],
+                     think_time_s=0.1),
+        Conversation(conv_id=1, arrival_s=0.030, turns=[Turn(8, 30)],
+                     think_time_s=0.1),
+        Conversation(conv_id=2, arrival_s=0.035, turns=[Turn(8, 30)],
+                     think_time_s=0.1),
+    ]
+    cfg = EngineConfig(mode="sim", num_gpu_blocks=6, num_cpu_blocks=256,
+                       block_size=16).with_policy("vllm")
+    trace = PriorityTrace("random", update_freq=1e-9, seed=0)
+    # fixed priorities, no rebalances: rid 0 is always the victim and was
+    # admitted first, so it sits at the head of the running list
+    trace._prio = {0: 0.1, 1: 0.9, 2: 0.5}
+    eng = FastSwitchEngine(cfg, convs, trace=trace)
+    for _ in range(3000):
+        if eng.done():
+            break
+        eng.step()
+        _assert_no_desync(eng)
+    assert eng.done()
+    assert eng.metrics.preemptions >= 1, \
+        "scenario never triggered the victim-inside-batch preemption"
+    assert eng.metrics.total_tokens == 100
+
+
+def test_alloc_failure_without_victim_skips_decode():
+    """OutOfBlocksError with no preemptable victim: the old code's bare
+    ``continue`` left the request in the decode set, advancing its
+    context past its block table; it must sit the iteration out."""
+    convs = [
+        Conversation(conv_id=0, arrival_s=0.0, turns=[Turn(8, 20)],
+                     think_time_s=0.1),
+        Conversation(conv_id=1, arrival_s=0.0, turns=[Turn(8, 20)],
+                     think_time_s=0.1),
+    ]
+    cfg = EngineConfig(mode="sim", num_gpu_blocks=4, num_cpu_blocks=256,
+                       block_size=16).with_policy("vllm")
+    trace = PriorityTrace("random", update_freq=1e-9, seed=0)
+    trace._prio = {0: 0.9, 1: 0.5}
+    eng = FastSwitchEngine(cfg, convs, trace=trace)
+    eng._find_victim = lambda exclude: None      # nobody to preempt
+    for _ in range(3000):
+        if eng.done():
+            break
+        eng.step()
+        _assert_no_desync(eng)
+    assert eng.done()
+    assert eng.metrics.total_tokens == 40
+
+
+def test_emit_first_token_full_pool_routes_through_preemption():
+    """A rebalance-time admission can land ``_emit_first_token`` on a full
+    pool; the old unguarded ``allocate_tokens`` raised OutOfBlocksError
+    out of ``step()`` — it must preempt a victim instead."""
+    convs = [
+        Conversation(conv_id=0, arrival_s=0.0, turns=[Turn(4, 20)],
+                     think_time_s=0.1),
+        Conversation(conv_id=1, arrival_s=0.0, turns=[Turn(4, 20)],
+                     think_time_s=0.1),
+    ]
+    cfg = EngineConfig(mode="sim", num_gpu_blocks=4, num_cpu_blocks=256,
+                       block_size=8).with_policy("vllm")
+    trace = PriorityTrace("random", update_freq=1e-9, seed=0)
+    trace._prio = {0: 0.9, 1: 0.5}
+    eng = FastSwitchEngine(cfg, convs, trace=trace)
+    eng.step()
+    assert sorted(eng.sched.running) == [0, 1]
+    # exhaust the pool: hand the free block to rid 1, fill rid 0's block
+    req0, req1 = eng.sched.requests[0], eng.sched.requests[1]
+    eng.gpu_mgr.allocate_tokens(1, 8)
+    eng.gpu_mgr.note_tokens(1, 8)
+    req1.context_tokens += 8
+    fill = 8 - (req0.context_tokens % 8)
+    eng.gpu_mgr.allocate_tokens(0, fill)
+    eng.gpu_mgr.note_tokens(0, fill)
+    req0.context_tokens += fill
+    assert eng.gpu_mgr.free_blocks() == 0
+    eng._emit_first_token(0)                     # must not raise
+    assert eng.metrics.preemptions == 1
+    assert 1 not in eng.sched.running
+    cap = len(eng.gpu_mgr.request_block_ids(0)) * 8
+    assert req0.context_tokens <= cap
+
+
+def test_swap_out_never_claims_unwritten_last_slot():
+    """At swap-out, position context-1's KV has NOT been written yet (the
+    next decode step writes its input's K/V before attending).  The old
+    code marked it valid in the CPU reuse copy: the incremental copy
+    never revisits slots behind its pointer, so a preemption at a
+    block-aligned context froze garbage into the copy and a later
+    swap-in restored it into attended positions (token corruption)."""
+    convs = [Conversation(conv_id=0, arrival_s=0.0, turns=[Turn(8, 30)],
+                          think_time_s=0.1)]
+    cfg = EngineConfig(mode="sim", num_gpu_blocks=64, num_cpu_blocks=256,
+                       block_size=16).with_policy("fastswitch")
+    eng = FastSwitchEngine(cfg, convs,
+                           trace=PriorityTrace("random", 1e-9, seed=0))
+    for _ in range(5):
+        eng.step()
+    req = eng.sched.requests[0]
+    assert 0 in eng.sched.running and req.context_tokens > 1
+    eng._preempt(0)
+    assert eng.reuse.valid_tokens(0) == req.context_tokens - 1, \
+        "swap-out claimed the unwritten last KV slot as valid"
+
+
+def test_swapping_in_promoted_after_conflict_sync():
+    """A fine-grained conflict sync (resolve_conflicts) retires an async
+    swap-in task between step-1 polls; the old engine never promoted the
+    request out of SWAPPING_IN — it was stranded forever (livelock)."""
+    convs = [Conversation(conv_id=0, arrival_s=0.0, turns=[Turn(8, 20)],
+                          think_time_s=0.1)]
+    cfg = EngineConfig(mode="sim", num_gpu_blocks=64, num_cpu_blocks=256,
+                       block_size=16).with_policy("fastswitch")
+    eng = FastSwitchEngine(cfg, convs,
+                           trace=PriorityTrace("random", 1e-9, seed=0))
+    eng.step()
+    assert 0 in eng.sched.running
+    eng._preempt(0)
+    assert 0 in eng.sched.swapped
+    assert eng._swap_in(0) is False          # async: in flight
+    assert 0 in eng.sched.swapping_in
+    task = eng.swap.ongoing_swap_in[0]
+    # conflict on a target block synchronizes the task away
+    eng.swap.resolve_conflicts(eng.clock, list(task.gpu_blocks)[:1])
+    assert eng.swap.ongoing_swap_in == []
+    eng.step()
+    assert 0 in eng.sched.running, "request stranded in SWAPPING_IN"
+
+
+def test_emit_first_token_resolves_swap_conflicts_on_new_block():
+    """The first-token block can be a just-freed block that an in-flight
+    async swap-out is still reading; _emit_first_token must synchronize
+    exactly like step 5 does for newly allocated decode blocks."""
+    convs = [Conversation(conv_id=0, arrival_s=0.0, turns=[Turn(4, 20)],
+                          think_time_s=0.1)]
+    cfg = EngineConfig(mode="sim", num_gpu_blocks=8, num_cpu_blocks=256,
+                       block_size=8).with_policy("fastswitch")
+    eng = FastSwitchEngine(cfg, convs,
+                           trace=PriorityTrace("random", 1e-9, seed=0))
+    eng.step()
+    req0 = eng.sched.requests[0]
+    # advance to the block boundary so the next token needs a fresh block
+    fill = 8 - (req0.context_tokens % 8)
+    eng.gpu_mgr.allocate_tokens(0, fill)
+    eng.gpu_mgr.note_tokens(0, fill)
+    req0.context_tokens += fill
+    # fabricate an in-flight swap-out reading every block
+    now = eng.clock.now_us
+    task = SwapTask(req_id=99, direction="out", n_ops=1, n_blocks=1,
+                    bytes_total=1, issued_at=now, done_at=now + 5000.0,
+                    gpu_blocks=set(range(cfg.num_gpu_blocks)))
+    eng.swap.ongoing_swap_out.append(task)
+    n0 = eng.swap.n_conflicts
+    eng._emit_first_token(0)
+    assert eng.swap.n_conflicts == n0 + 1, \
+        "first-token block allocated without synchronizing the conflict"
+    assert eng.clock.now_us >= task.done_at
 
 
 # ---------------------------------------------------------------------------

@@ -91,6 +91,22 @@ def test_adaptive_decision():
     assert m2.decide_async(1, 1000) is False
 
 
+def test_r_info_records_issue_time():
+    """SwapRecord.t_us must be the ISSUE time: a synchronous dispatch
+    stalls the clock to done_at before the record is appended, and the
+    adaptive profiler needs issue-time ordering."""
+    m = _mgr(async_enabled=False)
+    clock = SimClock()
+    t = m.dispatch(clock, 1, "out", [(0, 8)], BB, range(8),
+                   asynchronous=False)
+    assert clock.now_us >= t.done_at           # sync stall happened
+    assert m.r_info[-1].t_us == t.issued_at == 0.0
+    # a later swap records its own (post-stall) issue time
+    t2 = m.dispatch(clock, 2, "out", [(8, 8)], BB, range(8, 16),
+                    asynchronous=False)
+    assert m.r_info[-1].t_us == t2.issued_at == t.done_at
+
+
 def test_r_info_window_bounded():
     m = _mgr(r_info_window=8)
     clock = SimClock()
