@@ -1,0 +1,116 @@
+"""Swap data-plane microbenchmark (ISSUE 3 acceptance): per-block host
+copies vs the run-coalesced staged path.
+
+One "swap" moves the same set of KV blocks (N blocks in R contiguous
+runs) through three data planes:
+  * ``per_block``  — one blocking d2h gather / un-donated h2d ``.at[].set``
+                     PER BLOCK (the vLLM-style dispatch-bound baseline;
+                     the copy-in also pays a full-pool copy per block)
+  * ``host_vec``   — the pre-refactor engine path (``PagedPools.copy_out/
+                     copy_in``): one vectorized host gather + ONE
+                     un-donated full-pool ``.at[].set`` per swap
+  * ``staged``     — the engine's path (``copy_out_staged/copy_in_staged``):
+                     grouped Pallas gather into a contiguous device slab,
+                     one slab transfer, donated scatter (DESIGN.md §4)
+
+CSV: name,us_per_swap,derived (ops = host-visible transfer/kernel
+dispatches per swap; bytes per swap; jit variants compiled).
+``--smoke`` shrinks the run for the tier-1 verify wrapper.
+
+NOTE: this container runs the Pallas kernels in interpret mode (CPU), so
+the staged numbers are conservative — the interpreter materializes a
+buffer update per grid step, a cost that grows with pool size and does
+not exist on real TPUs where each run is one streaming DMA chain.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.paged import PagedPools, PoolSpec
+from repro.kernels import ops
+from repro.kernels.block_copy import runs_to_indices
+
+
+def _mk_pools(num_blocks):
+    spec = PoolSpec(n_layers=2, n_kv_heads=2, head_dim=16, block_size=16,
+                    num_gpu_blocks=num_blocks, num_cpu_blocks=num_blocks)
+    pools = PagedPools(spec)
+    key = jax.random.PRNGKey(0)
+    pools.gpu = jax.random.normal(key, pools.gpu.shape).astype(jnp.bfloat16)
+    return pools, spec
+
+
+def swap_per_block(pools, blocks, cpu_ids):
+    """One d2h per block out; one un-donated ``.at[].set`` per block in."""
+    for g, c in zip(blocks, cpu_ids):
+        pools.copy_out([g], [c])
+    for g, c in zip(blocks, cpu_ids):
+        pools.copy_in([c], [g])
+    pools.gpu.block_until_ready()
+
+
+def swap_host_vec(pools, blocks, cpu_ids):
+    pools.copy_out(blocks, cpu_ids)
+    pools.copy_in(cpu_ids, blocks)
+    pools.gpu.block_until_ready()
+
+
+def swap_staged(pools, runs, cpu_ids):
+    pools.copy_out_staged(runs, cpu_ids)
+    pools.copy_in_staged(cpu_ids, runs)
+    pools.gpu.block_until_ready()
+
+
+def _time(fn, iters):
+    fn()                                    # warm the jit caches
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced run for the tier-1 verify wrapper")
+    args, _ = ap.parse_known_args()
+    n_runs, run_len = (2, 4) if args.smoke else (4, 16)
+    iters = 2 if args.smoke else 3
+    # pool much larger than the swapped set, as in serving: the baselines'
+    # full-pool ``.at[].set`` copies pay for every resident block
+    num_blocks = 64 if args.smoke else 512
+
+    pools, spec = _mk_pools(num_blocks=num_blocks)
+    # a request's blocks: n_runs contiguous runs with gaps between them
+    runs = [(i * run_len * 2, run_len) for i in range(n_runs)]
+    blocks = runs_to_indices(runs)
+    cpu_ids = list(range(len(blocks)))
+    n_blocks = len(blocks)
+    swap_bytes = 2 * n_blocks * spec.block_bytes()      # out + in
+
+    snap = np.asarray(pools.gpu)
+    t_pb = _time(lambda: swap_per_block(pools, blocks, cpu_ids), iters)
+    t_hv = _time(lambda: swap_host_vec(pools, blocks, cpu_ids), iters)
+    t_st = _time(lambda: swap_staged(pools, runs, cpu_ids), iters)
+    np.testing.assert_array_equal(np.asarray(pools.gpu), snap)  # integrity
+
+    # host-visible dispatches per swap (out + in):
+    ops_pb = 2 * n_blocks              # one transfer per block per leg
+    ops_hv = 2 * 2                     # gather+store / upload+set
+    ops_st = 2 * 2                     # kernel+slab transfer per leg
+    compiles = ops.swap_gather_cache_size() + ops.swap_scatter_cache_size()
+
+    assert ops_pb >= 2 * ops_st, "staged path must halve copy ops"
+    print(f"swap_per_block,{t_pb * 1e6:.1f},"
+          f"ops={ops_pb};blocks={n_blocks};bytes={swap_bytes}")
+    print(f"swap_host_vec,{t_hv * 1e6:.1f},ops={ops_hv};blocks={n_blocks}")
+    print(f"swap_staged,{t_st * 1e6:.1f},"
+          f"ops={ops_st};runs={n_runs};blocks={n_blocks}"
+          f";jit_variants={compiles};speedup_vs_per_block={t_pb / t_st:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

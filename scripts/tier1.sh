@@ -7,3 +7,4 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python benchmarks/decode_hotpath.py --smoke
+python benchmarks/swap_path.py --smoke

@@ -1,9 +1,23 @@
 """Paged KV cache pools (device + host) and block tables.
 
 The GPU pool is a jnp array of shape (L, 2, num_blocks, block_size, Hkv, D)
-(2 = K/V); the CPU pool is numpy with num_cpu_blocks.  The serving engine
-moves whole blocks between them through the swap channel; the model decode
-step reads the GPU pool through a block table (see kernels/paged_attention).
+(2 = K/V); the CPU pool is numpy with num_cpu_blocks storing the bf16 BIT
+PATTERN as uint16 (half the host memory of a float32 store, and the d2h
+leg needs no dtype conversion).  The serving engine moves whole blocks
+between them through the swap channel; the model decode step reads the GPU
+pool through a block table (see kernels/paged_attention).
+
+Two data planes (DESIGN.md §4):
+  * ``copy_out`` / ``copy_in`` — the host-mediated baseline (a blocking
+    gather of the live pool, an un-donated full-pool ``.at[].set``); kept
+    for parity tests and the swap_path benchmark baseline.
+  * ``copy_out_staged`` / ``copy_in_staged`` — the engine's path: a
+    grouped Pallas kernel stages a request's blocks into one contiguous
+    device slab (one DMA chain per run), the slab crosses the PCIe/host
+    link as a SINGLE transfer, and the swap-in scatter DONATES the pool
+    (in-place write).  ``copy_in_staged`` rebinds ``self.gpu`` — the pool
+    object is the owner-of-record; callers serialize under the engine's
+    pool lock.
 
 For trace-driven benchmarks the pools can be ``data=False`` (bookkeeping
 only) so thousand-conversation runs stay fast.
@@ -11,12 +25,14 @@ only) so thousand-conversation runs stay fast.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 
 
 @dataclass
@@ -54,28 +70,86 @@ class PagedPools:
             self.gpu = jnp.zeros((s.n_layers, 2, s.num_gpu_blocks,
                                   s.block_size, s.n_kv_heads, s.head_dim),
                                  jnp.bfloat16)
+            # bf16 bit pattern: uint16 halves host memory vs the old
+            # float32 store and the staged d2h path copies bytes verbatim
             self.cpu = np.zeros((s.n_layers, 2, s.num_cpu_blocks,
                                  s.block_size, s.n_kv_heads, s.head_dim),
-                                np.float32)
+                                np.uint16)
         else:
             self.gpu = None
             self.cpu = None
 
-    # -- data plane (used by the swap channel worker threads) -------------
+    def cpu_bf16(self) -> np.ndarray:
+        """The host pool reinterpreted as bfloat16 (zero-copy view)."""
+        return self.cpu.view(jnp.bfloat16)
+
+    # -- baseline data plane (parity tests, swap_path benchmark) ----------
 
     def copy_out(self, gpu_blocks: List[int], cpu_blocks: List[int]) -> None:
-        """GPU -> CPU block copy (d2h)."""
+        """GPU -> CPU block copy (d2h) — host-mediated baseline: one
+        blocking gather of the live pool per call."""
         if not self.with_data:
             return
-        g = np.asarray(self.gpu[:, :, np.asarray(gpu_blocks)], np.float32)
-        self.cpu[:, :, np.asarray(cpu_blocks)] = g
+        g = np.asarray(self.gpu[:, :, np.asarray(gpu_blocks)])
+        self.cpu[:, :, np.asarray(cpu_blocks)] = g.view(np.uint16)
 
     def copy_in(self, cpu_blocks: List[int], gpu_blocks: List[int]) -> None:
-        """CPU -> GPU block copy (h2d)."""
+        """CPU -> GPU block copy (h2d) — host-mediated baseline: the
+        un-donated ``.at[].set`` copies the ENTIRE pool per swap-in."""
         if not self.with_data:
             return
-        data = jnp.asarray(self.cpu[:, :, np.asarray(cpu_blocks)], jnp.bfloat16)
+        data = jnp.asarray(self.cpu_bf16()[:, :, np.asarray(cpu_blocks)])
         self.gpu = self.gpu.at[:, :, np.asarray(gpu_blocks)].set(data)
+
+    # -- staged data plane (the engine's swap path, DESIGN.md §4) ---------
+
+    def copy_out_staged(self, gpu_runs: Sequence[Tuple[int, int]],
+                        cpu_blocks: List[int]) -> None:
+        """GPU -> CPU via the device staging slab: one grouped gather
+        kernel coalesces ``gpu_runs`` [(start, n)] into a contiguous
+        slab, then ONE d2h transfer moves the slab; the host side is a
+        single vectorized store of the bf16 bit pattern."""
+        if not self.with_data or not gpu_runs:
+            return
+        slab, total = ops.gather_swap_runs(self.gpu, gpu_runs)
+        assert total == len(cpu_blocks), (total, len(cpu_blocks))
+        host = np.asarray(slab[:, :total])           # ONE d2h (slab prefix)
+        s = self.spec
+        self.cpu[:, :, np.asarray(cpu_blocks)] = host.view(np.uint16).reshape(
+            s.n_layers, 2, total, s.block_size, s.n_kv_heads, s.head_dim)
+
+    def copy_in_staged(self, cpu_blocks: List[int],
+                       gpu_runs: Sequence[Tuple[int, int]]) -> None:
+        """CPU -> GPU via the host staging slab: one vectorized host
+        gather, ONE h2d transfer of the slab, then a grouped scatter
+        kernel with the pool DONATED (in-place write, never a full-pool
+        copy).  REBINDS ``self.gpu`` — the pools object is the pool's
+        owner-of-record; callers must hold the engine's pool lock."""
+        if not self.with_data or not gpu_runs:
+            return
+        s = self.spec
+        total = sum(n for _, n in gpu_runs)
+        assert total == len(cpu_blocks), (total, len(cpu_blocks))
+        C = s.n_layers * 2
+        E = s.block_size * s.n_kv_heads * s.head_dim
+        # zeros, not empty: the pow2 pad tail is masked off by the run
+        # lengths, but it IS uploaded and streamed through the kernel —
+        # uninitialized bytes decode to NaN/denormal bf16, which
+        # measurably slows the copy (and earns nothing: one memset)
+        slab = np.zeros((C, ops.slab_bucket_blocks(total), E), np.uint16)
+        slab[:, :total] = self.cpu[:, :, np.asarray(cpu_blocks)].reshape(
+            C, total, E)
+        dev = jnp.asarray(slab.view(jnp.bfloat16))   # ONE h2d (bucketed slab)
+        self.gpu = ops.scatter_swap_runs(self.gpu, dev, gpu_runs)
+        # Materialize before the caller releases the pool lock: a swap
+        # task's future completing must mean THE DATA IS RESIDENT
+        # (step-1 promotes on it).  A lazy donated scatter escaping the
+        # lock both outlives the locals backing its host staging slab
+        # and interleaves with the decode thread's donating dispatches
+        # on the same pool chain — observed torn KV under storm
+        # preemption (CPU donation is in-place).  The wait costs
+        # worker-thread time only — never simulated time.
+        jax.block_until_ready(self.gpu)
 
     def write_tokens(self, block_ids: List[int], token_offset: int,
                      k: np.ndarray, v: np.ndarray) -> None:

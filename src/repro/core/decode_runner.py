@@ -122,6 +122,14 @@ class DecodeRunner:
         self._pending: Optional[Tuple[list, jnp.ndarray]] = None
         self.stats = RunnerStats()
 
+    @property
+    def batch_bucket(self) -> int:
+        """Compiled decode-batch bucket (0 before the first step).  The
+        step always executes this many padded rows, so admitting requests
+        up to the bucket adds NO compile and NO step cost — the engine's
+        batch-bucket-aware admission targets exactly this size."""
+        return self._batch_bucket
+
     def _row_key(self, rid: int, salt: int = 0):
         """Position-independent per-row base PRNG key, folded from
         (seed, rid).  The decode step folds the position in on device

@@ -34,7 +34,7 @@ from repro.core.block_group import (DynamicBlockGroupManager,
                                     OutOfBlocksError)
 from repro.core.decode_runner import DecodeRequestView, DecodeRunner
 from repro.core.policies import EngineConfig
-from repro.kernels.block_copy import runs_to_indices
+from repro.kernels.block_copy import runs_to_indices, split_runs, trim_runs
 from repro.core.reuse import KVCacheReuseManager
 from repro.core.scheduler import PriorityScheduler, Request, ReqState
 from repro.core.swap_manager import MultithreadingSwapManager, SimClock
@@ -126,7 +126,8 @@ class FastSwitchEngine:
         self.swap = MultithreadingSwapManager(
             config.hardware, self.pools,
             async_enabled=pol.use_async_swap,
-            adaptive=pol.adaptive_async)
+            adaptive=pol.adaptive_async,
+            r_info_window=config.r_info_window)
         self.iter_cost = IterationCostModel(
             config.hardware, model_params=model_params,
             kv_bytes_per_token=kv_tok)
@@ -138,6 +139,11 @@ class FastSwitchEngine:
         self._token_hist_by_conv: Dict[int, List[int]] = {}
         # per-request CPU block-id mirror for the data plane
         self._trash_block = config.num_gpu_blocks - 1
+        # batch-bucket-aware admission: iterations the engine has held a
+        # boundary against under-pressure growth (bounded, see
+        # _admission_target)
+        self._bucket_hold = 0
+        self._bucket_hold_iter = -1
         # device-resident decode hot path (real mode): persistent block
         # tables, bucketed shapes, donated pool — see DESIGN.md §3
         self.runner: Optional[DecodeRunner] = None
@@ -226,14 +232,16 @@ class FastSwitchEngine:
         if gpu_runs:
             # conflicts: blocks we're about to read may be swap-in targets
             self.swap.resolve_conflicts(self.clock, gpu_blocks)
-            copy_fn = self._make_copy_out(rid, valid_before, total) \
-                if self.pools is not None else None
+            bs = self.config.block_size
+            cpu_ids = self.reuse.mgr.request_block_ids(rid)[
+                valid_before // bs:(total + bs - 1) // bs] \
+                if self.pools is not None else []
             asynchronous = self.swap.decide_async(
-                len(self.sched.running), sum(n for _, n in gpu_runs))
-            self.swap.dispatch(self.clock, rid, "out",
-                               self._transfer_runs(gpu_runs),
-                               self.block_bytes, gpu_blocks,
-                               asynchronous=asynchronous, copy_fn=copy_fn)
+                len(self.sched.running), sum(n for _, n in gpu_runs),
+                runs=self._transfer_runs(gpu_runs),
+                block_bytes=self.block_bytes, h2d=False,
+                now_us=self.clock.now_us)
+            self._dispatch_swap(rid, "out", gpu_runs, cpu_ids, asynchronous)
             self.metrics.swap_out_count += 1
         self.gpu_mgr.release_request(rid)
         self.metrics.preemptions += 1
@@ -251,20 +259,26 @@ class FastSwitchEngine:
             # groups incrementally) or the blocks leak into a deadlock
             self.gpu_mgr.release_request(rid)
             return False                     # stays swapped; retry later
-        gpu_runs = self.gpu_mgr.request_runs(rid)
+        # TOKEN-ordered runs (not request_runs, which sorts by physical
+        # start): the data plane pairs these positionally with the
+        # token-ordered CPU block list, and a fragmented allocation can
+        # hand out groups with descending starts — sorted runs would
+        # restore every block into the wrong slot of the block table
+        gpu_runs = self._runs_for_tokens(rid, 0, tokens)
         gpu_blocks = runs_to_indices(gpu_runs)
         # the newly allocated target blocks may still be the SOURCE of an
         # in-flight swap-out — synchronize before overwriting them
         self.swap.resolve_conflicts(self.clock, gpu_blocks)
-        reused = self.reuse.record_swap_in(rid)
+        self.reuse.record_swap_in(rid)
+        bs = self.config.block_size
+        nblk = (tokens + bs - 1) // bs
+        cpu_ids = self.reuse.mgr.request_block_ids(rid)[:nblk] \
+            if self.pools is not None else []
         asynchronous = self.swap.decide_async(
-            len(self.sched.running), sum(n for _, n in gpu_runs))
-        copy_fn = self._make_copy_in(rid, tokens) if self.pools is not None \
-            else None
-        task = self.swap.dispatch(self.clock, rid, "in",
-                                  self._transfer_runs(gpu_runs),
-                                  self.block_bytes, gpu_blocks,
-                                  asynchronous=asynchronous, copy_fn=copy_fn)
+            len(self.sched.running), sum(n for _, n in gpu_runs),
+            runs=self._transfer_runs(gpu_runs),
+            block_bytes=self.block_bytes, h2d=True, now_us=self.clock.now_us)
+        self._dispatch_swap(rid, "in", gpu_runs, cpu_ids, asynchronous)
         self.metrics.swap_in_count += 1
         if asynchronous:
             self.sched.move(rid, ReqState.SWAPPING_IN)
@@ -272,28 +286,51 @@ class FastSwitchEngine:
         self.sched.move(rid, ReqState.RUNNING)
         return True
 
-    def _make_copy_out(self, rid: int, t0: int, t1: int):
+    def _dispatch_swap(self, rid: int, direction: str,
+                       gpu_runs: List[Tuple[int, int]], cpu_ids: List[int],
+                       asynchronous: bool) -> None:
+        """Dispatch one logical swap as ``swap_chunk_blocks``-sized chunk
+        tasks (DESIGN.md §4.3).  Each chunk is its own task on the
+        simulated stream with its own GPU-block conflict set and its own
+        data-plane future, so (a) the pool lock is released between chunk
+        copies — decode steps interleave with a long transfer — and (b) a
+        fine-grained conflict sync waits only for the chunk whose blocks
+        actually overlap, not the whole swap.  The data plane runs the
+        staged run-coalesced path (``PagedPools.copy_*_staged``); a chunk
+        whose CPU backing is shorter than its GPU runs (contamination
+        capped the reuse copy) trims the copy to the backed prefix, and
+        the sim cost still accounts the full dispatched runs.
+
+        Data ordering: a copy touching CPU blocks that a still-queued
+        swap-out writes (its own request's increment, or a contamination
+        reallocation of a victim's blocks) must wait for that write;
+        worker execution is not FIFO, so each chunk carries the
+        overlapping out-futures as explicit dependencies (awaited before
+        the pool lock — see ``MultithreadingSwapManager.data_deps``)."""
         pools = self.pools
-        bs = self.config.block_size
-        gpu_ids = self.gpu_mgr.request_block_ids(rid)[t0 // bs:(t1 + bs - 1) // bs]
-        cpu_ids = self.reuse.mgr.request_block_ids(rid)[t0 // bs:(t1 + bs - 1) // bs]
-        n = min(len(gpu_ids), len(cpu_ids))
-
-        def fn():
-            pools.copy_out(gpu_ids[:n], cpu_ids[:n])
-        return fn
-
-    def _make_copy_in(self, rid: int, tokens: int):
-        pools = self.pools
-        bs = self.config.block_size
-        nblk = (tokens + bs - 1) // bs
-        gpu_ids = self.gpu_mgr.request_block_ids(rid)[:nblk]
-        cpu_ids = self.reuse.mgr.request_block_ids(rid)[:nblk]
-        n = min(len(gpu_ids), len(cpu_ids))
-
-        def fn():
-            pools.copy_in(cpu_ids[:n], gpu_ids[:n])
-        return fn
+        pos = 0
+        for runs_c in split_runs(gpu_runs, self.config.swap_chunk_blocks):
+            cnt = sum(n for _, n in runs_c)
+            copy_fn = None
+            cpu_c: List[int] = []
+            deps: List = []
+            if pools is not None:
+                cpu_c = cpu_ids[pos:pos + cnt]
+                if cpu_c:
+                    deps = self.swap.data_deps(cpu_c)
+                    data_runs = trim_runs(runs_c, len(cpu_c))
+                    if direction == "out":
+                        copy_fn = (lambda r=data_runs, c=cpu_c:
+                                   pools.copy_out_staged(r, c))
+                    else:
+                        copy_fn = (lambda r=data_runs, c=cpu_c:
+                                   pools.copy_in_staged(c, r))
+            pos += cnt
+            self.swap.dispatch(self.clock, rid, direction,
+                               self._transfer_runs(runs_c), self.block_bytes,
+                               runs_to_indices(runs_c),
+                               asynchronous=asynchronous, copy_fn=copy_fn,
+                               copy_deps=deps, cpu_blocks=cpu_c)
 
     # ------------------------------------------------------------------
     # admission / prefill
@@ -330,20 +367,11 @@ class FastSwitchEngine:
         if reused > 0:
             bs = self.config.block_size
             n_reused_blocks = (reused + bs - 1) // bs
-            runs_in: List[Tuple[int, int]] = []
-            for b in self.gpu_mgr.request_block_ids(rid)[:n_reused_blocks]:
-                if runs_in and runs_in[-1][0] + runs_in[-1][1] == b:
-                    runs_in[-1] = (runs_in[-1][0], runs_in[-1][1] + 1)
-                else:
-                    runs_in.append((b, 1))
-            asynchronous = self.swap.decide_async(
-                len(self.sched.running), n_reused_blocks)
-            self.swap.dispatch(
-                self.clock, rid, "in", self._transfer_runs(runs_in),
-                self.block_bytes, runs_to_indices(runs_in),
-                asynchronous=False,          # prefill needs the prefix NOW
-                copy_fn=(self._make_copy_in(rid, reused)
-                         if self.pools is not None else None))
+            runs_in = self._runs_for_tokens(rid, 0, reused)  # token order
+            cpu_ids = self.reuse.mgr.request_block_ids(rid)[:n_reused_blocks] \
+                if self.pools is not None else []
+            self._dispatch_swap(rid, "in", runs_in, cpu_ids,
+                                asynchronous=False)  # prefill needs it NOW
         # prefill compute for the non-reused tokens
         new_tokens = new_ctx - reused
         chunk = self.config.policy.chunked_prefill_tokens
@@ -500,13 +528,12 @@ class FastSwitchEngine:
         bs = self.config.block_size
         prefills_before = m.prefills
 
-        # Step 1: completed async swap-ins -> running
-        for task in self.swap.poll_completed(self.clock):
-            if task.req_id in self.sched.swapping_in:
-                self.sched.move(task.req_id, ReqState.RUNNING)
-        # a fine-grained conflict sync (resolve_conflicts) can retire a
-        # swap-in task between polls; its data is resident, so promote the
-        # request too — it would otherwise be stranded in SWAPPING_IN
+        # Step 1: completed async swap-ins -> running.  A swap-in may
+        # consist of several chunk tasks, and a fine-grained conflict sync
+        # (resolve_conflicts) can retire tasks between polls; a request is
+        # resident — promote it — exactly when NO in-flight swap-in task
+        # remains for it (it would otherwise be stranded in SWAPPING_IN).
+        self.swap.poll_completed(self.clock)
         if self.sched.swapping_in:
             ongoing = {t.req_id for t in self.swap.ongoing_swap_in}
             for rid in list(self.sched.swapping_in):
@@ -547,7 +574,10 @@ class FastSwitchEngine:
         # Step 3: priority update -> rebalance
         updated = self.sched.step_trace()
         if updated:
-            desired = self.sched.desired_running(self._budget_tokens(), bs)
+            desired = self.sched.desired_running(
+                self._budget_tokens(), bs,
+                batch_bucket=(self.runner.batch_bucket
+                              if self.runner is not None else 0))
             to_preempt, to_swap_in, to_admit = \
                 self.sched.classify_rebalance(desired)
             for rid in to_preempt:
@@ -557,18 +587,21 @@ class FastSwitchEngine:
             for rid in to_admit:
                 self._admit(rid)
 
-        # Step 4: opportunistic admission (space permitting)
+        # Step 4: opportunistic admission (space permitting), capped at
+        # the batch-bucket-aware target instead of max_running outright
         for rid in sorted(list(self.sched.waiting),
                           key=self.sched.priority, reverse=True):
             free_tok = self.gpu_mgr.free_blocks() * bs
             req = self._req(rid)
             need = req.prefix_tokens + req.current_turn().prompt_tokens + bs
-            if need > free_tok or len(self.sched.running) >= self.config.max_running:
+            if need > free_tok \
+                    or len(self.sched.running) + len(self.sched.swapping_in) \
+                    >= self._admission_target():
                 break
             self._admit(rid)
         for rid in list(self.sched.swapped):
             if len(self.sched.running) + len(self.sched.swapping_in) \
-                    >= self.config.max_running:
+                    >= self._admission_target():
                 break
             free_tok = self.gpu_mgr.free_blocks() * bs
             if self._req(rid).context_tokens + bs > free_tok:
@@ -621,6 +654,10 @@ class FastSwitchEngine:
                 # everyone was skipped (pool exhausted, no victim): charge
                 # the iteration overhead so the sim clock still advances
                 t_iter = self.iter_cost.hw.iter_overhead_us
+            if decode_rids:
+                # feed the adaptive swap profiler the overlap window one
+                # decode iteration offers (decide_async cost model)
+                self.swap.note_decode_iter(t_iter)
             self.clock.advance(t_iter)
             for rid in decode_rids:
                 req = self._req(rid)
@@ -642,6 +679,41 @@ class FastSwitchEngine:
         m.total_time_us = self.clock.now_us
         m.ctx_switch_stall_us = self.swap.total_stall_us
         m.callstack_wall_s += time.perf_counter() - t_wall0
+
+    def _admission_target(self) -> int:
+        """Batch-bucket-aware admission cap (real mode).  The decode step
+        executes the next pow2 batch regardless of occupancy, so filling
+        the compiled bucket is FREE (padded rows already run) while
+        spilling a boundary doubles the padded batch and compiles a new
+        variant.  Admission therefore targets the current bucket and only
+        crosses a boundary when the candidates would fill at least half
+        of the next bucket's new rows — with a bounded hold (16
+        iterations) so a lone straggler is never starved; the priority
+        rebalance path is never gated.  Sim mode — and a cold runner with
+        no compiled variant to protect yet — keeps the plain
+        ``max_running`` cap."""
+        cap = self.config.max_running
+        if self.runner is None or self.runner.batch_bucket == 0:
+            return cap
+        cur = len(self.sched.running) + len(self.sched.swapping_in)
+        bucket = self.runner.batch_bucket
+        while bucket < cur:
+            bucket *= 2
+        if cur < min(bucket, cap):
+            self._bucket_hold = 0       # not at a boundary: no hold episode
+            return min(bucket, cap)
+        waiting = len(self.sched.waiting) + len(self.sched.swapped)
+        if waiting == 0:
+            self._bucket_hold = 0       # episode ended without crossing
+            return min(bucket, cap)
+        if waiting >= max(1, bucket // 2) or self._bucket_hold >= 16:
+            self._bucket_hold = 0
+            return min(bucket * 2, cap)
+        if self.metrics.iterations != self._bucket_hold_iter:
+            # count the hold once per engine iteration, not per call
+            self._bucket_hold += 1
+            self._bucket_hold_iter = self.metrics.iterations
+        return min(bucket, cap)
 
     def _find_victim(self, exclude) -> Optional[int]:
         victims = self.sched.victims_for_space(exclude)

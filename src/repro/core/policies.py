@@ -95,6 +95,14 @@ class EngineConfig:
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
+    # Swap data plane (DESIGN.md §4): swaps larger than this many blocks
+    # are split into chunk tasks the engine interleaves with decode steps
+    # (fine-grained conflict syncs then wait only on the overlapping
+    # chunk).  0 disables chunking.
+    swap_chunk_blocks: int = 64
+    # Adaptive swap profiler window: recent-swap records AND recent
+    # decode-iteration durations kept for decide_async's cost model.
+    r_info_window: int = 64
 
     def with_policy(self, name: str) -> "EngineConfig":
         return replace(self, policy=POLICIES[name])

@@ -102,8 +102,17 @@ class PriorityScheduler:
     # ------------------------------------------------------------------
 
     def desired_running(self, block_budget_tokens: int,
-                        block_size: int) -> List[int]:
-        """Top-priority active requests that fit the GPU token budget."""
+                        block_size: int, batch_bucket: int = 0) -> List[int]:
+        """Top-priority active requests that fit the GPU token budget.
+
+        ``batch_bucket`` > 0 (the real-mode runner's compiled pow2 decode
+        bucket) enables padded-batch economics: the decode step always
+        executes the next pow2 rows, so spilling a bucket boundary by a
+        straggler or two doubles the padded batch for little useful work.
+        The spill is trimmed back to the boundary — lowest-priority
+        ADMISSIONS first, never a currently running request (no
+        preemption for bucket aesthetics) — unless it fills at least half
+        of the next bucket's new rows."""
         cands = sorted(self.active_ids(), key=self.priority, reverse=True)
         chosen: List[int] = []
         budget = block_budget_tokens
@@ -118,6 +127,20 @@ class PriorityScheduler:
             if need <= budget:
                 chosen.append(rid)
                 budget -= need
+        if batch_bucket > 0 and len(chosen) > batch_bucket:
+            boundary = batch_bucket
+            while boundary * 2 <= len(chosen):
+                boundary *= 2
+            spill = len(chosen) - boundary
+            if spill < max(1, boundary // 2):
+                running = set(self.running)
+                # lowest-priority first, skipping (never trimming) running
+                # requests wherever they sit in the tail
+                for i in range(len(chosen) - 1, -1, -1):
+                    if len(chosen) <= boundary:
+                        break
+                    if chosen[i] not in running:
+                        chosen.pop(i)
         return chosen
 
     def classify_rebalance(self, desired: List[int]

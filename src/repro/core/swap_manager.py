@@ -48,6 +48,7 @@ class SwapTask:
     issued_at: float
     done_at: float
     gpu_blocks: Set[int] = field(default_factory=set)
+    cpu_blocks: Set[int] = field(default_factory=set)
     future: Optional[Future] = None
     synchronous: bool = False
 
@@ -71,13 +72,17 @@ class MultithreadingSwapManager:
     def __init__(self, hw: HardwareSpec, pools: Optional[PagedPools] = None,
                  *, async_enabled: bool = True, adaptive: bool = True,
                  n_threads: int = 4, sync_every: int = 16,
-                 sync_point_us: float = 5.0, r_info_window: int = 64):
+                 sync_point_us: float = 5.0, r_info_window: int = 64,
+                 sync_stall_frac: float = 0.04):
         self.hw = hw
         self.pools = pools
         self.async_enabled = async_enabled
         self.adaptive = adaptive
         self.sync_every = sync_every
         self.sync_point_us = sync_point_us
+        # adaptive decision: a swap whose predicted stall is below this
+        # fraction of one decode iteration is dispatched synchronously
+        self.sync_stall_frac = sync_stall_frac
         self._executor = ThreadPoolExecutor(max_workers=n_threads) \
             if pools is not None and pools.with_data else None
         self._pool_lock = threading.Lock()
@@ -92,6 +97,9 @@ class MultithreadingSwapManager:
         self.ongoing_swap_out: List[SwapTask] = []
         self.r_info: List[SwapRecord] = []
         self.r_info_window = r_info_window
+        # recent decode-iteration durations (the overlap window an async
+        # swap hides in), fed by the engine via note_decode_iter
+        self.iter_info: List[float] = []
         # metrics
         self.total_ops = 0
         self.total_blocks = 0
@@ -135,8 +143,17 @@ class MultithreadingSwapManager:
     def dispatch(self, clock: SimClock, req_id: int, direction: str,
                  runs: Sequence[Tuple[int, int]], block_bytes: int,
                  gpu_blocks: Sequence[int], *, asynchronous: bool,
-                 copy_fn=None) -> SwapTask:
-        """Issue one swap (all ops of one request, one direction)."""
+                 copy_fn=None, copy_deps: Sequence[Future] = (),
+                 cpu_blocks: Sequence[int] = ()) -> SwapTask:
+        """Issue one swap (all ops of one request, one direction).
+
+        ``copy_deps``: data-plane futures that must complete before
+        ``copy_fn`` runs (any copy touching CPU blocks a still-queued
+        swap-out writes — see ``data_deps``).  Awaited BEFORE the pool
+        lock is taken — a dependency's own copy needs that lock, so
+        waiting inside it would deadlock.  ``cpu_blocks``: the host
+        blocks this task's copy writes (out) or reads (in), tracked so
+        later copies can order behind it."""
         h2d = direction == "in"
         n_ops, n_blocks, nbytes, disp, ex = self._op_costs(
             runs, block_bytes, h2d)
@@ -163,12 +180,21 @@ class MultithreadingSwapManager:
                         n_blocks=n_blocks, bytes_total=nbytes,
                         issued_at=issued_at, done_at=done_at,
                         gpu_blocks=set(gpu_blocks),
+                        cpu_blocks=set(cpu_blocks),
                         synchronous=not asynchronous)
         if copy_fn is not None:
-            if asynchronous and self._executor is not None:
-                task.future = self._executor.submit(self._locked, copy_fn)
+            if asynchronous and self._executor is not None \
+                    and direction == "out":
+                # only d2h gathers run on workers: they READ the pool
+                # (forced before return) and never donate.  Pool-MUTATING
+                # swap-in copies always run on the dispatching thread so
+                # the pool's donation chain (decode, prefill insert,
+                # swap-in scatter) stays single-threaded — cross-thread
+                # donation of in-flight buffers tears KV (DESIGN.md §4.3).
+                task.future = self._executor.submit(
+                    self._run_copy, copy_deps, copy_fn)
             else:
-                self._locked(copy_fn)
+                self._run_copy(copy_deps, copy_fn)
         self.total_ops += n_ops
         self.total_blocks += n_blocks
         self.total_bytes += nbytes
@@ -192,6 +218,25 @@ class MultithreadingSwapManager:
     def _locked(self, fn):
         with self._pool_lock:
             return fn()
+
+    def _run_copy(self, deps: Sequence[Future], fn):
+        for f in deps:              # data ordering only — no sim-clock cost
+            f.result()
+        return self._locked(fn)
+
+    def data_deps(self, cpu_blocks: Sequence[int]) -> List[Future]:
+        """Data-plane futures a new copy touching ``cpu_blocks`` must
+        order behind: any still-in-flight swap-out WRITING an overlapping
+        host block.  Covers a swap-in reading blocks its own queued
+        swap-out writes AND a contamination reallocation handing a
+        victim's CPU blocks to another request while the victim's d2h is
+        still queued (late worker write would clobber the new owner).
+        GPU-side ordering is covered by block-conflict syncs — the
+        simulated stream serializes *latency*, but worker execution
+        order is not FIFO."""
+        s = set(cpu_blocks)
+        return [t.future for t in self.ongoing_swap_out
+                if t.future is not None and t.cpu_blocks & s]
 
     # ------------------------------------------------------------------
     # Algorithm 1 steps
@@ -247,24 +292,67 @@ class MultithreadingSwapManager:
     # Step 4: adaptive strategy
     # ------------------------------------------------------------------
 
-    def decide_async(self, running_batch: int, pending_swap_blocks: int
-                     ) -> bool:
+    def note_decode_iter(self, duration_us: float) -> None:
+        """Feed the adaptive profiler one decode-iteration duration — the
+        overlap window an asynchronous swap can hide in."""
+        self.iter_info.append(duration_us)
+        if len(self.iter_info) > self.r_info_window:
+            self.iter_info = self.iter_info[-self.r_info_window:]
+
+    def predicted_stall_us(self, runs: Sequence[Tuple[int, int]],
+                           block_bytes: int, h2d: bool,
+                           now_us: Optional[float] = None) -> float:
+        """What a SYNCHRONOUS dispatch of ``runs`` would stall the main
+        thread: queue wait behind in-flight swaps on the stream, plus
+        dispatch and execution of every op."""
+        _, _, _, disp, ex = self._op_costs(runs, block_bytes, h2d)
+        queue = max(0.0, self.stream_free_at - now_us) \
+            if now_us is not None else 0.0
+        return queue + disp + ex
+
+    def decide_async(self, running_batch: int, pending_swap_blocks: int,
+                     *, runs: Optional[Sequence[Tuple[int, int]]] = None,
+                     block_bytes: Optional[int] = None, h2d: bool = False,
+                     now_us: Optional[float] = None) -> bool:
         """Dynamic swapping decision (paper: async is NOT always best —
-        with many short requests the swap is small relative to the tokens a
-        sync swap would unblock)."""
+        with many short requests the swap is small relative to the tokens
+        a sync swap would unblock), driven by the cost model: compare the
+        PREDICTED synchronous stall (queue wait + dispatch + execution,
+        ``exec_time_us``) against the PREDICTED overlap window (the mean
+        of recent decode-iteration durations).  A swap whose stall is a
+        negligible fraction of one iteration (``sync_stall_frac``,
+        calibrated so the paper's "<8 blocks at batch>=32" region maps to
+        ~4% of an A10 iteration) is cheaper done synchronously — no
+        conflict-sync risk, no bookkeeping; a larger one pays for the
+        overlap.  Larger running batches mean longer iterations, widening
+        the sync-preferred region exactly as the paper observes.
+
+        When the caller has no runs/bytes at hand (legacy call sites,
+        tests), the per-block transfer cost is estimated from the full
+        recent-swap profile (``r_info``, bounded by ``r_info_window`` —
+        not a hardcoded sub-window)."""
         if not self.async_enabled:
             return False
         if not self.adaptive:
             return True
-        if not self.r_info:
-            return True
-        recent = self.r_info[-16:]
-        avg_blocks = sum(r.n_blocks for r in recent) / len(recent)
-        # small swaps + large running batch -> sync is cheap and keeps the
-        # token pipeline simple; large swaps -> overlap pays off
-        if pending_swap_blocks + avg_blocks < 8 and running_batch >= 32:
-            return False
-        return True
+        if runs and block_bytes:
+            stall = self.predicted_stall_us(runs, block_bytes, h2d, now_us)
+        else:
+            if not self.r_info:
+                return True
+            recent = self.r_info            # full profiler window
+            per_block = (sum(r.duration_us for r in recent)
+                         / max(1, sum(r.n_blocks for r in recent)))
+            stall = pending_swap_blocks * per_block
+            if now_us is not None:
+                stall += max(0.0, self.stream_free_at - now_us)
+        if self.iter_info:
+            window = sum(self.iter_info) / len(self.iter_info)
+        else:
+            # no decode history yet: iteration time grows roughly with
+            # the batch; scale the fixed overhead as a coarse stand-in
+            window = self.hw.iter_overhead_us * max(1.0, running_batch / 8.0)
+        return stall > self.sync_stall_frac * window
 
     # ------------------------------------------------------------------
 

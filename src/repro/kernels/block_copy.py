@@ -104,9 +104,118 @@ def block_copy_grouped(src_pool, dst_pool, src_starts, dst_starts, run_lens,
       run_lens.astype(jnp.int32), dst_pool, src_pool)
 
 
+def _gather_run_kernel(src_idx_ref, dst_idx_ref, len_ref, d_ref, s_ref, o_ref):
+    r = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j < len_ref[r])
+    def _copy():
+        o_ref[...] = s_ref[...]
+
+
+def _copy_runs_3d(src, dst, src_starts, dst_starts, run_lens,
+                  run_blocks: int, interpret: bool) -> jnp.ndarray:
+    """Shared runs-copy over 3-D block pools: src[:, s:s+l] ->
+    dst[:, d:d+l] per run, grid (n_runs, run_blocks), masked steps and
+    pad blocks keep dst's content through the output alias.  NOT jitted
+    here: the jitted (bucketed, donating) wrappers live in
+    ``kernels/ops.py``."""
+    n_runs = src_starts.shape[0]
+    C, n_src, E = src.shape
+    n_dst = dst.shape[1]
+
+    def s_map(r, j, srcs, dsts, lens):
+        return (0, jnp.minimum(srcs[r] + j, n_src - 1), 0)
+
+    def o_map(r, j, srcs, dsts, lens):
+        return (0, jnp.minimum(dsts[r] + j, n_dst - 1), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_runs, run_blocks),
+        in_specs=[pl.BlockSpec((C, 1, E), o_map),    # aliased dst (unread)
+                  pl.BlockSpec((C, 1, E), s_map)],
+        out_specs=pl.BlockSpec((C, 1, E), o_map),
+    )
+    return pl.pallas_call(
+        _gather_run_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, src.dtype),
+        input_output_aliases={3: 0},       # dst (4th operand) -> output
+        interpret=interpret,
+    )(src_starts.astype(jnp.int32), dst_starts.astype(jnp.int32),
+      run_lens.astype(jnp.int32), dst, src)
+
+
+def block_gather_runs(pool3, slab0, src_starts, dst_starts, run_lens,
+                      run_blocks: int, interpret: bool = True) -> jnp.ndarray:
+    """Gather contiguous pool runs into a contiguous staging slab:
+    pool3[:, s:s+l] -> slab[:, d:d+l] per run (the d2h half of the staged
+    swap path — one streaming DMA chain per run, then the whole slab
+    moves host-ward as ONE transfer instead of N scattered block copies).
+    pool3: (C, nb, E) — the KV pool with leading (layer, k/v) dims
+    collapsed; slab0: (C, n_slab, E) aliased into the output."""
+    return _copy_runs_3d(pool3, slab0, src_starts, dst_starts, run_lens,
+                         run_blocks, interpret)
+
+
+def block_scatter_runs(slab, pool3, src_starts, dst_starts, run_lens,
+                       run_blocks: int, interpret: bool = True) -> jnp.ndarray:
+    """Scatter a contiguous staging slab back into pool runs:
+    slab[:, s:s+l] -> pool3[:, d:d+l] per run (the h2d half of the staged
+    swap path).  pool3 is aliased into the output — callers jit this with
+    the pool DONATED (see ``kernels/ops.py``) so the write is in place,
+    never an un-donated full-pool ``.at[].set`` copy."""
+    return _copy_runs_3d(slab, pool3, src_starts, dst_starts, run_lens,
+                         run_blocks, interpret)
+
+
 def runs_to_indices(runs: List[Tuple[int, int]]) -> List[int]:
     """Expand [(start, n)] runs to ONE flat per-block index list."""
     idx: List[int] = []
     for start, n in runs:
         idx.extend(range(start, start + n))
     return idx
+
+
+def trim_runs(runs: List[Tuple[int, int]], n_blocks: int
+              ) -> List[Tuple[int, int]]:
+    """First ``n_blocks`` blocks of [(start, n)] runs (a partially backed
+    transfer: the CPU copy may be shorter than the GPU allocation when
+    contamination capped the reuse increment)."""
+    out: List[Tuple[int, int]] = []
+    for start, n in runs:
+        if n_blocks <= 0:
+            break
+        take = min(n, n_blocks)
+        out.append((start, take))
+        n_blocks -= take
+    return out
+
+
+def split_runs(runs: List[Tuple[int, int]], chunk_blocks: int
+               ) -> List[List[Tuple[int, int]]]:
+    """Split [(start, n)] runs into chunks of <= chunk_blocks blocks each
+    (a run crossing a chunk boundary is cut).  ``chunk_blocks <= 0``
+    disables chunking.  The engine dispatches one swap task per chunk so
+    a long transfer interleaves with decode steps instead of serializing
+    behind the pool lock."""
+    if chunk_blocks <= 0:
+        return [list(runs)] if runs else []
+    chunks: List[List[Tuple[int, int]]] = []
+    cur: List[Tuple[int, int]] = []
+    room = chunk_blocks
+    for start, n in runs:
+        while n > 0:
+            take = min(n, room)
+            cur.append((start, take))
+            start += take
+            n -= take
+            room -= take
+            if room == 0:
+                chunks.append(cur)
+                cur = []
+                room = chunk_blocks
+    if cur:
+        chunks.append(cur)
+    return chunks

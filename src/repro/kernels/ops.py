@@ -60,6 +60,107 @@ def copy_block_runs(src_pool, dst_pool, runs: Sequence[Tuple[int, int]],
         interpret=INTERPRET if interpret is None else interpret)
 
 
+def _next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def slab_bucket_blocks(n_blocks: int) -> int:
+    """Pow2 slab block count the staged swap kernels are bucketed to —
+    the ONE place that defines it, so host-side staging buffers
+    (``PagedPools.copy_in_staged``) can never diverge from the size the
+    jitted scatter asserts against."""
+    return _next_pow2(n_blocks)
+
+
+def _pad_runs(runs: Sequence[Tuple[int, int]]
+              ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int, int, int]:
+    """Bucket one swap's runs for the jitted staged copies: pad the run
+    list to a pow2 count (zero-length runs mask off), size the slab and
+    the per-run grid extent to pow2s.  Returns (src_starts, slab_offsets,
+    lens, n_runs_pad, n_slab, run_blocks) — O(log^2) compiled variants
+    over any mix of swap shapes."""
+    n_runs = _next_pow2(len(runs))
+    src = np.zeros((n_runs,), np.int32)
+    dst = np.zeros((n_runs,), np.int32)
+    lens = np.zeros((n_runs,), np.int32)
+    off = 0
+    for i, (start, n) in enumerate(runs):
+        src[i] = start
+        dst[i] = off
+        lens[i] = n
+        off += n
+    return (src, dst, lens, n_runs, _next_pow2(off),
+            _next_pow2(int(max(n for _, n in runs))))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_slab", "run_blocks", "interpret"))
+def _gather_swap(pool, src_starts, dst_starts, lens, *,
+                 n_slab: int, run_blocks: int, interpret: bool):
+    L, K, nb, bs, H, D = pool.shape
+    p3 = pool.reshape(L * K, nb, bs * H * D)
+    slab0 = jnp.zeros((L * K, n_slab, bs * H * D), pool.dtype)
+    return _bc.block_gather_runs(p3, slab0, src_starts, dst_starts, lens,
+                                 run_blocks=run_blocks, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("run_blocks", "interpret"),
+                   donate_argnums=(0,))
+def _scatter_swap(pool, slab, src_starts, dst_starts, lens, *,
+                  run_blocks: int, interpret: bool):
+    L, K, nb, bs, H, D = pool.shape
+    p3 = pool.reshape(L * K, nb, bs * H * D)
+    p3 = _bc.block_scatter_runs(slab, p3, src_starts, dst_starts, lens,
+                                run_blocks=run_blocks, interpret=interpret)
+    return p3.reshape(pool.shape)
+
+
+def gather_swap_runs(pool, runs: Sequence[Tuple[int, int]],
+                     interpret: bool | None = None):
+    """Run-coalesced staged swap-out gather: copy the pool blocks named by
+    ``runs`` [(start, n_blocks)] into one contiguous device staging slab
+    (one grouped kernel over runs), so the d2h leg is a SINGLE transfer
+    of the slab instead of N scattered per-block copies.
+
+    pool: (L, 2, nb, bs, Hkv, D) — read only (not donated; the gather
+    never invalidates the live pool).  Returns (slab, n_blocks) where
+    slab is (L*2, n_slab_pow2, bs*Hkv*D); blocks [n_blocks:] are padding.
+    All shapes are pow2-bucketed so the jit cache stays O(log^2)."""
+    assert runs, "gather_swap_runs needs at least one run"
+    src, dst, lens, _, n_slab, run_blocks = _pad_runs(runs)
+    slab = _gather_swap(pool, jnp.asarray(src), jnp.asarray(dst),
+                        jnp.asarray(lens), n_slab=n_slab,
+                        run_blocks=run_blocks,
+                        interpret=INTERPRET if interpret is None else interpret)
+    return slab, int(sum(n for _, n in runs))
+
+
+def scatter_swap_runs(pool, slab, runs: Sequence[Tuple[int, int]],
+                      interpret: bool | None = None):
+    """Run-coalesced staged swap-in scatter: copy slab blocks [0, total)
+    into the pool blocks named by ``runs``.  pool is DONATED — the write
+    is in place and the caller MUST rebind its reference to the returned
+    array (owner-of-record protocol, DESIGN.md §4.2).  slab: (L*2,
+    n_slab_pow2, bs*Hkv*D) as produced by the host staging path."""
+    assert runs, "scatter_swap_runs needs at least one run"
+    src, dst, lens, _, n_slab, run_blocks = _pad_runs(runs)
+    assert slab.shape[1] == n_slab, (slab.shape, n_slab)
+    # gather offsets are the slab side here: slab[dst] -> pool[src]
+    return _scatter_swap(pool, slab, jnp.asarray(dst), jnp.asarray(src),
+                         jnp.asarray(lens), run_blocks=run_blocks,
+                         interpret=INTERPRET if interpret is None else interpret)
+
+
+def swap_gather_cache_size() -> int:
+    """Compiled-variant count of the staged gather (bucketing metric)."""
+    return int(_gather_swap._cache_size())
+
+
+def swap_scatter_cache_size() -> int:
+    """Compiled-variant count of the staged scatter (bucketing metric)."""
+    return int(_scatter_swap._cache_size())
+
+
 @functools.partial(jax.jit, static_argnames=("block_size",),
                    donate_argnums=(0,))
 def _insert_prefill(pool, k, v, blocks, *, block_size: int):

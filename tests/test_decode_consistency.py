@@ -171,38 +171,75 @@ def _run_real_engine(model, temperature=0.0, top_k=0, top_p=1.0, seed=0):
     return eng
 
 
-def test_engine_real_greedy_parity_with_prerefactor_path(engine_model):
-    """Greedy real-mode engine run vs a straight-line replay through the
-    PRE-REFACTOR data plane (host-side ``PagedPools.write_tokens`` prefill
-    + argmax ``paged_decode_step``): token histories must be
-    bit-identical for every conversation."""
+def _replay_prerefactor(engine_model, conv, cid):
+    """Straight-line replay of one conversation through the PRE-REFACTOR
+    data plane (host-side ``PagedPools.write_tokens`` prefill + argmax
+    ``paged_decode_step``) — schedule-independent greedy reference."""
     from repro.cache.paged import PagedPools, PoolSpec
     from repro.models.paged import paged_decode_step, prefill_kv
     cfg, params = engine_model["cfg"], engine_model["params"]
-    eng = _run_real_engine(engine_model)
     bs = 16
+    pools = PagedPools(PoolSpec.from_config(cfg, 64, 64, bs))
+    hist = []
+    for tix, turn in enumerate(conv.turns):
+        rng = np.random.RandomState((cid * 1009 + tix) % (2 ** 31))
+        hist.extend(rng.randint(1, cfg.vocab_size,
+                                size=turn.prompt_tokens).tolist())
+        logits, k, v = prefill_kv(
+            params, jnp.asarray([hist], jnp.int32), cfg=cfg)
+        nblk = (len(hist) + bs - 1) // bs
+        pools.write_tokens(list(range(nblk)), 0,
+                           np.asarray(k), np.asarray(v))
+        hist.append(int(np.argmax(np.asarray(logits))))
+        for _ in range(turn.response_tokens - 1):
+            ctx = len(hist) - 1
+            bt = jnp.asarray([list(range(ctx // bs + 1))], jnp.int32)
+            nxt, _, pools.gpu = paged_decode_step(
+                params, pools.gpu, bt, jnp.asarray([ctx], jnp.int32),
+                jnp.asarray([hist[-1]], jnp.int32), cfg=cfg)
+            hist.append(int(nxt[0]))
+    return hist
+
+
+def test_engine_real_greedy_parity_with_prerefactor_path(engine_model):
+    """Greedy real-mode engine run vs the pre-refactor straight-line
+    replay: token histories must be bit-identical per conversation."""
+    eng = _run_real_engine(engine_model)
     for cid, conv in enumerate(_mk_convs()):
         got = eng._token_hist_by_conv[cid]
-        pools = PagedPools(PoolSpec.from_config(cfg, 64, 64, bs))
-        hist = []
-        for tix, turn in enumerate(conv.turns):
-            rng = np.random.RandomState((cid * 1009 + tix) % (2 ** 31))
-            hist.extend(rng.randint(1, cfg.vocab_size,
-                                    size=turn.prompt_tokens).tolist())
-            logits, k, v = prefill_kv(
-                params, jnp.asarray([hist], jnp.int32), cfg=cfg)
-            nblk = (len(hist) + bs - 1) // bs
-            pools.write_tokens(list(range(nblk)), 0,
-                               np.asarray(k), np.asarray(v))
-            hist.append(int(np.argmax(np.asarray(logits))))
-            for _ in range(turn.response_tokens - 1):
-                ctx = len(hist) - 1
-                bt = jnp.asarray([list(range(ctx // bs + 1))], jnp.int32)
-                nxt, _, pools.gpu = paged_decode_step(
-                    params, pools.gpu, bt, jnp.asarray([ctx], jnp.int32),
-                    jnp.asarray([hist[-1]], jnp.int32), cfg=cfg)
-                hist.append(int(nxt[0]))
-        assert got == hist, f"conv {cid} diverged from pre-refactor replay"
+        assert got == _replay_prerefactor(engine_model, conv, cid), \
+            f"conv {cid} diverged from pre-refactor replay"
+
+
+def test_engine_real_greedy_parity_under_preemption_swap(engine_model):
+    """ISSUE 3 acceptance: the same parity must hold under a schedule
+    full of preemptions and staged (chunked) swaps — a tiny pool and
+    violent priority churn force swap-out -> conflict -> swap-in round
+    trips through the run-coalesced donated data plane, and greedy decode
+    output must STILL be bit-identical to the pre-refactor replay."""
+    from repro.core import EngineConfig, FastSwitchEngine
+    from repro.data.priority import PriorityTrace
+    from repro.data.sharegpt import Conversation, Turn
+
+    def mk():
+        return [Conversation(conv_id=i, arrival_s=0.0,
+                             turns=[Turn(16, 12), Turn(8, 8)],
+                             think_time_s=0.2) for i in range(4)]
+
+    cfg = EngineConfig(mode="real", num_gpu_blocks=8, num_cpu_blocks=256,
+                       max_running=4, max_batch=4, block_size=16,
+                       swap_chunk_blocks=1).with_policy("fastswitch")
+    eng = FastSwitchEngine(cfg, mk(),
+                           trace=PriorityTrace("random", 0.5, seed=13),
+                           model_bundle=engine_model)
+    eng.run(max_iterations=20_000)
+    assert eng.done()
+    assert eng.metrics.preemptions > 0, "schedule never preempted"
+    assert eng.metrics.swap_in_count > 0, "schedule never swapped in"
+    for cid, conv in enumerate(mk()):
+        got = eng._token_hist_by_conv[cid]
+        assert got == _replay_prerefactor(engine_model, conv, cid), \
+            f"conv {cid} diverged under the preemption+swap schedule"
 
 
 def test_engine_real_sampling_deterministic_under_seed(engine_model):

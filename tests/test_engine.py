@@ -248,7 +248,8 @@ def test_swapping_in_promoted_after_conflict_sync():
                        block_size=16).with_policy("fastswitch")
     eng = FastSwitchEngine(cfg, convs,
                            trace=PriorityTrace("random", 1e-9, seed=0))
-    eng.step()
+    eng.swap.adaptive = False     # force async: the cost model would pick
+    eng.step()                    # sync for a 1-block swap on an idle batch
     assert 0 in eng.sched.running
     eng._preempt(0)
     assert 0 in eng.sched.swapped
