@@ -15,6 +15,10 @@ plus a prefill-insertion comparison:
                          to the host and scattered back per request
   * ``prefill_runner`` — ``DecodeRunner.prefill``: jitted shape-bucketed
                          scatter, KV stays on device end to end
+and a monolithic-vs-chunked prefill row (ISSUE 4): decode tokens the
+4-row batch emits DURING a long prompt's prefill window — zero for the
+monolithic path (the prompt lands inside one admission iteration), a
+full batch per chunk for the bucketed chunked path (DESIGN.md §5).
 
 CSV: name,us_per_call,derived  (derived = steps/s and compile counts).
 ``--smoke`` shrinks the run for the tier-1 verify wrapper.
@@ -118,6 +122,64 @@ def run_prefill_runner(cfg, params, pool, trash, prompts):
     return time.perf_counter() - t0, insert_prefill_cache_size() - c0, pool
 
 
+def run_prefill_interleave(smoke: bool):
+    """ISSUE 4 row: monolithic vs chunked prefill through the REAL
+    engine — decode tokens emitted during a long prompt's prefill window
+    (monolithic admits the whole prompt inside one iteration: zero
+    interleaving; chunked emits a full decode batch between chunks)."""
+    from dataclasses import replace
+
+    from repro.core import EngineConfig, FastSwitchEngine
+    from repro.core.policies import POLICIES
+    from repro.data.priority import PriorityTrace
+    from repro.data.sharegpt import Conversation, Turn
+
+    cfg_m = get_smoke_config("qwen2-1.5b")
+    params = T.init_params(cfg_m, jax.random.PRNGKey(0))
+    model = {"cfg": cfg_m, "params": params}
+    prompt = 256 if smoke else 1024
+    chunk = 64
+    resp = 16 if smoke else 40
+
+    def run(chunked):
+        pol = replace(POLICIES["fastswitch"], initial_group_blocks=4)
+        if chunked:
+            pol = replace(pol, chunked_prefill_tokens=chunk)
+        convs = [Conversation(conv_id=i, arrival_s=0.0,
+                              turns=[Turn(8, resp)], think_time_s=0.1)
+                 for i in range(4)]
+        convs.append(Conversation(conv_id=4, arrival_s=0.0,
+                                  turns=[Turn(prompt, 2)], think_time_s=0.1))
+        cfg = EngineConfig(mode="real", num_gpu_blocks=prompt // 16 + 24,
+                           num_cpu_blocks=512, max_running=8, max_batch=8,
+                           block_size=16, policy=pol)
+        eng = FastSwitchEngine(cfg, convs, trace=PriorityTrace(),
+                               model_bundle=model)
+        reqs = {}
+        decode_in_window = chunk_iters = 0
+        t0 = time.perf_counter()
+        while not eng.done() and eng.metrics.iterations < 5000:
+            before = {r: q.generated for r, q in eng.sched.requests.items()
+                      if r < 4}
+            reqs.update(eng.sched.requests)
+            eng.step()
+            long_req = reqs.get(4)
+            if long_req is not None and long_req.prefill_remaining > 0:
+                chunk_iters += 1
+                decode_in_window += sum(
+                    q.generated - before.get(r, q.generated)
+                    for r, q in eng.sched.requests.items() if r < 4)
+        dt = time.perf_counter() - t0
+        eng.swap.shutdown()
+        return dt, eng.metrics.iterations, decode_in_window, chunk_iters
+
+    for name, chunked in (("monolithic", False), ("chunked", True)):
+        dt, iters, toks, citers = run(chunked)
+        print(f"prefill_{name},{dt / max(iters, 1) * 1e6:.1f},"
+              f"decode_tokens_during_prefill={toks}"
+              f";prefill_window_iters={citers};prompt={prompt}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -160,6 +222,10 @@ def main() -> None:
           f"prefills_s={n / dt_h:.2f}")
     print(f"prefill_insert_runner,{dt_r / n * 1e6:.1f},"
           f"prefills_s={n / dt_r:.2f};insert_compiles={icompiles}")
+
+    # chunked-vs-monolithic prefill: decode tokens during the prefill
+    # window (ISSUE 4 — the tail-TBT lever)
+    run_prefill_interleave(args.smoke)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
 #!/usr/bin/env sh
 # Tier-1 verify in one command (ISSUE 2 tooling satellite):
-#   scripts/tier1.sh            # full test suite + hot-path smoke bench
-#   scripts/tier1.sh -k engine  # extra args forwarded to pytest
+#   scripts/tier1.sh                # full test suite + hot-path smoke benches
+#   scripts/tier1.sh -k engine      # extra args forwarded to pytest
+#   scripts/tier1.sh -m "not slow"  # deselect the heaviest parity replays
+#                                   # (what the push/PR CI job runs; the
+#                                   # scheduled job runs the full suite)
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"

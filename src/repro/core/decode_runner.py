@@ -39,6 +39,15 @@ pipeline (DESIGN.md §3.5/§3.6):
     (``kernels.ops.insert_prefill``), then registers the row directly in
     the persistent device tables; the engine no longer round-trips
     prefill KV through the host (``PagedPools.write_tokens``).
+  * **Chunked prefill state machine** (DESIGN.md §5) — ``prefill_begin /
+    prefill_chunk_compute / prefill_chunk_insert / prefill_finish /
+    prefill_abort``: long prompts are processed as pow2-bucketed,
+    position-masked chunks (``kernels.ops.prefill_chunk``) whose KV is
+    carried chunk to chunk on device and inserted block-aligned into the
+    pool, so the engine can interleave decode iterations between chunks
+    and prompt-length variety compiles O(log^2) prefill variants instead
+    of one per length.  The whole-prompt ``prefill()`` path is the same
+    machinery run as a single chunk — one bit-exact forward for both.
   * **Device-side sampling** — temperature/top-k/top-p sampling is fused
     into the decode step with a per-row on-device array of base PRNG
     keys; the step folds the position in, so the random stream is a pure
@@ -62,8 +71,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.models.paged import (paged_decode_step_device, prefill_kv,
-                                sample_tokens)
+from repro.models.paged import paged_decode_step_device, sample_tokens
 
 
 def next_pow2(n: int) -> int:
@@ -85,6 +93,28 @@ class RunnerStats:
     rows_updated: int = 0          # incremental row scatters
     host_syncs: int = 0            # deferred next-token materializations
     prefills: int = 0              # runner-managed prefill insertions
+    prefill_chunks: int = 0        # chunked-prefill forward launches
+    prefill_aborts: int = 0        # mid-prefill preemptions
+
+
+@dataclass
+class _PrefillState:
+    """One in-flight (possibly chunked) prefill (DESIGN.md §5).
+
+    ``k_carry``/``v_carry`` hold the per-layer K/V computed so far —
+    pow2-bucketed device buffers the chunk forward appends to and
+    attends against; ``pos`` counts real tokens processed.  The state
+    lives across engine iterations while decode steps interleave with
+    the remaining chunks, and is dropped whole on a mid-prefill
+    preemption (``prefill_abort``)."""
+    view: DecodeRequestView
+    toks: List[int]                # tokens to process (hist, or hist[:-1])
+    emit_first: bool
+    pos: int = 0                   # real tokens already processed
+    k_carry: Optional[jnp.ndarray] = None     # (L, S_pad, Hkv, D)
+    v_carry: Optional[jnp.ndarray] = None
+    last_logits: Optional[jnp.ndarray] = None # (V,) at the last real pos
+    emitted: bool = False          # first token already appended to hist
 
 
 class DecodeRunner:
@@ -120,6 +150,8 @@ class DecodeRunner:
         self._active_rows: frozenset = frozenset()
         # deferred next-token sync: ([(row, token_history)], device array)
         self._pending: Optional[Tuple[list, jnp.ndarray]] = None
+        # in-flight chunked prefills, keyed by rid (DESIGN.md §5)
+        self._prefills: Dict[int, _PrefillState] = {}
         self.stats = RunnerStats()
 
     @property
@@ -331,53 +363,145 @@ class DecodeRunner:
                                   self._row_key(view.rid))})
         return True
 
-    def prefill_compute(self, view: DecodeRequestView, *,
-                        emit_first: bool) -> Tuple:
-        """Phase 1 of runner-managed prefill (DESIGN.md §3.5): compute KV
-        for the view's history, pad it to the page bucket, and — with
-        ``emit_first`` (a fresh turn, not a recompute re-prefill) — emit
-        the response's first token from the prompt's last position
-        (sampled on device per the runner's sampling config; bit-exact
-        greedy argmax at temperature 0) into ``view.token_history``.
+    # -- chunked prefill state machine (DESIGN.md §5) -------------------
 
-        Touches NO pool state, so the engine runs it OUTSIDE the pool
-        lock — prefill compute (the expensive part) no longer blocks
-        in-flight swap copies.  Returns the staged (k, v, blocks) for
-        ``prefill_insert``."""
+    def prefill_begin(self, view: DecodeRequestView, *,
+                      emit_first: bool, reused_tokens: int = 0,
+                      pool=None) -> int:
+        """Open a (possibly chunked) prefill for ``view``: the runner
+        will compute KV for the view's history (all of it with
+        ``emit_first`` — a fresh turn; all but the pending last token on
+        a recompute re-prefill) chunk by chunk through the bucketed
+        position-masked forward.
+
+        ``reused_tokens`` > 0 with a ``pool``: the first
+        ``reused_tokens`` positions' KV is already RESIDENT in the pool
+        (the reuse mechanism's restored prefix) — the carry is seeded
+        from it (``ops.seed_prefill_carry``, bit-identical to
+        recomputing) and chunking starts at the block-aligned floor of
+        ``reused_tokens``, so re-admissions neither recompute nor
+        re-bill the prefix.  The caller must hold the pool lock (the
+        seed gather reads the pool).
+
+        Returns the token count left TO PROCESS
+        (``prefill_chunk_compute`` consumes it)."""
+        assert self.bs & (self.bs - 1) == 0, \
+            f"chunked prefill needs a pow2 block size, got {self.bs}"
         self.flush()              # history must be current before reading
         hist = view.token_history
         toks = hist if emit_first else hist[:-1]
-        logits, k, v = prefill_kv(self.mb["params"],
-                                  jnp.asarray([toks], jnp.int32),
-                                  cfg=self.mb["cfg"])
+        start = 0
+        k_c = v_c = None
+        if reused_tokens > 0 and pool is not None:
+            start = min(reused_tokens - reused_tokens % self.bs,
+                        len(toks) - 1)      # always >= 1 token to process
+            start = max(start - start % self.bs, 0)
+            if start > 0:
+                k_c, v_c = ops.seed_prefill_carry(
+                    pool, view.block_ids, start, trash=self.trash)
+        self._prefills[view.rid] = _PrefillState(
+            view=view, toks=list(toks), emit_first=emit_first, pos=start,
+            k_carry=k_c, v_carry=v_c)
+        return len(toks) - start
+
+    def prefill_pending(self, rid: int) -> int:
+        """Tokens the open prefill for ``rid`` has left to process."""
+        st = self._prefills[rid]
+        return len(st.toks) - st.pos
+
+    def prefill_chunk_compute(self, rid: int, n_tokens: int) -> Optional[Tuple]:
+        """Compute KV for the next ``n_tokens`` of the open prefill: one
+        bucketed chunk forward attending the carry buffers (bit-exact
+        with the monolithic path — see ``models.paged.prefill_kv_chunk``).
+        Non-final chunks must be block-size multiples so every chunk's
+        pool insert stays block-aligned.  Touches NO pool state, so the
+        engine runs it OUTSIDE the pool lock.  Returns the staged
+        (k, v, blocks) for ``prefill_chunk_insert``."""
+        st = self._prefills[rid]
+        if n_tokens <= 0:
+            return None
         bs = self.bs
-        ids = list(view.block_ids)
-        n_pages = max(1, -(-len(toks) // bs))
-        pages = next_pow2(max(n_pages, self._min_pages))
-        blocks = np.full((pages,), self.trash, np.int32)
-        real = ids[:n_pages]
-        blocks[:len(real)] = real
-        pad = pages * bs - len(toks)
-        if pad:
-            pw = ((0, 0), (0, pad), (0, 0), (0, 0))
-            k = jnp.pad(k, pw)
-            v = jnp.pad(v, pw)
-        if emit_first:
-            first_key = self._row_key(view.rid, salt=1)
-            tok = sample_tokens(logits[None, :], first_key[None, :],
-                                jnp.asarray([len(hist)], jnp.int32),
-                                self._temp, self._top_k, self._top_p)
-            hist.append(int(tok[0]))
-        return k, v, blocks
+        assert st.pos % bs == 0, \
+            f"chunk start {st.pos} not block-aligned (bs={bs})"
+        assert st.pos + n_tokens <= len(st.toks), (st.pos, n_tokens)
+        chunk = st.toks[st.pos:st.pos + n_tokens]
+        st.last_logits, st.k_carry, st.v_carry, k_c, v_c = \
+            ops.prefill_chunk(self.mb["params"], chunk, st.k_carry,
+                              st.v_carry, st.pos, cfg=self.mb["cfg"],
+                              block_size=bs)
+        c_pad = k_c.shape[1]
+        n_pages = -(-n_tokens // bs)
+        blocks = np.full((c_pad // bs,), self.trash, np.int32)
+        b0 = st.pos // bs
+        blocks[:n_pages] = list(st.view.block_ids)[b0:b0 + n_pages]
+        st.pos += n_tokens
+        self.stats.prefill_chunks += 1
+        return k_c, v_c, blocks
+
+    def prefill_chunk_insert(self, rid: int, pool, staged):
+        """Scatter one staged chunk into the DONATED pool through the
+        block table (jitted, shape-bucketed — the existing staged insert
+        path).  Run under the pool lock; the caller must rebind its pool
+        reference to the returned array."""
+        if staged is None:
+            return pool
+        k, v, blocks = staged
+        return ops.insert_prefill(pool, k, v, blocks, self.bs)
+
+    def _prefill_emit(self, st: _PrefillState) -> None:
+        """Emit the response's first token from the final chunk's last
+        real position (sampled on device per the runner's sampling
+        config; bit-exact greedy argmax at temperature 0)."""
+        if not st.emit_first or st.emitted:
+            return
+        hist = st.view.token_history
+        first_key = self._row_key(st.view.rid, salt=1)
+        tok = sample_tokens(st.last_logits[None, :], first_key[None, :],
+                            jnp.asarray([len(hist)], jnp.int32),
+                            self._temp, self._top_k, self._top_p)
+        hist.append(int(tok[0]))
+        st.emitted = True
+
+    def prefill_finish(self, rid: int) -> None:
+        """Close a fully-processed prefill: emit the first token (fresh
+        turns), register the row in the persistent device tables, and
+        drop the carry buffers."""
+        st = self._prefills.pop(rid)
+        assert st.pos == len(st.toks), \
+            f"prefill_finish with {len(st.toks) - st.pos} tokens pending"
+        self._prefill_emit(st)
+        self.stats.prefills += 1
+        self._register(st.view)
+
+    def prefill_abort(self, rid: int) -> None:
+        """Mid-prefill preemption: drop the carry buffers and the state.
+        The processed prefix KV already sits in the pool (the engine
+        swap-outs what it wants to keep); resumption re-opens a fresh
+        prefill."""
+        if self._prefills.pop(rid, None) is not None:
+            self.stats.prefill_aborts += 1
+
+    # -- monolithic convenience wrappers (engine short-prompt path) -----
+
+    def prefill_compute(self, view: DecodeRequestView, *,
+                        emit_first: bool) -> Optional[Tuple]:
+        """Phase 1 of a whole-prompt prefill: one bucketed chunk over the
+        full history (same bit-exact forward, O(log^2) jit variants) plus
+        the first-token emit.  Touches NO pool state, so the engine runs
+        it OUTSIDE the pool lock.  Returns the staged (k, v, blocks) for
+        ``prefill_insert``."""
+        total = self.prefill_begin(view, emit_first=emit_first)
+        staged = self.prefill_chunk_compute(view.rid, total)
+        self._prefill_emit(self._prefills[view.rid])
+        return staged
 
     def prefill_insert(self, view: DecodeRequestView, pool, staged):
-        """Phase 2: scatter the staged KV into the DONATED pool through
-        the block table (jitted, shape-bucketed — O(log2 pages) compiled
-        variants) and register the row in the persistent device tables.
-        Run under the pool lock; returns the new pool — the caller must
-        rebind its reference."""
-        k, v, blocks = staged
-        pool = ops.insert_prefill(pool, k, v, blocks, self.bs)
+        """Phase 2: scatter the staged KV into the DONATED pool and
+        register the row in the persistent device tables.  Run under the
+        pool lock; returns the new pool — the caller must rebind its
+        reference."""
+        pool = self.prefill_chunk_insert(view.rid, pool, staged)
+        self._prefills.pop(view.rid, None)
         self.stats.prefills += 1
         self._register(view)
         return pool

@@ -204,7 +204,8 @@ class FastSwitchEngine:
     # swap operations
     # ------------------------------------------------------------------
 
-    def _swap_out(self, rid: int, keep_copy: bool) -> None:
+    def _swap_out(self, rid: int, keep_copy: bool,
+                  last_slot_written: bool = False) -> None:
         """Preempt: move KV to CPU.  With reuse, only the increment beyond
         the valid CPU copy is transferred.  In recompute mode the KV is
         simply dropped (resumption re-prefills the whole context)."""
@@ -222,7 +223,11 @@ class FastSwitchEngine:
         # restore the garbage into attended positions (token corruption
         # whenever a preemption lands on a block-aligned context).  The
         # now-valid slot is picked up by the NEXT increment instead.
-        total = max(req.context_tokens - 1, 0)
+        # ``last_slot_written``: a mid-prefill abort has NO pending decode
+        # token — every context_tokens position holds chunk-inserted KV,
+        # so the whole processed prefix is claimable.
+        total = req.context_tokens if last_slot_written \
+            else max(req.context_tokens - 1, 0)
         self.reuse.update_priority(rid, self.sched.priority(rid))
         inc, _cpu_runs = self.reuse.record_swap_out(
             rid, total, requesting_priority=self.sched.priority(rid))
@@ -338,12 +343,37 @@ class FastSwitchEngine:
 
     def _preempt(self, rid: int) -> None:
         """Swap mode: KV to CPU, request -> SWAPPED.  Recompute mode: KV
-        dropped, request -> WAITING for re-prefill."""
+        dropped, request -> WAITING for re-prefill.  A real-mode request
+        caught MID chunked prefill has no pending decode token to resume
+        from — it aborts to WAITING instead (the processed prefix is kept
+        as a CPU reuse copy; re-admission opens a fresh prefill)."""
+        req = self._req(rid)
+        if self.pools is not None and req.prefill_remaining > 0:
+            self._abort_chunked_prefill(rid)
+            return
         self._swap_out(rid, keep_copy=True)
         if self.config.policy.preemption_mode == "recompute":
             self.sched.move(rid, ReqState.WAITING)
         else:
             self.sched.move(rid, ReqState.SWAPPED)
+
+    def _abort_chunked_prefill(self, rid: int) -> None:
+        """Mid-prefill preemption (real mode, DESIGN.md §5): drop the
+        runner's carry buffers, keep the processed prefix as a CPU reuse
+        copy (``context_tokens`` counts exactly the chunk-inserted
+        tokens), roll back the turn's prompt extension and return the
+        request to WAITING — the next ``_admit`` regenerates the
+        deterministic prompt and opens a fresh chunked prefill, reusing
+        the saved prefix up to ``prefix_tokens``."""
+        req = self._req(rid)
+        self.runner.prefill_abort(rid)
+        self._swap_out(rid, keep_copy=True, last_slot_written=True)
+        req.prefill_remaining = 0
+        req.resume_tokens = 0          # recompute mode: fresh _admit, not
+        #                                a resume (no first token emitted)
+        n_prompt = req.current_turn().prompt_tokens
+        del req.token_history[len(req.token_history) - n_prompt:]
+        self.sched.move(rid, ReqState.WAITING)
 
     def _admit(self, rid: int) -> bool:
         """WAITING -> RUNNING via prefill (+prefix swap-in if CPU copy).
@@ -380,6 +410,21 @@ class FastSwitchEngine:
             # iterations so long prompts stop stalling the decode batch
             req.prefill_remaining = new_tokens
             req.context_tokens = new_ctx
+            self.metrics.prefills += 1
+            self.sched.move(rid, ReqState.RUNNING)
+            return True
+        if chunk and self.pools is not None \
+                and new_ctx - (reused - reused % self.config.block_size) \
+                > chunk:
+            # REAL-mode chunked prefill (DESIGN.md §5): the runner opens a
+            # chunked-prefill state machine; step 5 advances it one
+            # bucketed chunk per iteration between decode steps, so the
+            # long prompt never freezes the decode batch.  The carry is
+            # seeded from the restored ``reused`` prefix (bit-identical
+            # to recomputing it), so the gate — like the compute and the
+            # billing — covers only the tail beyond the block-aligned
+            # reused prefix.
+            self._begin_real_chunked_prefill(req, reused)
             self.metrics.prefills += 1
             self.sched.move(rid, ReqState.RUNNING)
             return True
@@ -483,29 +528,79 @@ class FastSwitchEngine:
     # real-model data plane
     # ------------------------------------------------------------------
 
-    def _real_prefill(self, req: Request) -> None:
-        """Runner-managed prefill: synthesize the turn's prompt, then the
-        runner computes KV, inserts it through its persistent block tables
-        (device-side scatter — no host KV round-trip) and emits the first
-        response token (device-side sampling; greedy at temperature 0)."""
+    def _extend_prompt(self, req: Request) -> DecodeRequestView:
+        """Synthesize the turn's prompt (deterministic per (conv, turn))
+        into the token history and build the runner view for its prefill."""
         cfg = self.model_bundle["cfg"]
         rid = req.rid
         hist = req.token_history
         self.runner.flush()          # history must be current before extend
-        # deterministic synthetic prompt tokens per (conv, turn)
         turn = req.current_turn()
         rng = np.random.RandomState((rid * 1009 + req.turn_idx) % (2 ** 31))
         prompt = rng.randint(1, cfg.vocab_size,
                              size=turn.prompt_tokens).tolist()
         hist.extend(prompt)
-        view = DecodeRequestView(rid, self.gpu_mgr.request_block_ids(rid),
+        return DecodeRequestView(rid, self.gpu_mgr.request_block_ids(rid),
                                  hist)
+
+    def _real_prefill(self, req: Request) -> None:
+        """Runner-managed prefill: synthesize the turn's prompt, then the
+        runner computes KV, inserts it through its persistent block tables
+        (device-side scatter — no host KV round-trip) and emits the first
+        response token (device-side sampling; greedy at temperature 0)."""
+        view = self._extend_prompt(req)
         # KV compute + first-token draw run OUTSIDE the pool lock; only
         # the scatter + rebind serialize with swap copies
         staged = self.runner.prefill_compute(view, emit_first=True)
         with self.swap._pool_lock:
             self.pools.gpu = self.runner.prefill_insert(
                 view, self.pools.gpu, staged)
+
+    def _begin_real_chunked_prefill(self, req: Request,
+                                    reused: int) -> None:
+        """Open the runner's chunked-prefill state machine for a newly
+        admitted request (DESIGN.md §5).  The carry is seeded from the
+        ``reused`` prefix the admission just restored into the pool, so
+        only the non-reused tail is computed AND billed — matching the
+        sim-mode chunked accounting (the prefix's transfer cost was
+        already charged by the synchronous swap-in).  ``context_tokens``
+        tracks the tokens whose KV is resident and claimable (seeded
+        prefix + chunk inserts), so a mid-prefill preemption swaps out
+        exactly the processed prefix; ``prefill_remaining`` counts the
+        tokens left to compute — step 5 advances one chunk per
+        iteration."""
+        view = self._extend_prompt(req)
+        with self.swap._pool_lock:      # the carry seed reads the pool
+            req.prefill_remaining = self.runner.prefill_begin(
+                view, emit_first=True, reused_tokens=reused,
+                pool=self.pools.gpu)
+        req.context_tokens = len(req.token_history) - req.prefill_remaining
+
+    def _real_prefill_chunk(self, rid: int) -> int:
+        """Advance one request's in-flight chunked prefill by one chunk:
+        compute OUTSIDE the pool lock (the forward touches no pool
+        state), insert the chunk's KV under it, and on the final chunk
+        emit the first token.  Non-final chunks are trimmed to block-size
+        multiples so every insert stays block-aligned.  Returns the chunk
+        token count (charged to the sim clock by the caller)."""
+        req = self._req(rid)
+        bs = self.config.block_size
+        n = min(self.config.policy.chunked_prefill_tokens,
+                req.prefill_remaining)
+        if n < req.prefill_remaining:
+            n -= n % bs
+            if n == 0:                 # chunk smaller than one block
+                n = min(bs, req.prefill_remaining)
+        staged = self.runner.prefill_chunk_compute(rid, n)
+        with self.swap._pool_lock:
+            self.pools.gpu = self.runner.prefill_chunk_insert(
+                rid, self.pools.gpu, staged)
+        req.prefill_remaining -= n
+        req.context_tokens += n
+        if req.prefill_remaining == 0:
+            self.runner.prefill_finish(rid)
+            self._emit_first_token(rid)
+        return n
 
     def _real_decode(self, rids: List[int]) -> None:
         """Batched paged decode through the device-resident runner: only
@@ -617,13 +712,19 @@ class FastSwitchEngine:
                       if self._req(r).prefill_remaining > 0]
         chunk_tokens = 0
         if prefilling:
+            # at most ONE prompt chunk per iteration (highest priority
+            # first) interleaved with the decode batch — the Sarathi-style
+            # fairness lever bounding tail TBT during admission bursts
             chunk = self.config.policy.chunked_prefill_tokens
             rid_p = max(prefilling, key=self.sched.priority)
             reqp = self._req(rid_p)
-            chunk_tokens = min(chunk, reqp.prefill_remaining)
-            reqp.prefill_remaining -= chunk_tokens
-            if reqp.prefill_remaining == 0:
-                self._emit_first_token(rid_p)
+            if self.pools is not None:
+                chunk_tokens = self._real_prefill_chunk(rid_p)
+            else:
+                chunk_tokens = min(chunk, reqp.prefill_remaining)
+                reqp.prefill_remaining -= chunk_tokens
+                if reqp.prefill_remaining == 0:
+                    self._emit_first_token(rid_p)
         if rids or prefilling:
             # block allocation for the new token (conflict-checked in
             # _allocate_token_slot).  Iterate over a SNAPSHOT and track a

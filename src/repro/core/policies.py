@@ -30,7 +30,11 @@ class EnginePolicy:
     # BEYOND-PAPER: Sarathi-style chunked prefill — spread each prefill
     # over iterations (chunk tokens each) so long prompts stop stalling
     # the decode batch (TBT tail).  0 = off (paper-faithful whole-prompt
-    # prefill).  Sim-mode only.
+    # prefill).  In REAL mode the runner executes each chunk as a
+    # pow2-bucketed position-masked forward and inserts its KV
+    # block-aligned into the pool (DESIGN.md §5) — greedy output stays
+    # bit-exact vs the monolithic prefill; sim mode keeps the pure
+    # bookkeeping split.
     chunked_prefill_tokens: int = 0
 
 

@@ -66,8 +66,8 @@ class KVCacheReuseManager:
         copy = self.copies.setdefault(req_id, CpuCopy())
         if not self.enabled:
             # baseline: the whole context is re-written every preemption
-            self._ensure_cpu_tokens(req_id, total_tokens, requesting_priority,
-                                    replace=True)
+            # (same in-place CPU blocks — the allocation only grows)
+            self._ensure_cpu_tokens(req_id, total_tokens, requesting_priority)
             copy.valid_tokens = total_tokens
             copy.stored_tokens = total_tokens
             return total_tokens, self.mgr.request_runs(req_id)
@@ -109,14 +109,22 @@ class KVCacheReuseManager:
     # ------------------------------------------------------------------
 
     def _ensure_cpu_tokens(self, req_id: int, total_tokens: int,
-                           requesting_priority: float,
-                           replace: bool = False) -> None:
+                           requesting_priority: float) -> None:
+        """Grow the request's CPU allocation to ``total_tokens`` (both
+        the reuse increment and the disabled-baseline rewrite only ever
+        GROW — rewrites land in the same blocks), contaminating
+        lower-priority copies when the pool is full."""
         copy = self.copies[req_id]
         have = self.mgr.request_tokens(req_id)
         need = total_tokens - have
-        if replace and not self.enabled:
-            # baseline rewrites in place; only grow
-            need = total_tokens - have
+        if need <= 0:
+            # the increment fits inside already-reserved space: whatever
+            # part of the preallocation it consumes is no longer
+            # reserved-ahead (stale prealloc bookkeeping made
+            # contamination over-shrink a victim's valid prefix)
+            copy.prealloc_tokens = min(copy.prealloc_tokens,
+                                       have - total_tokens)
+            return
         while need > 0:
             try:
                 self.mgr.allocate_tokens(req_id, need)
@@ -126,7 +134,10 @@ class KVCacheReuseManager:
                 return
             except OutOfBlocksError:
                 if not self._contaminate_one(requesting_priority, req_id):
-                    # cannot make space: copy is best-effort truncated
+                    # cannot make space: copy is best-effort truncated —
+                    # the fill consumes the whole reserve, so nothing
+                    # stays preallocated-ahead
+                    copy.prealloc_tokens = 0
                     return
 
     def _contaminate_one(self, requesting_priority: float,
@@ -148,7 +159,6 @@ class KVCacheReuseManager:
             return False
         g = st.groups.pop()
         self.mgr._release(g.start, g.length)
-        lost_tokens = g.used * self.block_size
         self.mgr._token_counts[victim] = max(
             0, self.mgr._token_counts.get(victim, 0) - g.length * self.block_size)
         remaining_cap = self.mgr.request_tokens(victim)

@@ -171,6 +171,13 @@ class PriorityScheduler:
         # SLEEPING / DONE live outside the queues
 
     def victims_for_space(self, exclude: Set[int]) -> List[int]:
-        """Lowest-priority running requests first (preemption order)."""
+        """Lowest-priority running requests first (preemption order).
+        At equal priority a request still mid chunked prefill
+        (``prefill_remaining`` > 0) is preempted LAST: aborting it
+        forfeits the prefill chunks already computed (real mode inserts
+        them into the pool and would recompute them on re-admission),
+        while a decoding victim resumes from its swapped KV at full
+        value."""
         return sorted((r for r in self.running if r not in exclude),
-                      key=self.priority)
+                      key=lambda r: (self.priority(r),
+                                     self.requests[r].prefill_remaining > 0))

@@ -191,6 +191,106 @@ def insert_prefill_cache_size() -> int:
     return int(_insert_prefill._cache_size())
 
 
+# ---------------------------------------------------------------------------
+# bucketed chunked prefill (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n_new",))
+def _grow_carry(carry, *, n_new: int):
+    """Copy a (L, S_old, H, D) prefill carry into a longer zeroed buffer
+    (pow2 token bucket).  Not donated: the output shape differs, so XLA
+    could never reuse the old buffer anyway (it would only warn)."""
+    return jax.lax.dynamic_update_slice(
+        jnp.zeros(carry.shape[:1] + (n_new,) + carry.shape[2:], carry.dtype),
+        carry, (0, 0, 0, 0))
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _slice_tokens(kv, start, *, n: int):
+    """(L, S_pad, H, D)[:, start:start+n] with a TRACED start so one
+    compiled variant serves every chunk offset."""
+    return jax.lax.dynamic_slice_in_dim(kv, start, n, axis=1)
+
+
+def prefill_chunk(params, tokens: Sequence[int], k_carry, v_carry,
+                  prefix_len: int, *, cfg, block_size: int):
+    """Bucketed wrapper around ``models.paged.prefill_kv_chunk``: pad the
+    chunk to a pow2 token bucket (>= one page so the pool insert stays
+    block-aligned), grow the carry buffers to a pow2 bucket holding
+    ``prefix_len + chunk_pad`` tokens, and run the position-masked chunk
+    forward with the real lengths as TRACED scalars — every unique
+    (chunk_bucket, carry_bucket) pair is ONE compiled variant, so any mix
+    of prompt lengths and chunk sizes compiles O(log^2 max_len) variants
+    (mirroring the swap-run wrappers above).
+
+    ``k_carry``/``v_carry``: None to start a prefill, else the buffers
+    returned by the previous chunk (DONATED — rebind).  Returns
+    (last_logits, k_carry', v_carry', k_chunk, v_chunk) where k_chunk /
+    v_chunk are (L, chunk_pad, Hkv, D) ready for ``insert_prefill``."""
+    from repro.models.paged import prefill_kv_chunk
+    n = len(tokens)
+    assert n > 0, "prefill_chunk needs at least one token"
+    c_pad = max(_next_pow2(n), block_size)
+    toks = np.zeros((1, c_pad), np.int32)
+    toks[0, :n] = tokens
+    need = prefix_len + c_pad
+    if k_carry is None:
+        s_pad = _next_pow2(need)
+        shape = (cfg.n_layers, s_pad, cfg.n_kv_heads, cfg.resolved_head_dim)
+        k_carry = jnp.zeros(shape, jnp.bfloat16)
+        v_carry = jnp.zeros(shape, jnp.bfloat16)
+    elif k_carry.shape[1] < need:
+        s_pad = _next_pow2(need)
+        k_carry = _grow_carry(k_carry, n_new=s_pad)
+        v_carry = _grow_carry(v_carry, n_new=s_pad)
+    logits, k_carry, v_carry = prefill_kv_chunk(
+        params, jnp.asarray(toks), k_carry, v_carry,
+        jnp.int32(prefix_len), jnp.int32(n), cfg=cfg)
+    start = jnp.int32(prefix_len)
+    k_chunk = _slice_tokens(k_carry, start, n=c_pad)
+    v_chunk = _slice_tokens(v_carry, start, n=c_pad)
+    return logits, k_carry, v_carry, k_chunk, v_chunk
+
+
+def prefill_chunk_cache_size() -> int:
+    """Compiled-variant count of the chunked prefill forward (the
+    bucketing metric asserted by the prompt-length-sweep test)."""
+    from repro.models.paged import prefill_kv_chunk
+    return int(prefill_kv_chunk._cache_size())
+
+
+@jax.jit
+def _seed_carry(pool, blocks):
+    """Gather pool pages into contiguous (L, P_pad*bs, H, D) K/V carry
+    buffers.  Specializes on (pool shape, P_pad) — pow2-padded pages,
+    O(log) variants."""
+    L, K, _, bs, H, D = pool.shape
+    kv = pool[:, :, blocks]                     # (L, 2, P_pad, bs, H, D)
+    kv = kv.reshape(L, K, blocks.shape[0] * bs, H, D)
+    return kv[:, 0], kv[:, 1]
+
+
+def seed_prefill_carry(pool, block_ids: Sequence[int], start_tokens: int,
+                       *, trash: int):
+    """Initialize a chunked prefill's carry from KV already RESIDENT in
+    the pool — the reuse mechanism's restored prefix — so chunking can
+    start at ``start_tokens`` instead of recomputing (and re-billing)
+    the prefix.  Pool values are bit-identical to what recomputing would
+    produce (DESIGN.md §5.1), so downstream chunks and the emitted
+    tokens are unchanged.  ``start_tokens`` must be block-aligned; the
+    gathered page list is pow2-padded with trash pages whose junk rows
+    sit at positions >= start_tokens — overwritten by the chunk writes
+    before any real query can attend them (same invariant as the chunk
+    pad tail).  Returns (k_carry, v_carry)."""
+    bs = pool.shape[3]
+    assert start_tokens > 0 and start_tokens % bs == 0, start_tokens
+    nblk = start_tokens // bs
+    blocks = np.full((_next_pow2(nblk),), trash, np.int32)
+    blocks[:nblk] = list(block_ids)[:nblk]
+    return _seed_carry(pool, jnp.asarray(blocks))
+
+
 def gla_scan_scalar(q, k, v, logw, *, chunk=64, interpret: bool | None = None):
     """Chunked scalar-decay gated linear attention (Mamba2/SSD hot path)."""
     from repro.kernels import gla_scan as _gla

@@ -15,12 +15,13 @@ import json
 
 
 def main() -> None:
+    from repro.core.policies import POLICIES
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--real", action="store_true",
                     help="reduced real model + paged pool (CPU)")
     ap.add_argument("--policy", action="append", default=None,
-                    choices=["vllm", "+dbg", "+dbg+reuse", "fastswitch"])
+                    choices=sorted(POLICIES))
     ap.add_argument("--conversations", type=int, default=100)
     ap.add_argument("--rate", type=float, default=1.0)
     ap.add_argument("--pattern", default="markov",

@@ -183,8 +183,83 @@ def paged_decode_step_device(params, pool, block_tables, context_lens,
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def prefill_kv(params, tokens, *, cfg: ModelConfig):
     """Full-context prefill returning per-layer K/V for pool insertion.
-    tokens: (1, T).  Returns (last_logits (V,), k, v: (L, T, Hkv, D))."""
+    tokens: (1, T).  Returns (last_logits (V,), k, v: (L, T, Hkv, D)).
+
+    Exact-shape legacy path (one compiled variant per prompt length);
+    the engine's runner prefills through the bucketed chunked forward
+    (``prefill_kv_chunk``) instead — this survives as the parity
+    reference and for one-shot tools."""
     from repro.models import transformer as T
     logits, caches, _ = T.forward_seq(params, cfg, tokens, remat=False)
     k, v = caches                                          # (L, 1, T, H, D)
     return logits[0, -1], k[:, 0], v[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",),
+                   donate_argnums=(2, 3))
+def prefill_kv_chunk(params, tokens, k_carry, v_carry, prefix_len,
+                     chunk_len, *, cfg: ModelConfig):
+    """One chunk of a position-masked chunked prefill (DESIGN.md §5).
+
+    The chunk's K/V is written into the per-layer carry buffers at
+    ``prefix_len`` BEFORE attention runs, so every query attends one
+    contiguous key buffer whose valid keys occupy exactly positions
+    ``[0, prefix_len + q_rel]`` — the same masked-tail layout the
+    monolithic causal forward sees.  Masked keys contribute exactly-zero
+    probability terms, which keeps the chunked forward BIT-EXACT with
+    the monolithic ``prefill_kv`` for any chunking (asserted by
+    tests/test_chunked_prefill.py); greedy decode parity therefore
+    survives the chunked admission path unchanged.
+
+    tokens: (1, C_pad) int32 — chunk tokens, zero-padded to the pow2
+      chunk bucket (pad positions are masked: no real query attends a
+      key at position >= prefix_len + chunk_len);
+    k_carry, v_carry: (L, S_pad, Hkv, D) — DONATED carry buffers sized
+      by the caller to S_pad >= prefix_len + C_pad (pow2-bucketed);
+      rows [0, prefix_len) hold the previous chunks' K/V;
+    prefix_len, chunk_len: traced i32 scalars — real tokens already in
+      the carry / real tokens in this chunk.
+
+    Returns (last_logits (V,) — position prefix_len + chunk_len - 1,
+    k_carry', v_carry').  Every unique (C_pad, S_pad) pair is one XLA
+    compilation: O(log^2 max_len) variants over any mix of prompt
+    lengths and chunk sizes (the ``kernels.ops.prefill_chunk`` wrapper
+    owns the bucketing)."""
+    assert supports_paged(cfg), cfg.name
+    B, C_pad = tokens.shape
+    S_pad = k_carry.shape[1]
+    x = L.embed(params["embed"], tokens)                   # (1, C_pad, d)
+    positions = prefix_len + jnp.arange(C_pad)[None, :]
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    use_moe = cfg.moe is not None
+    # query i (absolute position prefix_len + i) attends keys [0, abs_i]
+    mask = (jnp.arange(S_pad)[None, :]
+            <= positions[0][:, None])[None, None]          # (1,1,C_pad,S_pad)
+
+    def body(x, xs):
+        lp, kc, vc = xs                                    # kc: (S_pad, H, D)
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn._project_qkv(lp["attn"], h, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k[0], (prefix_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[0], (prefix_len, 0, 0))
+        a = attn._sdpa(q, kc[None], vc[None], mask, scale)
+        x = x + (a.reshape(B, C_pad, -1) @ lp["attn"]["wo"].astype(x.dtype))
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if use_moe:
+            f, _ = moe_mod.moe_forward(lp["ffn"], h, cfg)
+        else:
+            f = L.swiglu(lp["ffn"], h)
+        return x + f, (kc, vc)
+
+    x, (k_carry, v_carry) = jax.lax.scan(
+        body, x, (params["layers"], k_carry, v_carry))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # unembed ONLY the last real position (row-wise matmul is bitwise
+    # independent of the batch of rows, so this equals slicing the full
+    # (C_pad, V) logits at (C_pad - 1)x the flops)
+    x_last = jax.lax.dynamic_index_in_dim(x[0], chunk_len - 1, axis=0,
+                                          keepdims=True)  # (1, d)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(head, x_last)[0], k_carry, v_carry

@@ -211,6 +211,7 @@ def test_engine_real_greedy_parity_with_prerefactor_path(engine_model):
             f"conv {cid} diverged from pre-refactor replay"
 
 
+@pytest.mark.slow
 def test_engine_real_greedy_parity_under_preemption_swap(engine_model):
     """ISSUE 3 acceptance: the same parity must hold under a schedule
     full of preemptions and staged (chunked) swaps — a tiny pool and
@@ -240,6 +241,42 @@ def test_engine_real_greedy_parity_under_preemption_swap(engine_model):
         got = eng._token_hist_by_conv[cid]
         assert got == _replay_prerefactor(engine_model, conv, cid), \
             f"conv {cid} diverged under the preemption+swap schedule"
+
+
+@pytest.mark.slow
+def test_engine_real_greedy_parity_chunked_prefill(engine_model):
+    """ISSUE 4 acceptance: real-mode CHUNKED prefill (pow2-bucketed
+    position-masked chunks interleaved with decode iterations,
+    DESIGN.md §5) stays bit-identical to the monolithic pre-refactor
+    replay — including under storm preemption that aborts prefills
+    mid-chunk and re-admits them through the reuse path."""
+    from dataclasses import replace
+    from repro.core import EngineConfig, FastSwitchEngine
+    from repro.core.policies import POLICIES
+    from repro.data.priority import PriorityTrace
+    from repro.data.sharegpt import Conversation, Turn
+
+    def mk():
+        return [Conversation(conv_id=i, arrival_s=0.0,
+                             turns=[Turn(40, 6), Turn(30, 6)],
+                             think_time_s=0.2) for i in range(4)]
+
+    pol = replace(POLICIES["fastswitch"], chunked_prefill_tokens=16)
+    cfg = EngineConfig(mode="real", num_gpu_blocks=16, num_cpu_blocks=256,
+                       max_running=4, max_batch=4, block_size=16,
+                       swap_chunk_blocks=1, policy=pol)
+    eng = FastSwitchEngine(cfg, mk(),
+                           trace=PriorityTrace("random", 0.5, seed=13),
+                           model_bundle=engine_model)
+    eng.run(max_iterations=20_000)
+    assert eng.done()
+    st = eng.runner.stats
+    assert st.prefill_chunks > st.prefills, "prefills never actually chunked"
+    assert st.prefill_aborts > 0, "storm never aborted a prefill mid-chunk"
+    for cid, conv in enumerate(mk()):
+        assert eng._token_hist_by_conv[cid] == \
+            _replay_prerefactor(engine_model, conv, cid), \
+            f"conv {cid} diverged under chunked prefill + storm preemption"
 
 
 def test_engine_real_sampling_deterministic_under_seed(engine_model):
