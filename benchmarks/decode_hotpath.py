@@ -180,6 +180,75 @@ def run_prefill_interleave(smoke: bool):
               f";prefill_window_iters={citers};prompt={prompt}")
 
 
+def run_online_overhead(smoke: bool):
+    """ISSUE 5 row: serving-API overhead — the same sim workload driven
+    (a) through the closed-world ``FastSwitchEngine.run()`` replay client
+    and (b) through a direct open-world ``add_request``/``step()`` loop.
+    Both drive the SAME ServingEngine core, so the steps/s delta is the
+    pure cost of the client layer (arrival feeding, output collection)."""
+    from repro.core import (EngineConfig, FastSwitchEngine, SamplingParams,
+                            ServingEngine)
+    from repro.data.priority import PriorityTrace
+    from repro.data.sharegpt import sample_conversations
+
+    n_conv = 40 if smoke else 200
+    convs = sample_conversations(n_conv, rate_req_s=4.0, seed=3)
+    cfg = EngineConfig(mode="sim", num_gpu_blocks=1024, num_cpu_blocks=4096,
+                       max_running=16).with_policy("fastswitch")
+
+    eng = FastSwitchEngine(cfg, [c for c in convs],
+                           trace=PriorityTrace("markov", 0.04, seed=7))
+    t0 = time.perf_counter()
+    m = eng.run(max_iterations=300_000)
+    dt_replay = time.perf_counter() - t0
+    it_replay, tok = m.iterations, m.total_tokens
+
+    core = ServingEngine(cfg, trace=PriorityTrace("markov", 0.04, seed=7))
+    pending = sorted(convs, key=lambda c: c.arrival_s)
+    by_handle = {c.conv_id: c for c in convs}
+    sleeping = []
+    t0 = time.perf_counter()
+    it = 0
+    while (pending or sleeping or core.has_work()) and it < 300_000:
+        now_s = core.clock.now_us / 1e6
+        while pending and pending[0].arrival_s <= now_s:
+            conv = pending.pop(0)
+            core.add_request(conv.turns[0].prompt_tokens,
+                             SamplingParams(
+                                 max_tokens=conv.turns[0].response_tokens),
+                             handle=conv.conv_id,
+                             retain_kv=len(conv.turns) > 1)
+        for w in list(sleeping):
+            if w[0] <= now_s:
+                sleeping.remove(w)
+                _, conv, tix = w
+                core.continue_session(
+                    conv.conv_id, conv.turns[tix].prompt_tokens,
+                    SamplingParams(
+                        max_tokens=conv.turns[tix].response_tokens),
+                    retain_kv=tix + 1 < len(conv.turns))
+        events = [w[0] * 1e6 for w in sleeping]
+        if pending:
+            events.append(pending[0].arrival_s * 1e6)
+        for out in core.step(until_us=min(events) if events else None):
+            if out.finished and out.finish_reason == "length":
+                conv = by_handle[out.handle]
+                if out.turn + 1 < len(conv.turns):
+                    sleeping.append((out.t_us / 1e6 + conv.think_time_s,
+                                     conv, out.turn + 1))
+        it += 1
+    dt_direct = time.perf_counter() - t0
+    core.shutdown()
+    assert core.metrics.total_tokens == tok, \
+        "direct step() loop served a different token count"
+
+    print(f"online_api_replay,{dt_replay / max(it_replay, 1) * 1e6:.1f},"
+          f"steps_s={it_replay / dt_replay:.0f};tokens={tok}")
+    print(f"online_api_direct,{dt_direct / max(it, 1) * 1e6:.1f},"
+          f"steps_s={it / dt_direct:.0f};"
+          f"overhead_pct={(dt_replay / max(it_replay, 1) / (dt_direct / max(it, 1)) - 1) * 100:.1f}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -226,6 +295,9 @@ def main() -> None:
     # chunked-vs-monolithic prefill: decode tokens during the prefill
     # window (ISSUE 4 — the tail-TBT lever)
     run_prefill_interleave(args.smoke)
+
+    # serving-API overhead: run() replay vs direct step() loop (ISSUE 5)
+    run_online_overhead(args.smoke)
 
 
 if __name__ == "__main__":

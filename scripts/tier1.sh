@@ -11,3 +11,10 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python benchmarks/decode_hotpath.py --smoke
 python benchmarks/swap_path.py --smoke
+# online serving-API smoke (ISSUE 5): open-world add_request/step replay
+# with cancellations, sim + real, asserting the JSONL event log is
+# well-formed and the SLO attainment records populate
+python -m repro.launch.serve --online --smoke \
+    --events /tmp/fastswitch_online_sim.jsonl
+python -m repro.launch.serve --online --smoke --real \
+    --events /tmp/fastswitch_online_real.jsonl

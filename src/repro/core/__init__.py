@@ -2,7 +2,9 @@
 
 Dynamic Block Group Manager (block_group), Multithreading Swap Manager
 (swap_manager), KV Cache Reuse Mechanism (reuse), Priority Scheduler
-(scheduler) and the serving engine (engine) that ties them together.
+(scheduler), the open-world serving core (serving: ``ServingEngine``
+with the ``add_request/step/abort/continue_session`` API) and the
+trace-replay client (engine: ``FastSwitchEngine``) that drives it.
 """
 from repro.core.block_group import (  # noqa: F401
     BlockGroup,
@@ -13,7 +15,15 @@ from repro.core.decode_runner import (  # noqa: F401
     DecodeRequestView,
     DecodeRunner,
 )
-from repro.core.engine import EngineMetrics, FastSwitchEngine  # noqa: F401
+from repro.core.engine import FastSwitchEngine  # noqa: F401
+from repro.core.request_api import (  # noqa: F401
+    RequestEvent,
+    RequestOutput,
+    RequestSLOStats,
+    SamplingParams,
+    SLOSpec,
+)
+from repro.core.serving import EngineMetrics, ServingEngine  # noqa: F401
 from repro.core.policies import (  # noqa: F401
     DBG_ONLY,
     DBG_REUSE,

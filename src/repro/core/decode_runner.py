@@ -363,6 +363,27 @@ class DecodeRunner:
                                   self._row_key(view.rid))})
         return True
 
+    def release(self, rid: int) -> None:
+        """Free an aborted request's row immediately: block table back to
+        the trash sentinel, context zeroed, row masked off and returned
+        to the free list.  Any open chunked-prefill state is dropped too.
+        (The lazy path — ``_update_rows`` at the next decode — only frees
+        rows for rids absent from the views; an abort must not wait for a
+        decode that may never come.)"""
+        self._prefills.pop(rid, None)
+        row = self._rows.pop(rid, None)
+        if row is None:
+            return
+        self._row_blocks[row] = ()
+        self._row_ctx[row] = 0
+        self._free.append(row)
+        self._scatter_rows({row: ((), 0, 0, np.zeros((2,), np.uint32))})
+        if row in self._active_rows:
+            self._active_rows = self._active_rows - {row}
+            act = np.zeros((self._batch_bucket,), bool)
+            act[list(self._active_rows)] = True
+            self._active = jnp.asarray(act)
+
     # -- chunked prefill state machine (DESIGN.md §5) -------------------
 
     def prefill_begin(self, view: DecodeRequestView, *,
@@ -481,16 +502,29 @@ class DecodeRunner:
         if self._prefills.pop(rid, None) is not None:
             self.stats.prefill_aborts += 1
 
+    def prefill_emit_first(self, rid: int) -> None:
+        """Emit the open prefill's first token (public wrapper for
+        engines that sequence begin / compute / emit / insert themselves
+        to keep the pool lock off the forward — no-op unless the state
+        was opened with ``emit_first`` and hasn't emitted yet)."""
+        self._prefill_emit(self._prefills[rid])
+
     # -- monolithic convenience wrappers (engine short-prompt path) -----
 
     def prefill_compute(self, view: DecodeRequestView, *,
-                        emit_first: bool) -> Optional[Tuple]:
+                        emit_first: bool, reused_tokens: int = 0,
+                        pool=None) -> Optional[Tuple]:
         """Phase 1 of a whole-prompt prefill: one bucketed chunk over the
         full history (same bit-exact forward, O(log^2) jit variants) plus
-        the first-token emit.  Touches NO pool state, so the engine runs
-        it OUTSIDE the pool lock.  Returns the staged (k, v, blocks) for
-        ``prefill_insert``."""
-        total = self.prefill_begin(view, emit_first=emit_first)
+        the first-token emit.  With ``reused_tokens``/``pool`` the carry
+        is seeded from the pool's restored reuse prefix and only the tail
+        chunk is computed (see ``prefill_begin`` — the caller must hold
+        the pool lock for the seed gather; single-threaded callers can
+        ignore that).  Without a seed this touches NO pool state, so the
+        engine runs it OUTSIDE the pool lock.  Returns the staged
+        (k, v, blocks) for ``prefill_insert``."""
+        total = self.prefill_begin(view, emit_first=emit_first,
+                                   reused_tokens=reused_tokens, pool=pool)
         staged = self.prefill_chunk_compute(view.rid, total)
         self._prefill_emit(self._prefills[view.rid])
         return staged
@@ -507,10 +541,13 @@ class DecodeRunner:
         return pool
 
     def prefill(self, view: DecodeRequestView, pool, *,
-                emit_first: bool):
+                emit_first: bool, reused_tokens: int = 0):
         """Convenience: both prefill phases back to back (single-threaded
-        callers — tests, benchmarks).  The pool is DONATED."""
-        staged = self.prefill_compute(view, emit_first=emit_first)
+        callers — tests, benchmarks).  The pool is DONATED (the seed
+        gather, if any, reads it before the donating insert)."""
+        staged = self.prefill_compute(view, emit_first=emit_first,
+                                      reused_tokens=reused_tokens,
+                                      pool=pool if reused_tokens else None)
         return self.prefill_insert(view, pool, staged)
 
     # ------------------------------------------------------------------

@@ -1,872 +1,141 @@
-"""FastSwitch serving engine — the iteration loop tying together the
-priority scheduler, Dynamic Block Group Manager, Multithreading Swap
-Manager and KV Cache Reuse Mechanism (paper Fig. 5).
+"""Trace-replay client of the open-world serving core.
 
-Two execution modes share the full control plane:
-  * ``sim``  — token bookkeeping only; latency from the hardware cost
-               model.  Used for thousand-conversation benchmark traces
-               (the paper's own priority traces are offline simulations).
-  * ``real`` — a reduced model decodes actual tokens against the paged
-               GPU pool through the Pallas paged-attention kernel, and
-               swaps move real KV bytes between pools.
+``FastSwitchEngine`` used to BE the engine: it consumed a pre-sorted
+conversation trace and ran the iteration loop itself, with arrivals and
+turn wake-ups hardwired into ``step()``.  The engine core now lives in
+``core/serving.py`` (``ServingEngine`` — vLLM-shaped
+``add_request()/step() -> RequestOutput`` with runtime cancellation and
+session continuation); this module keeps the old trace-driven interface
+as a thin CLIENT of that API:
 
-Per-iteration flow (Algorithm 1 embedded):
-  1. poll completed async swap-ins -> running
-  2. admit arrivals / wake sleeping conversations
-  3. priority-trace step; on update: rebalance queues (preempt / swap-in /
-     admit) under the GPU block budget
-  4. opportunistic admission of waiting requests
-  5. prefill newly admitted requests (prefill-with-prefix accounting)
-  6. decode one token for the running batch (+ block allocation with
-     conflict resolution)
-  7. finish turns: retain KV copy per policy; schedule next turn
+  * arrivals: conversations whose ``arrival_s`` has passed are submitted
+    with ``add_request`` (real mode synthesizes the deterministic
+    per-(conv, turn) prompt ids the engine used to make internally);
+  * wake-ups: a finished turn with a successor parks its KV in the core
+    (``retain_kv``) and sleeps client-side for ``think_time_s``; the
+    wake-up is a ``continue_session`` follow-up through the KV-reuse
+    path — exactly what an interactive user does;
+  * idle time: the client passes its next known event (arrival or wake)
+    as ``step(until_us=...)`` so the core's idle clock advances exactly
+    as the pre-refactor engine's did (bit-exact replay parity).
+
+Everything else — queues, swaps, metrics, the GPU pools — is the core's;
+attribute access falls through to it, so existing callers (benchmarks,
+tests) keep working unchanged.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional
 
-import numpy as np
-
-from repro.cache.paged import PagedPools, PoolSpec
-from repro.core.block_group import (DynamicBlockGroupManager,
-                                    OutOfBlocksError)
-from repro.core.decode_runner import DecodeRequestView, DecodeRunner
-from repro.core.policies import EngineConfig
-from repro.kernels.block_copy import runs_to_indices, split_runs, trim_runs
-from repro.core.reuse import KVCacheReuseManager
-from repro.core.scheduler import PriorityScheduler, Request, ReqState
-from repro.core.swap_manager import MultithreadingSwapManager, SimClock
+from repro.core.request_api import RequestOutput, SamplingParams, SLOSpec
+from repro.core.serving import EngineMetrics, ServingEngine  # noqa: F401
 from repro.data.priority import PriorityTrace
-from repro.data.sharegpt import Conversation
-from repro.io.cost_model import IterationCostModel
+from repro.data.sharegpt import Conversation, prompt_for_turn
 
 
-@dataclass
-class EngineMetrics:
-    ttfts_us: List[float] = field(default_factory=list)
-    tbts_us: List[float] = field(default_factory=list)
-    total_tokens: int = 0
-    total_time_us: float = 0.0
-    iterations: int = 0
-    prefills: int = 0
-    preemptions: int = 0
-    swap_in_count: int = 0
-    swap_out_count: int = 0
-    ctx_switch_stall_us: float = 0.0
-    callstack_wall_s: float = 0.0      # REAL wall time of the control plane
-    # (t_end_us, batch, t_iter_us, prefills_in_iter, stall_so_far_us)
-    iter_records: List[Tuple[float, int, float, int, float]] = \
-        field(default_factory=list)
+class _Wake:
+    """One parked conversation awaiting its next-turn wake-up."""
+    __slots__ = ("wake_s", "conv", "turn_idx")
 
-    def percentile(self, xs: Sequence[float], p: float) -> float:
-        if not xs:
-            return 0.0
-        return float(np.percentile(np.asarray(xs), p))
-
-    def summary(self) -> Dict[str, float]:
-        return {
-            "p50_ttft_ms": self.percentile(self.ttfts_us, 50) / 1e3,
-            "p95_ttft_ms": self.percentile(self.ttfts_us, 95) / 1e3,
-            "p99_ttft_ms": self.percentile(self.ttfts_us, 99) / 1e3,
-            "p999_ttft_ms": self.percentile(self.ttfts_us, 99.9) / 1e3,
-            "p99_tbt_ms": self.percentile(self.tbts_us, 99) / 1e3,
-            "p999_tbt_ms": self.percentile(self.tbts_us, 99.9) / 1e3,
-            "throughput_tok_s": (self.total_tokens
-                                 / max(self.total_time_us / 1e6, 1e-9)),
-            "total_tokens": self.total_tokens,
-            "iterations": self.iterations,
-            "preemptions": self.preemptions,
-            "ctx_switch_stall_us": self.ctx_switch_stall_us,
-            "callstack_wall_s": self.callstack_wall_s,
-        }
+    def __init__(self, wake_s: float, conv: Conversation, turn_idx: int):
+        self.wake_s, self.conv, self.turn_idx = wake_s, conv, turn_idx
 
 
 class FastSwitchEngine:
-    def __init__(self, config: EngineConfig, conversations: List[Conversation],
+    """Replay a conversation trace through the serving API.
+
+    Same constructor and surface as the pre-refactor engine; ``run()``
+    drives ``ServingEngine.add_request / continue_session / step`` and
+    is bit-exact with the pre-refactor replay (test_decode_consistency).
+    """
+
+    def __init__(self, config, conversations: List[Conversation],
                  trace: Optional[PriorityTrace] = None,
-                 model_bundle: Optional[dict] = None):
-        self.config = config
-        pol = config.policy
-        self.clock = SimClock()
-        self.metrics = EngineMetrics()
-
-        group_blocks = pol.initial_group_blocks if pol.use_block_groups else 1
-        self.gpu_mgr = DynamicBlockGroupManager(
-            config.num_gpu_blocks - 1,     # last block reserved as trash
-            config.block_size, initial_group_blocks=group_blocks,
-            seed=config.seed)
-        self.reuse = KVCacheReuseManager(
-            config.num_cpu_blocks, config.block_size,
-            initial_group_blocks=group_blocks, enabled=pol.use_reuse,
-            prealloc_blocks=pol.prealloc_blocks if pol.use_reuse else 0)
-
-        self.model_bundle = model_bundle
-        self.pools: Optional[PagedPools] = None
-        if config.mode == "real":
-            assert model_bundle is not None, "real mode needs a model bundle"
-            cfg = model_bundle["cfg"]
-            spec = PoolSpec.from_config(cfg, config.num_gpu_blocks,
-                                        config.num_cpu_blocks,
-                                        config.block_size)
-            self.pools = PagedPools(spec, with_data=True)
-            self.block_bytes = spec.block_bytes()
-            from repro.models.params import count_params_analytic
-            model_params = count_params_analytic(cfg)
-            kv_tok = spec.block_bytes() // spec.block_size
-        else:
-            # sim mode: modelled LLaMA-8B-like footprint
-            self.block_bytes = config.kv_bytes_per_token * config.block_size
-            model_params = config.model_params
-            kv_tok = config.kv_bytes_per_token
-        # beyond-paper wire compression (int8 KV on the PCIe/DMA link)
-        self.block_bytes = self.block_bytes * pol.swap_wire_bytes_per_elem // 2
-
-        self.swap = MultithreadingSwapManager(
-            config.hardware, self.pools,
-            async_enabled=pol.use_async_swap,
-            adaptive=pol.adaptive_async,
-            r_info_window=config.r_info_window)
-        self.iter_cost = IterationCostModel(
-            config.hardware, model_params=model_params,
-            kv_bytes_per_token=kv_tok)
-
-        self.trace = trace or PriorityTrace()
-        self.sched = PriorityScheduler(self.trace, config.max_running)
+                 model_bundle: Optional[dict] = None,
+                 slo: Optional[SLOSpec] = None):
+        # keep_events=False: a closed-world replay never reads the event
+        # stream, and a 300k-iteration benchmark run would accumulate an
+        # unbounded RequestEvent list for nothing
+        self.core = ServingEngine(config, trace=trace,
+                                  model_bundle=model_bundle,
+                                  keep_events=False)
         self.pending = sorted(conversations, key=lambda c: c.arrival_s)
-        self.sleeping: List[Request] = []
-        self._token_hist_by_conv: Dict[int, List[int]] = {}
-        # per-request CPU block-id mirror for the data plane
-        self._trash_block = config.num_gpu_blocks - 1
-        # batch-bucket-aware admission: iterations the engine has held a
-        # boundary against under-pressure growth (bounded, see
-        # _admission_target)
-        self._bucket_hold = 0
-        self._bucket_hold_iter = -1
-        # device-resident decode hot path (real mode): persistent block
-        # tables, bucketed shapes, donated pool — see DESIGN.md §3
-        self.runner: Optional[DecodeRunner] = None
-        if self.pools is not None:
-            self.runner = DecodeRunner(
-                model_bundle, block_size=config.block_size,
-                trash_block=self._trash_block,
-                temperature=config.temperature, top_k=config.top_k,
-                top_p=config.top_p, seed=config.seed)
+        self.sleeping: List[_Wake] = []
+        self.default_slo = slo
+        self._convs = {c.conv_id: c for c in conversations}
+
+    # attribute fall-through: the core owns all engine state (sched,
+    # gpu_mgr, swap, reuse, clock, metrics, pools, runner, config, ...)
+    def __getattr__(self, name):
+        return getattr(object.__getattribute__(self, "core"), name)
 
     # ------------------------------------------------------------------
-    # helpers
-    # ------------------------------------------------------------------
 
-    def _budget_tokens(self) -> int:
-        return self.gpu_mgr.num_blocks * self.config.block_size
+    def _prompt_for(self, conv: Conversation, turn_idx: int):
+        """Real mode: the deterministic per-(conv, turn) synthetic prompt
+        ids (same stream the engine used to generate internally — replay
+        parity).  Sim mode: just the token count."""
+        vocab = None if self.core.pools is None \
+            else self.core.model_bundle["cfg"].vocab_size
+        return prompt_for_turn(conv, turn_idx, vocab)
 
-    def _req(self, rid: int) -> Request:
-        return self.sched.requests[rid]
-
-    def _transfer_runs(self, runs: List[Tuple[int, int]]
-                       ) -> List[Tuple[int, int]]:
-        """The vLLM baseline issues ONE memcpy per block regardless of
-        physical adjacency (Fig. 3a); block-group policies transfer whole
-        contiguous runs (Fig. 3b); the Llumnix baseline merges per-block
-        copies through a small staging buffer (bounded granularity, one
-        transfer per buffer-full — paper §2.2)."""
-        pol = self.config.policy
-        if pol.use_block_groups:
-            return runs
-        blocks = runs_to_indices(runs)
-        mb = max(1, pol.merge_buffer_blocks)
-        if mb == 1:
-            return [(b, 1) for b in blocks]
-        # staging-buffer merge: one op per <=mb blocks (the buffer copy
-        # itself runs at HBM speed — negligible next to the PCIe leg)
-        return [(blocks[i], min(mb, len(blocks) - i))
-                for i in range(0, len(blocks), mb)]
-
-    def _runs_for_tokens(self, rid: int, t0: int, t1: int
-                         ) -> List[Tuple[int, int]]:
-        """Contiguous GPU block runs covering tokens [t0, t1)."""
-        if t1 <= t0:
-            return []
-        bs = self.config.block_size
-        ids = self.gpu_mgr.request_block_ids(rid)
-        b0, b1 = t0 // bs, (t1 + bs - 1) // bs
-        blocks = ids[b0:b1]
-        runs: List[Tuple[int, int]] = []
-        for b in blocks:
-            if runs and runs[-1][0] + runs[-1][1] == b:
-                runs[-1] = (runs[-1][0], runs[-1][1] + 1)
-            else:
-                runs.append((b, 1))
-        return runs
-
-    # ------------------------------------------------------------------
-    # swap operations
-    # ------------------------------------------------------------------
-
-    def _swap_out(self, rid: int, keep_copy: bool,
-                  last_slot_written: bool = False) -> None:
-        """Preempt: move KV to CPU.  With reuse, only the increment beyond
-        the valid CPU copy is transferred.  In recompute mode the KV is
-        simply dropped (resumption re-prefills the whole context)."""
-        req = self._req(rid)
-        if self.config.policy.preemption_mode == "recompute":
-            self.gpu_mgr.release_request(rid)
-            req.resume_tokens = req.context_tokens
-            self.metrics.preemptions += 1
-            return
-        # Only context_tokens - 1 positions hold written KV: the last
-        # slot's K/V is produced by the NEXT decode step (which consumes
-        # the pending token as input).  Claiming it would freeze garbage
-        # into the CPU copy — once the reuse increment pointer moves past
-        # that slot it is never re-copied, and a later swap-in would
-        # restore the garbage into attended positions (token corruption
-        # whenever a preemption lands on a block-aligned context).  The
-        # now-valid slot is picked up by the NEXT increment instead.
-        # ``last_slot_written``: a mid-prefill abort has NO pending decode
-        # token — every context_tokens position holds chunk-inserted KV,
-        # so the whole processed prefix is claimable.
-        total = req.context_tokens if last_slot_written \
-            else max(req.context_tokens - 1, 0)
-        self.reuse.update_priority(rid, self.sched.priority(rid))
-        inc, _cpu_runs = self.reuse.record_swap_out(
-            rid, total, requesting_priority=self.sched.priority(rid))
-        valid_before = total - inc
-        gpu_runs = self._runs_for_tokens(rid, valid_before, total)
-        gpu_blocks = runs_to_indices(gpu_runs)
-        if gpu_runs:
-            # conflicts: blocks we're about to read may be swap-in targets
-            self.swap.resolve_conflicts(self.clock, gpu_blocks)
-            bs = self.config.block_size
-            cpu_ids = self.reuse.mgr.request_block_ids(rid)[
-                valid_before // bs:(total + bs - 1) // bs] \
-                if self.pools is not None else []
-            asynchronous = self.swap.decide_async(
-                len(self.sched.running), sum(n for _, n in gpu_runs),
-                runs=self._transfer_runs(gpu_runs),
-                block_bytes=self.block_bytes, h2d=False,
-                now_us=self.clock.now_us)
-            self._dispatch_swap(rid, "out", gpu_runs, cpu_ids, asynchronous)
-            self.metrics.swap_out_count += 1
-        self.gpu_mgr.release_request(rid)
-        self.metrics.preemptions += 1
-
-    def _swap_in(self, rid: int) -> bool:
-        """Bring a swapped request's KV back to GPU.  Returns True if the
-        request is immediately RUNNING (sync), False if in flight."""
-        req = self._req(rid)
-        tokens = req.context_tokens
-        try:
-            self.gpu_mgr.allocate_tokens(rid, tokens)
-            self.gpu_mgr.note_tokens(rid, tokens)
-        except OutOfBlocksError:
-            # roll back the PARTIAL allocation (allocate_tokens acquires
-            # groups incrementally) or the blocks leak into a deadlock
-            self.gpu_mgr.release_request(rid)
-            return False                     # stays swapped; retry later
-        # TOKEN-ordered runs (not request_runs, which sorts by physical
-        # start): the data plane pairs these positionally with the
-        # token-ordered CPU block list, and a fragmented allocation can
-        # hand out groups with descending starts — sorted runs would
-        # restore every block into the wrong slot of the block table
-        gpu_runs = self._runs_for_tokens(rid, 0, tokens)
-        gpu_blocks = runs_to_indices(gpu_runs)
-        # the newly allocated target blocks may still be the SOURCE of an
-        # in-flight swap-out — synchronize before overwriting them
-        self.swap.resolve_conflicts(self.clock, gpu_blocks)
-        self.reuse.record_swap_in(rid)
-        bs = self.config.block_size
-        nblk = (tokens + bs - 1) // bs
-        cpu_ids = self.reuse.mgr.request_block_ids(rid)[:nblk] \
-            if self.pools is not None else []
-        asynchronous = self.swap.decide_async(
-            len(self.sched.running), sum(n for _, n in gpu_runs),
-            runs=self._transfer_runs(gpu_runs),
-            block_bytes=self.block_bytes, h2d=True, now_us=self.clock.now_us)
-        self._dispatch_swap(rid, "in", gpu_runs, cpu_ids, asynchronous)
-        self.metrics.swap_in_count += 1
-        if asynchronous:
-            self.sched.move(rid, ReqState.SWAPPING_IN)
-            return False
-        self.sched.move(rid, ReqState.RUNNING)
-        return True
-
-    def _dispatch_swap(self, rid: int, direction: str,
-                       gpu_runs: List[Tuple[int, int]], cpu_ids: List[int],
-                       asynchronous: bool) -> None:
-        """Dispatch one logical swap as ``swap_chunk_blocks``-sized chunk
-        tasks (DESIGN.md §4.3).  Each chunk is its own task on the
-        simulated stream with its own GPU-block conflict set and its own
-        data-plane future, so (a) the pool lock is released between chunk
-        copies — decode steps interleave with a long transfer — and (b) a
-        fine-grained conflict sync waits only for the chunk whose blocks
-        actually overlap, not the whole swap.  The data plane runs the
-        staged run-coalesced path (``PagedPools.copy_*_staged``); a chunk
-        whose CPU backing is shorter than its GPU runs (contamination
-        capped the reuse copy) trims the copy to the backed prefix, and
-        the sim cost still accounts the full dispatched runs.
-
-        Data ordering: a copy touching CPU blocks that a still-queued
-        swap-out writes (its own request's increment, or a contamination
-        reallocation of a victim's blocks) must wait for that write;
-        worker execution is not FIFO, so each chunk carries the
-        overlapping out-futures as explicit dependencies (awaited before
-        the pool lock — see ``MultithreadingSwapManager.data_deps``)."""
-        pools = self.pools
-        pos = 0
-        for runs_c in split_runs(gpu_runs, self.config.swap_chunk_blocks):
-            cnt = sum(n for _, n in runs_c)
-            copy_fn = None
-            cpu_c: List[int] = []
-            deps: List = []
-            if pools is not None:
-                cpu_c = cpu_ids[pos:pos + cnt]
-                if cpu_c:
-                    deps = self.swap.data_deps(cpu_c)
-                    data_runs = trim_runs(runs_c, len(cpu_c))
-                    if direction == "out":
-                        copy_fn = (lambda r=data_runs, c=cpu_c:
-                                   pools.copy_out_staged(r, c))
-                    else:
-                        copy_fn = (lambda r=data_runs, c=cpu_c:
-                                   pools.copy_in_staged(c, r))
-            pos += cnt
-            self.swap.dispatch(self.clock, rid, direction,
-                               self._transfer_runs(runs_c), self.block_bytes,
-                               runs_to_indices(runs_c),
-                               asynchronous=asynchronous, copy_fn=copy_fn,
-                               copy_deps=deps, cpu_blocks=cpu_c)
-
-    # ------------------------------------------------------------------
-    # admission / prefill
-    # ------------------------------------------------------------------
-
-    def _preempt(self, rid: int) -> None:
-        """Swap mode: KV to CPU, request -> SWAPPED.  Recompute mode: KV
-        dropped, request -> WAITING for re-prefill.  A real-mode request
-        caught MID chunked prefill has no pending decode token to resume
-        from — it aborts to WAITING instead (the processed prefix is kept
-        as a CPU reuse copy; re-admission opens a fresh prefill)."""
-        req = self._req(rid)
-        if self.pools is not None and req.prefill_remaining > 0:
-            self._abort_chunked_prefill(rid)
-            return
-        self._swap_out(rid, keep_copy=True)
-        if self.config.policy.preemption_mode == "recompute":
-            self.sched.move(rid, ReqState.WAITING)
+    def _submit(self, conv: Conversation, turn_idx: int) -> None:
+        turn = conv.turns[turn_idx]
+        sp = SamplingParams(max_tokens=turn.response_tokens)
+        retain = turn_idx + 1 < len(conv.turns)
+        if turn_idx == 0:
+            self.core.add_request(self._prompt_for(conv, turn_idx), sp,
+                                  slo=self.default_slo,
+                                  handle=conv.conv_id, retain_kv=retain)
         else:
-            self.sched.move(rid, ReqState.SWAPPED)
+            self.core.continue_session(conv.conv_id,
+                                       self._prompt_for(conv, turn_idx), sp,
+                                       slo=self.default_slo,
+                                       retain_kv=retain)
 
-    def _abort_chunked_prefill(self, rid: int) -> None:
-        """Mid-prefill preemption (real mode, DESIGN.md §5): drop the
-        runner's carry buffers, keep the processed prefix as a CPU reuse
-        copy (``context_tokens`` counts exactly the chunk-inserted
-        tokens), roll back the turn's prompt extension and return the
-        request to WAITING — the next ``_admit`` regenerates the
-        deterministic prompt and opens a fresh chunked prefill, reusing
-        the saved prefix up to ``prefix_tokens``."""
-        req = self._req(rid)
-        self.runner.prefill_abort(rid)
-        self._swap_out(rid, keep_copy=True, last_slot_written=True)
-        req.prefill_remaining = 0
-        req.resume_tokens = 0          # recompute mode: fresh _admit, not
-        #                                a resume (no first token emitted)
-        n_prompt = req.current_turn().prompt_tokens
-        del req.token_history[len(req.token_history) - n_prompt:]
-        self.sched.move(rid, ReqState.WAITING)
-
-    def _admit(self, rid: int) -> bool:
-        """WAITING -> RUNNING via prefill (+prefix swap-in if CPU copy).
-        Recompute-preempted requests re-prefill their whole context."""
-        req = self._req(rid)
-        if req.resume_tokens:
-            return self._admit_resume(rid)
-        turn = req.current_turn()
-        reused = min(self.reuse.valid_tokens(rid), req.prefix_tokens)
-        new_ctx = req.prefix_tokens + turn.prompt_tokens
-        try:
-            self.gpu_mgr.allocate_tokens(rid, new_ctx)
-            self.gpu_mgr.note_tokens(rid, new_ctx)
-        except OutOfBlocksError:
-            self.gpu_mgr.release_request(rid)   # roll back partial alloc
-            return False
-        gpu_runs = self.gpu_mgr.request_runs(rid)
-        gpu_blocks = runs_to_indices(gpu_runs)
-        self.swap.resolve_conflicts(self.clock, gpu_blocks)
-        # prefix-with-prefill: reused tokens are swapped in, the rest computed
-        if reused > 0:
-            bs = self.config.block_size
-            n_reused_blocks = (reused + bs - 1) // bs
-            runs_in = self._runs_for_tokens(rid, 0, reused)  # token order
-            cpu_ids = self.reuse.mgr.request_block_ids(rid)[:n_reused_blocks] \
-                if self.pools is not None else []
-            self._dispatch_swap(rid, "in", runs_in, cpu_ids,
-                                asynchronous=False)  # prefill needs it NOW
-        # prefill compute for the non-reused tokens
-        new_tokens = new_ctx - reused
-        chunk = self.config.policy.chunked_prefill_tokens
-        if chunk and self.pools is None and new_tokens > chunk:
-            # BEYOND-PAPER (Sarathi-style): spread the prefill over
-            # iterations so long prompts stop stalling the decode batch
-            req.prefill_remaining = new_tokens
-            req.context_tokens = new_ctx
-            self.metrics.prefills += 1
-            self.sched.move(rid, ReqState.RUNNING)
-            return True
-        if chunk and self.pools is not None \
-                and new_ctx - (reused - reused % self.config.block_size) \
-                > chunk:
-            # REAL-mode chunked prefill (DESIGN.md §5): the runner opens a
-            # chunked-prefill state machine; step 5 advances it one
-            # bucketed chunk per iteration between decode steps, so the
-            # long prompt never freezes the decode batch.  The carry is
-            # seeded from the restored ``reused`` prefix (bit-identical
-            # to recomputing it), so the gate — like the compute and the
-            # billing — covers only the tail beyond the block-aligned
-            # reused prefix.
-            self._begin_real_chunked_prefill(req, reused)
-            self.metrics.prefills += 1
-            self.sched.move(rid, ReqState.RUNNING)
-            return True
-        t_prefill = self.iter_cost.prefill_us(max(new_tokens, 1))
-        self.clock.advance(t_prefill)
-        req.context_tokens = new_ctx
-        self.metrics.prefills += 1
-        if self.pools is not None:
-            self._real_prefill(req)
-        self.sched.move(rid, ReqState.RUNNING)
-        self._emit_first_token(rid)
-        return True
-
-    def _allocate_token_slot(self, rid: int, skipped: Optional[set] = None
-                             ) -> bool:
-        """Allocate the one-token block slot the next decode will write
-        KV into: on OutOfBlocksError preempt a victim (recorded in
-        ``skipped`` so the caller drops it from this iteration's decode
-        set) and retry; synchronize swap conflicts on any block the
-        allocation acquired — it may be a just-freed block an async d2h
-        copy is still reading (torn victim KV otherwise).  Returns False
-        when the pool stays full."""
-        before = set(self.gpu_mgr.request_block_ids(rid))
-        try:
-            self.gpu_mgr.allocate_tokens(rid, 1)
-            self.gpu_mgr.note_tokens(rid, 1)
-        except OutOfBlocksError:
-            victim = self._find_victim(exclude={rid})
-            if victim is None:
-                return False
-            self._preempt(victim)
-            if skipped is not None:
-                skipped.add(victim)
-            try:
-                self.gpu_mgr.allocate_tokens(rid, 1)
-                self.gpu_mgr.note_tokens(rid, 1)
-            except OutOfBlocksError:
-                return False
-        grown = [b for b in self.gpu_mgr.request_block_ids(rid)
-                 if b not in before]
-        if grown:
-            self.swap.resolve_conflicts(self.clock, grown)
-        return True
-
-    def _emit_first_token(self, rid: int) -> None:
-        """The prompt's last position produced the response's first token."""
-        req = self._req(rid)
-        req.context_tokens += 1
-        if not self._allocate_token_slot(rid):
-            # a rebalance-time admission landed on a pool that stays full
-            # even after the victim fallback: bounce THIS request; the
-            # emitted token stays in its history and the resumption path
-            # (swap-in / re-prefill) allocates its next-token slot
-            req.finish_token(self.clock.now_us)
-            self.metrics.ttfts_us.append(req.ttfts_us[-1])
-            self.metrics.total_tokens += 1
-            self._preempt(rid)
-            return
-        req.finish_token(self.clock.now_us)
-        self.metrics.ttfts_us.append(req.ttfts_us[-1])
-        self.metrics.total_tokens += 1
-
-    def _admit_resume(self, rid: int) -> bool:
-        """Re-admit a recompute-preempted request: re-prefill the full
-        context (the recomputation cost the paper's swap mode avoids)."""
-        req = self._req(rid)
-        ctx = req.resume_tokens
-        try:
-            self.gpu_mgr.allocate_tokens(rid, ctx)
-            self.gpu_mgr.note_tokens(rid, ctx)
-        except OutOfBlocksError:
-            self.gpu_mgr.release_request(rid)   # roll back partial alloc
-            return False
-        gpu_blocks = self.gpu_mgr.request_block_ids(rid)
-        self.swap.resolve_conflicts(self.clock, gpu_blocks)
-        self.clock.advance(self.iter_cost.prefill_us(max(ctx, 1)))
-        self.metrics.prefills += 1
-        if self.pools is not None:
-            # recompute: regenerate KV for the already-known history
-            self._real_reprefill(req)
-        req.resume_tokens = 0
-        self.sched.move(rid, ReqState.RUNNING)
-        return True
-
-    def _real_reprefill(self, req: Request) -> None:
-        """Recompute-preemption resume: the runner regenerates KV for the
-        already-known history (all but the last token — its K/V is written
-        by the next decode step, which consumes hist[-1] as input) and
-        inserts it through its persistent block tables."""
-        view = DecodeRequestView(req.rid,
-                                 self.gpu_mgr.request_block_ids(req.rid),
-                                 req.token_history)
-        # KV compute runs OUTSIDE the pool lock (it never touches the
-        # pool); only the scatter + rebind serialize with swap copies
-        staged = self.runner.prefill_compute(view, emit_first=False)
-        with self.swap._pool_lock:
-            self.pools.gpu = self.runner.prefill_insert(
-                view, self.pools.gpu, staged)
-
-    # ------------------------------------------------------------------
-    # real-model data plane
-    # ------------------------------------------------------------------
-
-    def _extend_prompt(self, req: Request) -> DecodeRequestView:
-        """Synthesize the turn's prompt (deterministic per (conv, turn))
-        into the token history and build the runner view for its prefill."""
-        cfg = self.model_bundle["cfg"]
-        rid = req.rid
-        hist = req.token_history
-        self.runner.flush()          # history must be current before extend
-        turn = req.current_turn()
-        rng = np.random.RandomState((rid * 1009 + req.turn_idx) % (2 ** 31))
-        prompt = rng.randint(1, cfg.vocab_size,
-                             size=turn.prompt_tokens).tolist()
-        hist.extend(prompt)
-        return DecodeRequestView(rid, self.gpu_mgr.request_block_ids(rid),
-                                 hist)
-
-    def _real_prefill(self, req: Request) -> None:
-        """Runner-managed prefill: synthesize the turn's prompt, then the
-        runner computes KV, inserts it through its persistent block tables
-        (device-side scatter — no host KV round-trip) and emits the first
-        response token (device-side sampling; greedy at temperature 0)."""
-        view = self._extend_prompt(req)
-        # KV compute + first-token draw run OUTSIDE the pool lock; only
-        # the scatter + rebind serialize with swap copies
-        staged = self.runner.prefill_compute(view, emit_first=True)
-        with self.swap._pool_lock:
-            self.pools.gpu = self.runner.prefill_insert(
-                view, self.pools.gpu, staged)
-
-    def _begin_real_chunked_prefill(self, req: Request,
-                                    reused: int) -> None:
-        """Open the runner's chunked-prefill state machine for a newly
-        admitted request (DESIGN.md §5).  The carry is seeded from the
-        ``reused`` prefix the admission just restored into the pool, so
-        only the non-reused tail is computed AND billed — matching the
-        sim-mode chunked accounting (the prefix's transfer cost was
-        already charged by the synchronous swap-in).  ``context_tokens``
-        tracks the tokens whose KV is resident and claimable (seeded
-        prefix + chunk inserts), so a mid-prefill preemption swaps out
-        exactly the processed prefix; ``prefill_remaining`` counts the
-        tokens left to compute — step 5 advances one chunk per
-        iteration."""
-        view = self._extend_prompt(req)
-        with self.swap._pool_lock:      # the carry seed reads the pool
-            req.prefill_remaining = self.runner.prefill_begin(
-                view, emit_first=True, reused_tokens=reused,
-                pool=self.pools.gpu)
-        req.context_tokens = len(req.token_history) - req.prefill_remaining
-
-    def _real_prefill_chunk(self, rid: int) -> int:
-        """Advance one request's in-flight chunked prefill by one chunk:
-        compute OUTSIDE the pool lock (the forward touches no pool
-        state), insert the chunk's KV under it, and on the final chunk
-        emit the first token.  Non-final chunks are trimmed to block-size
-        multiples so every insert stays block-aligned.  Returns the chunk
-        token count (charged to the sim clock by the caller)."""
-        req = self._req(rid)
-        bs = self.config.block_size
-        n = min(self.config.policy.chunked_prefill_tokens,
-                req.prefill_remaining)
-        if n < req.prefill_remaining:
-            n -= n % bs
-            if n == 0:                 # chunk smaller than one block
-                n = min(bs, req.prefill_remaining)
-        staged = self.runner.prefill_chunk_compute(rid, n)
-        with self.swap._pool_lock:
-            self.pools.gpu = self.runner.prefill_chunk_insert(
-                rid, self.pools.gpu, staged)
-        req.prefill_remaining -= n
-        req.context_tokens += n
-        if req.prefill_remaining == 0:
-            self.runner.prefill_finish(rid)
-            self._emit_first_token(rid)
-        return n
-
-    def _real_decode(self, rids: List[int]) -> None:
-        """Batched paged decode through the device-resident runner: only
-        changed block-table rows are uploaded, the pool is donated, and
-        the next-token host sync is deferred to the next iteration's
-        decode (overlapping this step with the next control plane)."""
-        views = [DecodeRequestView(r, self.gpu_mgr.request_block_ids(r),
-                                   self._req(r).token_history)
-                 for r in rids]
-        with self.swap._pool_lock:
-            self.pools.gpu = self.runner.decode(views, self.pools.gpu)
-
-    # ------------------------------------------------------------------
-    # the iteration
-    # ------------------------------------------------------------------
-
-    def step(self) -> None:
-        t_wall0 = time.perf_counter()
-        m = self.metrics
-        bs = self.config.block_size
-        prefills_before = m.prefills
-
-        # Step 1: completed async swap-ins -> running.  A swap-in may
-        # consist of several chunk tasks, and a fine-grained conflict sync
-        # (resolve_conflicts) can retire tasks between polls; a request is
-        # resident — promote it — exactly when NO in-flight swap-in task
-        # remains for it (it would otherwise be stranded in SWAPPING_IN).
-        self.swap.poll_completed(self.clock)
-        if self.sched.swapping_in:
-            ongoing = {t.req_id for t in self.swap.ongoing_swap_in}
-            for rid in list(self.sched.swapping_in):
-                if rid not in ongoing:
-                    self.sched.move(rid, ReqState.RUNNING)
-
-        # Step 2: arrivals & wake-ups
-        now_s = self.clock.now_us / 1e6
-        while self.pending and self.pending[0].arrival_s <= now_s:
-            conv = self.pending.pop(0)
-            req = Request(conv=conv)
-            req.begin_turn(self.clock.now_us)
-            self.sched.add_request(req)
-        for req in list(self.sleeping):
-            if req.next_event_s <= now_s:
-                self.sleeping.remove(req)
-                req.turn_idx += 1
-                req.begin_turn(self.clock.now_us)
-                self.sched.add_request(req)
-
-        # Safeguard: a request whose working set exceeds the whole GPU pool
-        # can never be served — fail it instead of deadlocking the queue.
-        budget = self._budget_tokens()
-        for rid in list(self.sched.waiting):
-            req = self._req(rid)
-            need = max(req.target_tokens,
-                       req.prefix_tokens + req.current_turn().prompt_tokens
-                       + bs)
-            if need > budget:
-                import warnings
-                warnings.warn(f"request {rid} needs {need} tokens "
-                              f"> pool budget {budget}; dropping")
-                self.sched.waiting.remove(rid)
-                req.state = ReqState.DONE
-                self.reuse.release(rid)
-                del self.sched.requests[rid]
-
-        # Step 3: priority update -> rebalance
-        updated = self.sched.step_trace()
-        if updated:
-            desired = self.sched.desired_running(
-                self._budget_tokens(), bs,
-                batch_bucket=(self.runner.batch_bucket
-                              if self.runner is not None else 0))
-            to_preempt, to_swap_in, to_admit = \
-                self.sched.classify_rebalance(desired)
-            for rid in to_preempt:
-                self._preempt(rid)
-            for rid in to_swap_in:
-                self._swap_in(rid)
-            for rid in to_admit:
-                self._admit(rid)
-
-        # Step 4: opportunistic admission (space permitting), capped at
-        # the batch-bucket-aware target instead of max_running outright
-        for rid in sorted(list(self.sched.waiting),
-                          key=self.sched.priority, reverse=True):
-            free_tok = self.gpu_mgr.free_blocks() * bs
-            req = self._req(rid)
-            need = req.prefix_tokens + req.current_turn().prompt_tokens + bs
-            if need > free_tok \
-                    or len(self.sched.running) + len(self.sched.swapping_in) \
-                    >= self._admission_target():
-                break
-            self._admit(rid)
-        for rid in list(self.sched.swapped):
-            if len(self.sched.running) + len(self.sched.swapping_in) \
-                    >= self._admission_target():
-                break
-            free_tok = self.gpu_mgr.free_blocks() * bs
-            if self._req(rid).context_tokens + bs > free_tok:
-                break
-            self._swap_in(rid)
-
-        # Step 5: decode one token for the running batch.  Requests with
-        # an in-flight chunked prefill advance their prefill instead of
-        # decoding (one chunk per iteration, piggybacked on the batch).
-        rids = [r for r in self.sched.running
-                if self._req(r).prefill_remaining == 0]
-        prefilling = [r for r in self.sched.running
-                      if self._req(r).prefill_remaining > 0]
-        chunk_tokens = 0
-        if prefilling:
-            # at most ONE prompt chunk per iteration (highest priority
-            # first) interleaved with the decode batch — the Sarathi-style
-            # fairness lever bounding tail TBT during admission bursts
-            chunk = self.config.policy.chunked_prefill_tokens
-            rid_p = max(prefilling, key=self.sched.priority)
-            reqp = self._req(rid_p)
-            if self.pools is not None:
-                chunk_tokens = self._real_prefill_chunk(rid_p)
-            else:
-                chunk_tokens = min(chunk, reqp.prefill_remaining)
-                reqp.prefill_remaining -= chunk_tokens
-                if reqp.prefill_remaining == 0:
-                    self._emit_first_token(rid_p)
-        if rids or prefilling:
-            # block allocation for the new token (conflict-checked in
-            # _allocate_token_slot).  Iterate over a SNAPSHOT and track a
-            # ``skipped`` set: a victim preempted from inside the batch
-            # must not shift the iteration (the old in-place
-            # ``rids.remove`` silently skipped the next request's
-            # allocation while still decoding and crediting it), and a
-            # request whose allocation failed must sit this iteration out
-            # entirely — decoding it anyway would advance
-            # ``context_tokens`` past its block table (desync).
-            skipped: set = set()
-            for rid in list(rids):
-                if rid in skipped or rid not in self.sched.running:
-                    continue       # preempted as a victim earlier this loop
-                if not self._allocate_token_slot(rid, skipped):
-                    skipped.add(rid)           # retry next iteration
-            decode_rids = [r for r in rids if r not in skipped
-                           and r in self.sched.running]
-            if decode_rids and self.pools is not None:
-                self._real_decode(decode_rids)
-            total_ctx = sum(self._req(r).context_tokens for r in decode_rids)
-            t_iter = self.iter_cost.decode_iter_us(len(decode_rids),
-                                                   total_ctx)
-            if chunk_tokens:
-                t_iter += self.iter_cost.prefill_us(chunk_tokens) \
-                    - self.iter_cost.hw.iter_overhead_us
-            if not decode_rids and not chunk_tokens:
-                # everyone was skipped (pool exhausted, no victim): charge
-                # the iteration overhead so the sim clock still advances
-                t_iter = self.iter_cost.hw.iter_overhead_us
-            if decode_rids:
-                # feed the adaptive swap profiler the overlap window one
-                # decode iteration offers (decide_async cost model)
-                self.swap.note_decode_iter(t_iter)
-            self.clock.advance(t_iter)
-            for rid in decode_rids:
-                req = self._req(rid)
-                req.context_tokens += 1
-                req.finish_token(self.clock.now_us)
-                m.total_tokens += 1
-                if req.tbts_us:
-                    m.tbts_us.append(req.tbts_us[-1])
-                if req.turn_done():
-                    self._finish_turn(rid)
-            m.iter_records.append((self.clock.now_us, len(decode_rids),
-                                   t_iter, m.prefills - prefills_before,
-                                   self.swap.total_stall_us))
-        else:
-            # idle: advance to the next event
-            self._advance_idle()
-
-        m.iterations += 1
-        m.total_time_us = self.clock.now_us
-        m.ctx_switch_stall_us = self.swap.total_stall_us
-        m.callstack_wall_s += time.perf_counter() - t_wall0
-
-    def _admission_target(self) -> int:
-        """Batch-bucket-aware admission cap (real mode).  The decode step
-        executes the next pow2 batch regardless of occupancy, so filling
-        the compiled bucket is FREE (padded rows already run) while
-        spilling a boundary doubles the padded batch and compiles a new
-        variant.  Admission therefore targets the current bucket and only
-        crosses a boundary when the candidates would fill at least half
-        of the next bucket's new rows — with a bounded hold (16
-        iterations) so a lone straggler is never starved; the priority
-        rebalance path is never gated.  Sim mode — and a cold runner with
-        no compiled variant to protect yet — keeps the plain
-        ``max_running`` cap."""
-        cap = self.config.max_running
-        if self.runner is None or self.runner.batch_bucket == 0:
-            return cap
-        cur = len(self.sched.running) + len(self.sched.swapping_in)
-        bucket = self.runner.batch_bucket
-        while bucket < cur:
-            bucket *= 2
-        if cur < min(bucket, cap):
-            self._bucket_hold = 0       # not at a boundary: no hold episode
-            return min(bucket, cap)
-        waiting = len(self.sched.waiting) + len(self.sched.swapped)
-        if waiting == 0:
-            self._bucket_hold = 0       # episode ended without crossing
-            return min(bucket, cap)
-        if waiting >= max(1, bucket // 2) or self._bucket_hold >= 16:
-            self._bucket_hold = 0
-            return min(bucket * 2, cap)
-        if self.metrics.iterations != self._bucket_hold_iter:
-            # count the hold once per engine iteration, not per call
-            self._bucket_hold += 1
-            self._bucket_hold_iter = self.metrics.iterations
-        return min(bucket, cap)
-
-    def _find_victim(self, exclude) -> Optional[int]:
-        victims = self.sched.victims_for_space(exclude)
-        return victims[0] if victims else None
-
-    def _finish_turn(self, rid: int) -> None:
-        req = self._req(rid)
-        if self.runner is not None:
-            self.runner.flush()      # materialize the turn's last tokens
-        if req.token_history:
-            self._token_hist_by_conv[rid] = list(req.token_history)
-        # retain the KV copy for the next turn (reuse mechanism); baseline
-        # swaps the whole context out; recompute mode just frees
-        self._swap_out(rid, keep_copy=True)
-        req.resume_tokens = 0       # the next turn is a fresh prefill
-        for q in (self.sched.waiting, self.sched.running,
-                  self.sched.swapped, self.sched.swapping_in):
-            if rid in q:
-                q.remove(rid)
-        if req.turn_idx + 1 < len(req.conv.turns):
-            req.state = ReqState.SLEEPING
-            req.next_event_s = self.clock.now_us / 1e6 + req.conv.think_time_s
-            self.sleeping.append(req)
-            del self.sched.requests[rid]
-        else:
-            req.state = ReqState.DONE
-            self.reuse.release(rid)
-            del self.sched.requests[rid]
-
-    def _advance_idle(self) -> None:
-        events = []
+    def _next_event_us(self) -> Optional[float]:
+        events = [w.wake_s * 1e6 for w in self.sleeping]
         if self.pending:
             events.append(self.pending[0].arrival_s * 1e6)
-        events.extend(r.next_event_s * 1e6 for r in self.sleeping)
-        events.extend(t.done_at for t in self.swap.ongoing_swap_in)
-        if events:
-            self.clock.advance_to(max(min(events), self.clock.now_us + 100.0))
-        else:
-            self.clock.advance(1000.0)
+        return min(events) if events else None
 
     # ------------------------------------------------------------------
+
+    def step(self) -> List[RequestOutput]:
+        core = self.core
+        # arrivals, then wake-ups — same order the engine ran them when
+        # they lived inside step()
+        now_s = core.clock.now_us / 1e6
+        while self.pending and self.pending[0].arrival_s <= now_s:
+            self._submit(self.pending.pop(0), 0)
+        for w in list(self.sleeping):
+            if w.wake_s <= now_s:
+                self.sleeping.remove(w)
+                self._submit(w.conv, w.turn_idx)
+        outs = core.step(until_us=self._next_event_us())
+        for out in outs:
+            if out.finished and out.finish_reason == "length":
+                conv = self._convs[out.handle]
+                if out.turn + 1 < len(conv.turns):
+                    # think time counts from the FINISH instant
+                    # (out.t_us), not the step's end — a later request's
+                    # sync swap stall in the same iteration must not
+                    # postpone this wake-up (replay parity)
+                    self.sleeping.append(_Wake(
+                        out.t_us / 1e6 + conv.think_time_s,
+                        conv, out.turn + 1))
+        return outs
 
     def done(self) -> bool:
         return (not self.pending and not self.sleeping
-                and not self.sched.requests)
+                and not self.core.sched.requests)
 
     def run(self, max_iterations: int = 2_000_000) -> EngineMetrics:
         it = 0
         while not self.done() and it < max_iterations:
             self.step()
             it += 1
-        if self.runner is not None:
-            self.runner.flush()
-        self.swap.shutdown()
-        return self.metrics
+        if self.core.runner is not None:
+            self.core.runner.flush()
+        self.core.swap.shutdown()
+        return self.core.metrics

@@ -20,7 +20,7 @@ class ReqState(enum.Enum):
     RUNNING = "running"          # in the decode batch
     SWAPPED = "swapped"          # preempted; KV on CPU
     SWAPPING_IN = "swapping_in"  # async swap-in in flight
-    SLEEPING = "sleeping"        # between conversation turns
+    FINISHED = "finished"        # turn done, KV retained for continue_session
     DONE = "done"
 
 
@@ -33,7 +33,6 @@ class Request:
     context_tokens: int = 0       # tokens currently represented in KV
     target_tokens: int = 0        # context length when this turn completes
     prefix_tokens: int = 0        # context before this turn's prompt
-    next_event_s: float = 0.0     # arrival / wake-up time (sim seconds)
     # metrics (sim us)
     turn_arrival_us: float = 0.0
     first_token_us: Optional[float] = None
@@ -44,6 +43,15 @@ class Request:
     token_history: List[int] = field(default_factory=list)  # real mode
     resume_tokens: int = 0   # recompute-preemption: context to re-prefill
     prefill_remaining: int = 0   # chunked prefill: tokens still to process
+    prefill_is_resume: bool = False  # chunked RECOMPUTE resume: no first
+    #                                  token on completion (serving §6)
+    # serving-API surface (core/serving.py): per-request parameters and
+    # streaming / SLO bookkeeping
+    sampling: object = None        # request_api.SamplingParams
+    slo: object = None             # request_api.SLOSpec | None
+    retain_kv: bool = False        # park the finished turn for follow-ups
+    tbt_mark: int = 0              # len(tbts_us) at begin_turn (turn slice)
+    hist_emitted: int = 0          # history prefix already streamed out
 
     @property
     def rid(self) -> int:
@@ -59,6 +67,7 @@ class Request:
         self.turn_arrival_us = now_us
         self.first_token_us = None
         self.generated = 0
+        self.tbt_mark = len(self.tbts_us)
 
     def finish_token(self, now_us: float) -> None:
         if self.first_token_us is None:
@@ -168,7 +177,7 @@ class PriorityScheduler:
             self.swapped.append(rid)
         elif dst == ReqState.SWAPPING_IN:
             self.swapping_in.append(rid)
-        # SLEEPING / DONE live outside the queues
+        # FINISHED / DONE live outside the queues
 
     def victims_for_space(self, exclude: Set[int]) -> List[int]:
         """Lowest-priority running requests first (preemption order).

@@ -1,0 +1,1260 @@
+"""Open-world serving core — the engine behind FastSwitch's control plane.
+
+``ServingEngine`` is the vLLM-shaped (``LLMEngine.add_request()/step()``)
+open-world core: requests ARRIVE at runtime, stream incremental
+``RequestOutput`` deltas, can be CANCELLED in any lifecycle state, and
+multi-turn follow-ups continue a retained session through the KV-reuse
+path — nothing is pre-sorted or preloaded.  The trace-replay driver the
+benchmarks use (``FastSwitchEngine``, core/engine.py) is a thin CLIENT
+of this API: arrivals and wake-ups live in the driver, not in ``step()``.
+
+Two execution modes share the full control plane:
+  * ``sim``  — token bookkeeping only; latency from the hardware cost
+               model.  Used for thousand-conversation benchmark traces.
+  * ``real`` — a reduced model decodes actual tokens against the paged
+               GPU pool through the Pallas paged-attention kernel, and
+               swaps move real KV bytes between pools.
+
+Public API (DESIGN.md §6):
+  add_request(prompt, sampling, slo=...) -> handle
+  step(until_us=None)                    -> List[RequestOutput]
+  abort(handle)                          -> bool   (valid in EVERY state)
+  continue_session(handle, prompt, ...)  -> handle (KV-reuse follow-up)
+  release_session(handle)                          (drop a retained copy)
+
+Per-iteration flow (Algorithm 1 embedded; arrivals are now the caller's
+job between steps):
+  1. poll completed async swap-ins -> running
+  2. drop requests that can never fit the pool (budget safeguard)
+  3. priority-trace step; on update: rebalance queues (preempt / swap-in /
+     admit) under the GPU block budget
+  4. opportunistic admission of waiting requests
+  5. prefill newly admitted requests (prefill-with-prefix accounting)
+  6. decode one token for the running batch (+ block allocation with
+     conflict resolution)
+  7. finish turns: retain KV copy per policy; park the session for
+     ``continue_session`` (or release it when ``retain_kv`` is unset)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import (Callable, Dict, List, Optional, Sequence, Tuple,
+                    Union)
+
+import numpy as np
+
+from repro.cache.paged import PagedPools, PoolSpec
+from repro.core.block_group import (DynamicBlockGroupManager,
+                                    OutOfBlocksError)
+from repro.core.decode_runner import DecodeRequestView, DecodeRunner
+from repro.core.policies import EngineConfig
+from repro.core.request_api import (RequestEvent, RequestOutput,
+                                    RequestSLOStats, SamplingParams,
+                                    SLOSpec, jain_index)
+from repro.kernels.block_copy import runs_to_indices, split_runs, trim_runs
+from repro.core.reuse import KVCacheReuseManager
+from repro.core.scheduler import PriorityScheduler, Request, ReqState
+from repro.core.swap_manager import MultithreadingSwapManager, SimClock
+from repro.data.priority import PriorityTrace
+from repro.data.sharegpt import Conversation, Turn
+from repro.io.cost_model import IterationCostModel
+
+
+@dataclass
+class EngineMetrics:
+    ttfts_us: List[float] = field(default_factory=list)
+    tbts_us: List[float] = field(default_factory=list)
+    total_tokens: int = 0
+    total_time_us: float = 0.0
+    iterations: int = 0
+    prefills: int = 0
+    preemptions: int = 0
+    swap_in_count: int = 0
+    swap_out_count: int = 0
+    ctx_switch_stall_us: float = 0.0
+    callstack_wall_s: float = 0.0      # REAL wall time of the control plane
+    aborted: int = 0                   # client cancellations
+    dropped: int = 0                   # budget-safeguard drops
+    # per-turn SLO attainment records (request_api.RequestSLOStats)
+    request_stats: List[RequestSLOStats] = field(default_factory=list)
+    # (t_end_us, batch, t_iter_us, prefills_in_iter, stall_so_far_us)
+    iter_records: List[Tuple[float, int, float, int, float]] = \
+        field(default_factory=list)
+
+    def percentile(self, xs: Sequence[float], p: float) -> float:
+        if not xs:
+            return 0.0
+        return float(np.percentile(np.asarray(xs), p))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "p50_ttft_ms": self.percentile(self.ttfts_us, 50) / 1e3,
+            "p95_ttft_ms": self.percentile(self.ttfts_us, 95) / 1e3,
+            "p99_ttft_ms": self.percentile(self.ttfts_us, 99) / 1e3,
+            "p999_ttft_ms": self.percentile(self.ttfts_us, 99.9) / 1e3,
+            "p99_tbt_ms": self.percentile(self.tbts_us, 99) / 1e3,
+            "p999_tbt_ms": self.percentile(self.tbts_us, 99.9) / 1e3,
+            "throughput_tok_s": (self.total_tokens
+                                 / max(self.total_time_us / 1e6, 1e-9)),
+            "total_tokens": self.total_tokens,
+            "iterations": self.iterations,
+            "preemptions": self.preemptions,
+            "ctx_switch_stall_us": self.ctx_switch_stall_us,
+            "callstack_wall_s": self.callstack_wall_s,
+            "aborted": self.aborted,
+            "dropped": self.dropped,
+        }
+
+    def slo_summary(self) -> Dict[str, Optional[float]]:
+        """Per-request SLO-attainment + fairness rollup (DESIGN.md §6.4).
+
+        Tail percentiles hide WHICH users missed; a fairness-aware
+        scheduler is judged on attainment per request and its spread.
+        ``jain_fairness_tbt`` is Jain's index over per-turn TBT
+        attainment fractions (1.0 = every user equally served)."""
+        stats = self.request_stats
+        ttft = [s.ttft_ok for s in stats if s.ttft_ok is not None]
+        tbt_tok = [(s.tbt_ok_frac, max(s.generated - 1, 0))
+                   for s in stats if s.tbt_ok_frac is not None]
+        attained = [s.attained for s in stats if s.attained is not None]
+        tok_total = sum(n for _, n in tbt_tok)
+        return {
+            "turns": len(stats),
+            "ttft_slo_attainment": (sum(ttft) / len(ttft)) if ttft else None,
+            "tbt_slo_attainment": (sum(f * n for f, n in tbt_tok)
+                                   / tok_total) if tok_total else None,
+            "slo_attainment": (sum(attained) / len(attained))
+            if attained else None,
+            "jain_fairness_tbt": jain_index(
+                [s.tbt_ok_frac for s in stats if s.tbt_ok_frac is not None]),
+            "aborted": self.aborted,
+            "dropped": self.dropped,
+        }
+
+
+class ServingEngine:
+    def __init__(self, config: EngineConfig,
+                 trace: Optional[PriorityTrace] = None,
+                 model_bundle: Optional[dict] = None,
+                 event_sink: Optional[Callable[[RequestEvent], None]] = None,
+                 keep_events: bool = True,
+                 stream_tokens: bool = False):
+        self.config = config
+        pol = config.policy
+        self.clock = SimClock()
+        self.metrics = EngineMetrics()
+
+        group_blocks = pol.initial_group_blocks if pol.use_block_groups else 1
+        self.gpu_mgr = DynamicBlockGroupManager(
+            config.num_gpu_blocks - 1,     # last block reserved as trash
+            config.block_size, initial_group_blocks=group_blocks,
+            seed=config.seed)
+        self.reuse = KVCacheReuseManager(
+            config.num_cpu_blocks, config.block_size,
+            initial_group_blocks=group_blocks, enabled=pol.use_reuse,
+            prealloc_blocks=pol.prealloc_blocks if pol.use_reuse else 0)
+
+        self.model_bundle = model_bundle
+        self.pools: Optional[PagedPools] = None
+        if config.mode == "real":
+            assert model_bundle is not None, "real mode needs a model bundle"
+            cfg = model_bundle["cfg"]
+            spec = PoolSpec.from_config(cfg, config.num_gpu_blocks,
+                                        config.num_cpu_blocks,
+                                        config.block_size)
+            self.pools = PagedPools(spec, with_data=True)
+            self.block_bytes = spec.block_bytes()
+            from repro.models.params import count_params_analytic
+            model_params = count_params_analytic(cfg)
+            kv_tok = spec.block_bytes() // spec.block_size
+        else:
+            # sim mode: modelled LLaMA-8B-like footprint
+            self.block_bytes = config.kv_bytes_per_token * config.block_size
+            model_params = config.model_params
+            kv_tok = config.kv_bytes_per_token
+        # beyond-paper wire compression (int8 KV on the PCIe/DMA link)
+        self.block_bytes = self.block_bytes * pol.swap_wire_bytes_per_elem // 2
+
+        self.swap = MultithreadingSwapManager(
+            config.hardware, self.pools,
+            async_enabled=pol.use_async_swap,
+            adaptive=pol.adaptive_async,
+            r_info_window=config.r_info_window)
+        self.iter_cost = IterationCostModel(
+            config.hardware, model_params=model_params,
+            kv_bytes_per_token=kv_tok)
+
+        self.trace = trace or PriorityTrace()
+        self.sched = PriorityScheduler(self.trace, config.max_running)
+        # retained (FINISHED) sessions awaiting continue_session/release
+        self.parked: Dict[int, Request] = {}
+        self._next_handle = 0
+        self._token_hist_by_conv: Dict[int, List[int]] = {}
+        # per-request CPU block-id mirror for the data plane
+        self._trash_block = config.num_gpu_blocks - 1
+        # batch-bucket-aware admission: iterations the engine has held a
+        # boundary against under-pressure growth (bounded, see
+        # _admission_target)
+        self._bucket_hold = 0
+        self._bucket_hold_iter = -1
+        # device-resident decode hot path (real mode): persistent block
+        # tables, bucketed shapes, donated pool — see DESIGN.md §3
+        self.runner: Optional[DecodeRunner] = None
+        if self.pools is not None:
+            self.runner = DecodeRunner(
+                model_bundle, block_size=config.block_size,
+                trash_block=self._trash_block,
+                temperature=config.temperature, top_k=config.top_k,
+                top_p=config.top_p, seed=config.seed)
+        # serving-API surface: step outputs, event log, streaming
+        self._outs: Dict[int, RequestOutput] = {}
+        self.events: Optional[List[RequestEvent]] = [] if keep_events else None
+        self._event_sink = event_sink
+        self.stream_tokens = stream_tokens
+
+    # ------------------------------------------------------------------
+    # public API: request lifecycle
+    # ------------------------------------------------------------------
+
+    def add_request(self, prompt: Union[int, Sequence[int]],
+                    sampling: Optional[SamplingParams] = None, *,
+                    slo: Optional[SLOSpec] = None,
+                    handle: Optional[int] = None,
+                    retain_kv: bool = False) -> int:
+        """Submit one request.  ``prompt`` is the token-id list (real
+        mode) or a token COUNT (sim mode — there are no ids to give).
+        Returns the request handle, valid for ``step`` outputs,
+        ``abort`` and ``continue_session``.
+
+        ``retain_kv``: keep the finished turn's KV as a CPU reuse copy
+        so a follow-up ``continue_session`` pays only the prefix swap-in
+        instead of a full re-prefill; the caller owns the copy's
+        lifetime (``release_session``/``abort`` frees it)."""
+        sampling = sampling or SamplingParams()
+        self._check_sampling(sampling)
+        if handle is None:
+            while (self._next_handle in self.sched.requests
+                   or self._next_handle in self.parked):
+                self._next_handle += 1
+            handle = self._next_handle
+            self._next_handle += 1
+        elif handle in self.sched.requests or handle in self.parked:
+            raise ValueError(f"handle {handle} already in use")
+        # a reused handle (aborted then re-added between steps) must not
+        # inherit the old lifecycle's undelivered output delta
+        self._outs.pop(handle, None)
+        n_prompt, ids = self._parse_prompt(prompt)
+        conv = Conversation(conv_id=handle,
+                            arrival_s=self.clock.now_us / 1e6,
+                            turns=[Turn(n_prompt, sampling.max_tokens,
+                                        prompt_ids=ids)],
+                            think_time_s=0.0)
+        req = Request(conv=conv)
+        req.sampling, req.slo, req.retain_kv = sampling, slo, retain_kv
+        req.begin_turn(self.clock.now_us)
+        self.sched.add_request(req)
+        self._event(handle, "arrive", prompt_tokens=n_prompt,
+                    max_tokens=sampling.max_tokens)
+        return handle
+
+    def continue_session(self, handle: int,
+                         prompt: Union[int, Sequence[int]],
+                         sampling: Optional[SamplingParams] = None, *,
+                         slo: Optional[SLOSpec] = None,
+                         retain_kv: bool = False) -> int:
+        """Follow-up turn on a retained (FINISHED) session: the new
+        prompt extends the conversation and admission reuses the CPU KV
+        copy of the previous turns (prefix swap-in instead of full
+        prefill — the paper's §3.3 mechanism, now exercised open-world)."""
+        if handle in self.sched.requests:
+            raise ValueError(f"handle {handle} still live; a follow-up "
+                             "needs the previous turn finished")
+        req = self.parked.pop(handle, None)
+        if req is None:
+            raise KeyError(f"no retained session for handle {handle}")
+        sampling = sampling or SamplingParams()
+        self._check_sampling(sampling)
+        n_prompt, ids = self._parse_prompt(prompt)
+        req.conv.turns.append(Turn(n_prompt, sampling.max_tokens,
+                                   prompt_ids=ids))
+        req.turn_idx += 1
+        req.sampling, req.slo, req.retain_kv = sampling, slo, retain_kv
+        req.begin_turn(self.clock.now_us)
+        self.sched.add_request(req)
+        self._event(handle, "continue", turn=req.turn_idx,
+                    prompt_tokens=n_prompt, prefix_tokens=req.prefix_tokens)
+        return handle
+
+    def release_session(self, handle: int) -> bool:
+        """Drop a retained session's CPU KV copy (the caller will not
+        follow up).  Live requests are released through ``abort``."""
+        req = self.parked.pop(handle, None)
+        if req is None:
+            return False
+        self.reuse.release(handle)
+        req.state = ReqState.DONE
+        self._event(handle, "release")
+        return True
+
+    def abort(self, handle: int, reason: str = "abort") -> bool:
+        """Cancel a request in ANY lifecycle state — WAITING, RUNNING,
+        SWAPPED, SWAPPING_IN, mid-chunked-prefill or FINISHED/retained.
+        Releases its GPU blocks and CPU reuse copy, retires its
+        in-flight swap-in chunk tasks, drops any open chunked-prefill
+        carry, and frees its decode-runner row (block table back to the
+        trash sentinel).  In-flight swap-OUT d2h gathers are left on the
+        ongoing list so later copies reusing their CPU blocks still
+        order behind them (``data_deps``); they retire on completion.
+        Returns False for an unknown handle."""
+        req = self.sched.requests.get(handle)
+        if req is None:
+            if handle in self.parked:       # retained session: drop copy
+                req = self.parked.pop(handle)
+                self.reuse.release(handle)
+                req.state = ReqState.DONE
+                self.metrics.aborted += 1
+                self._event(handle, "abort", state="finished")
+                return True
+            return False
+        state = req.state.value
+        if self.runner is not None:
+            self.runner.prefill_abort(handle)   # no-op if none open
+            self.runner.release(handle)
+        req.prefill_remaining = 0
+        req.prefill_is_resume = False
+        req.resume_tokens = 0
+        self.swap.retire_request(handle)
+        self.gpu_mgr.release_request(handle)
+        self.reuse.release(handle)
+        for q in (self.sched.waiting, self.sched.running,
+                  self.sched.swapped, self.sched.swapping_in):
+            if handle in q:
+                q.remove(handle)
+        self._record_slo(req, reason)
+        out = self._out(handle)
+        out.finished, out.finish_reason = True, reason
+        out.generated, out.context_tokens = req.generated, req.context_tokens
+        req.state = ReqState.DONE
+        del self.sched.requests[handle]
+        if reason == "dropped":
+            self.metrics.dropped += 1
+            self._event(handle, "drop", state=state)
+        else:
+            self.metrics.aborted += 1
+            self._event(handle, "abort", state=state)
+        return True
+
+    def has_work(self) -> bool:
+        """True while any request is live (retained sessions idle in
+        ``parked`` don't count — they cost CPU blocks, not steps)."""
+        return bool(self.sched.requests)
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+
+    def _parse_prompt(self, prompt: Union[int, Sequence[int]]
+                      ) -> Tuple[int, Optional[List[int]]]:
+        if isinstance(prompt, (int, np.integer)):
+            if self.pools is not None:
+                raise ValueError("real mode needs prompt token ids, "
+                                 "not a token count")
+            if prompt <= 0:
+                raise ValueError(f"empty prompt ({prompt} tokens)")
+            return int(prompt), None
+        ids = [int(t) for t in prompt]
+        if not ids:
+            raise ValueError("empty prompt")
+        return len(ids), ids
+
+    def _check_sampling(self, sp: SamplingParams) -> None:
+        if sp.max_tokens < 1:
+            raise ValueError(f"max_tokens must be >= 1, got {sp.max_tokens}")
+        if self.pools is None:
+            return
+        # real mode: sampling is fused batch-global (DESIGN.md §3.6)
+        cfg = self.config
+        for name, got, eng in (("temperature", sp.temperature,
+                                cfg.temperature),
+                               ("top_k", sp.top_k, cfg.top_k),
+                               ("top_p", sp.top_p, cfg.top_p)):
+            if got is not None and got != eng:
+                raise NotImplementedError(
+                    f"per-request {name}={got} differs from the engine's "
+                    f"{eng}: real-mode sampling is batch-global traced "
+                    "scalars (DESIGN.md §3.6)")
+
+    def _budget_tokens(self) -> int:
+        return self.gpu_mgr.num_blocks * self.config.block_size
+
+    def _req(self, rid: int) -> Request:
+        return self.sched.requests[rid]
+
+    def _out(self, rid: int) -> RequestOutput:
+        out = self._outs.get(rid)
+        if out is None:
+            req = self.sched.requests.get(rid)
+            out = RequestOutput(handle=rid,
+                                turn=req.turn_idx if req is not None else 0)
+            self._outs[rid] = out
+        # t_us = the LAST transition's clock instant, stamped as it
+        # happens: a later request's synchronous swap stall in the same
+        # iteration must not bleed into this one's timestamp (clients
+        # schedule think-time wake-ups off the finish instant — replay
+        # parity depends on it)
+        out.t_us = self.clock.now_us
+        return out
+
+    def _credit(self, rid: int, first: bool = False) -> None:
+        """Fold one emitted token into this step's output delta."""
+        req = self._req(rid)
+        out = self._out(rid)
+        out.new_tokens += 1
+        out.generated = req.generated
+        out.context_tokens = req.context_tokens
+        if first:
+            out.first_token = True
+            out.ttft_us = req.ttfts_us[-1]
+
+    def _event(self, rid: int, kind: str, **data) -> None:
+        ev = RequestEvent(t_us=self.clock.now_us, handle=rid, kind=kind,
+                          data=data)
+        if self._event_sink is not None:
+            self._event_sink(ev)
+        if self.events is not None:
+            self.events.append(ev)
+
+    def _record_slo(self, req: Request, reason: str) -> None:
+        """Fold the turn's latency record into the per-request SLO
+        attainment stats (on finish, abort or drop)."""
+        turn = req.current_turn()
+        ttft = (req.first_token_us - req.turn_arrival_us) \
+            if req.first_token_us is not None else None
+        tbts = req.tbts_us[req.tbt_mark:]
+        slo = req.slo
+        ttft_ok = tbt_frac = None
+        if slo is not None:
+            if slo.ttft_us is not None and ttft is not None:
+                ttft_ok = ttft <= slo.ttft_us
+            if slo.tbt_us is not None and tbts:
+                tbt_frac = sum(t <= slo.tbt_us for t in tbts) / len(tbts)
+        self.metrics.request_stats.append(RequestSLOStats(
+            handle=req.rid, turn=req.turn_idx,
+            prompt_tokens=turn.prompt_tokens, generated=req.generated,
+            ttft_us=ttft,
+            mean_tbt_us=(sum(tbts) / len(tbts)) if tbts else 0.0,
+            max_tbt_us=max(tbts) if tbts else 0.0,
+            ttft_ok=ttft_ok, tbt_ok_frac=tbt_frac, finish_reason=reason))
+
+    def _transfer_runs(self, runs: List[Tuple[int, int]]
+                       ) -> List[Tuple[int, int]]:
+        """The vLLM baseline issues ONE memcpy per block regardless of
+        physical adjacency (Fig. 3a); block-group policies transfer whole
+        contiguous runs (Fig. 3b); the Llumnix baseline merges per-block
+        copies through a small staging buffer (bounded granularity, one
+        transfer per buffer-full — paper §2.2)."""
+        pol = self.config.policy
+        if pol.use_block_groups:
+            return runs
+        blocks = runs_to_indices(runs)
+        mb = max(1, pol.merge_buffer_blocks)
+        if mb == 1:
+            return [(b, 1) for b in blocks]
+        # staging-buffer merge: one op per <=mb blocks (the buffer copy
+        # itself runs at HBM speed — negligible next to the PCIe leg)
+        return [(blocks[i], min(mb, len(blocks) - i))
+                for i in range(0, len(blocks), mb)]
+
+    def _runs_for_tokens(self, rid: int, t0: int, t1: int
+                         ) -> List[Tuple[int, int]]:
+        """Contiguous GPU block runs covering tokens [t0, t1)."""
+        if t1 <= t0:
+            return []
+        bs = self.config.block_size
+        ids = self.gpu_mgr.request_block_ids(rid)
+        b0, b1 = t0 // bs, (t1 + bs - 1) // bs
+        blocks = ids[b0:b1]
+        runs: List[Tuple[int, int]] = []
+        for b in blocks:
+            if runs and runs[-1][0] + runs[-1][1] == b:
+                runs[-1] = (runs[-1][0], runs[-1][1] + 1)
+            else:
+                runs.append((b, 1))
+        return runs
+
+    # ------------------------------------------------------------------
+    # swap operations
+    # ------------------------------------------------------------------
+
+    def _swap_out(self, rid: int, keep_copy: bool,
+                  last_slot_written: bool = False) -> None:
+        """Preempt: move KV to CPU.  With reuse, only the increment beyond
+        the valid CPU copy is transferred.  In recompute mode the KV is
+        simply dropped (resumption re-prefills the whole context)."""
+        req = self._req(rid)
+        if self.config.policy.preemption_mode == "recompute":
+            self.gpu_mgr.release_request(rid)
+            req.resume_tokens = req.context_tokens
+            req.prefill_remaining = 0
+            req.prefill_is_resume = False
+            self.metrics.preemptions += 1
+            return
+        # Only context_tokens - 1 positions hold written KV: the last
+        # slot's K/V is produced by the NEXT decode step (which consumes
+        # the pending token as input).  Claiming it would freeze garbage
+        # into the CPU copy — once the reuse increment pointer moves past
+        # that slot it is never re-copied, and a later swap-in would
+        # restore the garbage into attended positions (token corruption
+        # whenever a preemption lands on a block-aligned context).  The
+        # now-valid slot is picked up by the NEXT increment instead.
+        # ``last_slot_written``: a mid-prefill abort has NO pending decode
+        # token — every context_tokens position holds chunk-inserted KV,
+        # so the whole processed prefix is claimable.
+        total = req.context_tokens if last_slot_written \
+            else max(req.context_tokens - 1, 0)
+        self.reuse.update_priority(rid, self.sched.priority(rid))
+        inc, _cpu_runs = self.reuse.record_swap_out(
+            rid, total, requesting_priority=self.sched.priority(rid))
+        valid_before = total - inc
+        gpu_runs = self._runs_for_tokens(rid, valid_before, total)
+        gpu_blocks = runs_to_indices(gpu_runs)
+        if gpu_runs:
+            # conflicts: blocks we're about to read may be swap-in targets
+            self.swap.resolve_conflicts(self.clock, gpu_blocks)
+            bs = self.config.block_size
+            cpu_ids = self.reuse.mgr.request_block_ids(rid)[
+                valid_before // bs:(total + bs - 1) // bs] \
+                if self.pools is not None else []
+            asynchronous = self.swap.decide_async(
+                len(self.sched.running), sum(n for _, n in gpu_runs),
+                runs=self._transfer_runs(gpu_runs),
+                block_bytes=self.block_bytes, h2d=False,
+                now_us=self.clock.now_us)
+            self._dispatch_swap(rid, "out", gpu_runs, cpu_ids, asynchronous)
+            self.metrics.swap_out_count += 1
+        self.gpu_mgr.release_request(rid)
+        self.metrics.preemptions += 1
+
+    def _swap_in(self, rid: int) -> bool:
+        """Bring a swapped request's KV back to GPU.  Returns True if the
+        request is immediately RUNNING (sync), False if in flight."""
+        req = self._req(rid)
+        tokens = req.context_tokens
+        try:
+            self.gpu_mgr.allocate_tokens(rid, tokens)
+            self.gpu_mgr.note_tokens(rid, tokens)
+        except OutOfBlocksError:
+            # roll back the PARTIAL allocation (allocate_tokens acquires
+            # groups incrementally) or the blocks leak into a deadlock
+            self.gpu_mgr.release_request(rid)
+            return False                     # stays swapped; retry later
+        # TOKEN-ordered runs (not request_runs, which sorts by physical
+        # start): the data plane pairs these positionally with the
+        # token-ordered CPU block list, and a fragmented allocation can
+        # hand out groups with descending starts — sorted runs would
+        # restore every block into the wrong slot of the block table
+        gpu_runs = self._runs_for_tokens(rid, 0, tokens)
+        gpu_blocks = runs_to_indices(gpu_runs)
+        # the newly allocated target blocks may still be the SOURCE of an
+        # in-flight swap-out — synchronize before overwriting them
+        self.swap.resolve_conflicts(self.clock, gpu_blocks)
+        self.reuse.record_swap_in(rid)
+        bs = self.config.block_size
+        nblk = (tokens + bs - 1) // bs
+        cpu_ids = self.reuse.mgr.request_block_ids(rid)[:nblk] \
+            if self.pools is not None else []
+        asynchronous = self.swap.decide_async(
+            len(self.sched.running), sum(n for _, n in gpu_runs),
+            runs=self._transfer_runs(gpu_runs),
+            block_bytes=self.block_bytes, h2d=True, now_us=self.clock.now_us)
+        self._dispatch_swap(rid, "in", gpu_runs, cpu_ids, asynchronous)
+        self.metrics.swap_in_count += 1
+        self._event(rid, "swap_in", asynchronous=asynchronous,
+                    tokens=tokens)
+        if asynchronous:
+            self.sched.move(rid, ReqState.SWAPPING_IN)
+            return False
+        self.sched.move(rid, ReqState.RUNNING)
+        return True
+
+    def _dispatch_swap(self, rid: int, direction: str,
+                       gpu_runs: List[Tuple[int, int]], cpu_ids: List[int],
+                       asynchronous: bool) -> None:
+        """Dispatch one logical swap as ``swap_chunk_blocks``-sized chunk
+        tasks (DESIGN.md §4.3).  Each chunk is its own task on the
+        simulated stream with its own GPU-block conflict set and its own
+        data-plane future, so (a) the pool lock is released between chunk
+        copies — decode steps interleave with a long transfer — and (b) a
+        fine-grained conflict sync waits only for the chunk whose blocks
+        actually overlap, not the whole swap.  The data plane runs the
+        staged run-coalesced path (``PagedPools.copy_*_staged``); a chunk
+        whose CPU backing is shorter than its GPU runs (contamination
+        capped the reuse copy) trims the copy to the backed prefix, and
+        the sim cost still accounts the full dispatched runs.
+
+        Data ordering: a copy touching CPU blocks that a still-queued
+        swap-out writes (its own request's increment, or a contamination
+        reallocation of a victim's blocks) must wait for that write;
+        worker execution is not FIFO, so each chunk carries the
+        overlapping out-futures as explicit dependencies (awaited before
+        the pool lock — see ``MultithreadingSwapManager.data_deps``)."""
+        pools = self.pools
+        pos = 0
+        for runs_c in split_runs(gpu_runs, self.config.swap_chunk_blocks):
+            cnt = sum(n for _, n in runs_c)
+            copy_fn = None
+            cpu_c: List[int] = []
+            deps: List = []
+            if pools is not None:
+                cpu_c = cpu_ids[pos:pos + cnt]
+                if cpu_c:
+                    deps = self.swap.data_deps(cpu_c)
+                    data_runs = trim_runs(runs_c, len(cpu_c))
+                    if direction == "out":
+                        copy_fn = (lambda r=data_runs, c=cpu_c:
+                                   pools.copy_out_staged(r, c))
+                    else:
+                        copy_fn = (lambda r=data_runs, c=cpu_c:
+                                   pools.copy_in_staged(c, r))
+            pos += cnt
+            self.swap.dispatch(self.clock, rid, direction,
+                               self._transfer_runs(runs_c), self.block_bytes,
+                               runs_to_indices(runs_c),
+                               asynchronous=asynchronous, copy_fn=copy_fn,
+                               copy_deps=deps, cpu_blocks=cpu_c)
+
+    # ------------------------------------------------------------------
+    # admission / prefill
+    # ------------------------------------------------------------------
+
+    def _preempt(self, rid: int) -> None:
+        """Swap mode: KV to CPU, request -> SWAPPED.  Recompute mode: KV
+        dropped, request -> WAITING for re-prefill.  A real-mode request
+        caught MID chunked prefill has no pending decode token to resume
+        from — it aborts to WAITING instead (the processed prefix is kept
+        as a CPU reuse copy; re-admission opens a fresh prefill)."""
+        req = self._req(rid)
+        if self.pools is not None and req.prefill_remaining > 0:
+            self._abort_chunked_prefill(rid)
+            return
+        self._swap_out(rid, keep_copy=True)
+        if self.config.policy.preemption_mode == "recompute":
+            self.sched.move(rid, ReqState.WAITING)
+            self._event(rid, "preempt", to="waiting")
+        else:
+            self.sched.move(rid, ReqState.SWAPPED)
+            self._event(rid, "preempt", to="swapped")
+
+    def _abort_chunked_prefill(self, rid: int) -> None:
+        """Mid-prefill preemption (real mode, DESIGN.md §5): drop the
+        runner's carry buffers, keep the processed prefix as a CPU reuse
+        copy (``context_tokens`` counts exactly the chunk-inserted
+        tokens), roll back the turn's prompt extension and return the
+        request to WAITING — the next ``_admit`` re-extends the turn's
+        stored prompt and opens a fresh chunked prefill, reusing the
+        saved prefix up to ``prefix_tokens``.
+
+        A chunked recompute-mode RESUME (``prefill_is_resume``) has no
+        prompt extension to roll back and no prefix worth keeping — the
+        partial recompute is dropped whole and ``resume_tokens`` snaps
+        back to the full context (a resume restarts from scratch)."""
+        req = self._req(rid)
+        self.runner.prefill_abort(rid)
+        if req.prefill_is_resume:
+            # recompute-mode branch of _swap_out: release + resume_tokens
+            self._swap_out(rid, keep_copy=True)
+            self.sched.move(rid, ReqState.WAITING)
+            self._event(rid, "preempt", to="waiting", mid_prefill=True)
+            return
+        self._swap_out(rid, keep_copy=True, last_slot_written=True)
+        req.prefill_remaining = 0
+        req.resume_tokens = 0          # recompute mode: fresh _admit, not
+        #                                a resume (no first token emitted)
+        n_prompt = req.current_turn().prompt_tokens
+        del req.token_history[len(req.token_history) - n_prompt:]
+        self.sched.move(rid, ReqState.WAITING)
+        self._event(rid, "preempt", to="waiting", mid_prefill=True)
+
+    def _admit(self, rid: int) -> bool:
+        """WAITING -> RUNNING via prefill (+prefix swap-in if CPU copy).
+        Recompute-preempted requests re-prefill their whole context."""
+        req = self._req(rid)
+        if req.resume_tokens:
+            return self._admit_resume(rid)
+        turn = req.current_turn()
+        reused = min(self.reuse.valid_tokens(rid), req.prefix_tokens)
+        new_ctx = req.prefix_tokens + turn.prompt_tokens
+        try:
+            self.gpu_mgr.allocate_tokens(rid, new_ctx)
+            self.gpu_mgr.note_tokens(rid, new_ctx)
+        except OutOfBlocksError:
+            self.gpu_mgr.release_request(rid)   # roll back partial alloc
+            return False
+        gpu_runs = self.gpu_mgr.request_runs(rid)
+        gpu_blocks = runs_to_indices(gpu_runs)
+        self.swap.resolve_conflicts(self.clock, gpu_blocks)
+        # prefix-with-prefill: reused tokens are swapped in, the rest computed
+        if reused > 0:
+            bs = self.config.block_size
+            n_reused_blocks = (reused + bs - 1) // bs
+            runs_in = self._runs_for_tokens(rid, 0, reused)  # token order
+            cpu_ids = self.reuse.mgr.request_block_ids(rid)[:n_reused_blocks] \
+                if self.pools is not None else []
+            self._dispatch_swap(rid, "in", runs_in, cpu_ids,
+                                asynchronous=False)  # prefill needs it NOW
+        # prefill compute for the non-reused tokens
+        new_tokens = new_ctx - reused
+        chunk = self.config.policy.chunked_prefill_tokens
+        if chunk and self.pools is None and new_tokens > chunk:
+            # BEYOND-PAPER (Sarathi-style): spread the prefill over
+            # iterations so long prompts stop stalling the decode batch
+            req.prefill_remaining = new_tokens
+            req.context_tokens = new_ctx
+            self.metrics.prefills += 1
+            self.sched.move(rid, ReqState.RUNNING)
+            self._event(rid, "admit", reused=reused, chunked=True)
+            return True
+        if chunk and self.pools is not None \
+                and new_ctx - (reused - reused % self.config.block_size) \
+                > chunk:
+            # REAL-mode chunked prefill (DESIGN.md §5): the runner opens a
+            # chunked-prefill state machine; step 5 advances it one
+            # bucketed chunk per iteration between decode steps, so the
+            # long prompt never freezes the decode batch.  The carry is
+            # seeded from the restored ``reused`` prefix (bit-identical
+            # to recomputing it), so the gate — like the compute and the
+            # billing — covers only the tail beyond the block-aligned
+            # reused prefix.
+            self._begin_real_chunked_prefill(req, reused)
+            self.metrics.prefills += 1
+            self.sched.move(rid, ReqState.RUNNING)
+            self._event(rid, "admit", reused=reused, chunked=True)
+            return True
+        t_prefill = self.iter_cost.prefill_us(max(new_tokens, 1))
+        self.clock.advance(t_prefill)
+        req.context_tokens = new_ctx
+        self.metrics.prefills += 1
+        if self.pools is not None:
+            self._real_prefill(req, reused)
+        self.sched.move(rid, ReqState.RUNNING)
+        self._event(rid, "admit", reused=reused, chunked=False)
+        self._emit_first_token(rid)
+        return True
+
+    def _allocate_token_slot(self, rid: int, skipped: Optional[set] = None
+                             ) -> bool:
+        """Allocate the one-token block slot the next decode will write
+        KV into: on OutOfBlocksError preempt a victim (recorded in
+        ``skipped`` so the caller drops it from this iteration's decode
+        set) and retry; synchronize swap conflicts on any block the
+        allocation acquired — it may be a just-freed block an async d2h
+        copy is still reading (torn victim KV otherwise).  Returns False
+        when the pool stays full."""
+        before = set(self.gpu_mgr.request_block_ids(rid))
+        try:
+            self.gpu_mgr.allocate_tokens(rid, 1)
+            self.gpu_mgr.note_tokens(rid, 1)
+        except OutOfBlocksError:
+            victim = self._find_victim(exclude={rid})
+            if victim is None:
+                return False
+            self._preempt(victim)
+            if skipped is not None:
+                skipped.add(victim)
+            try:
+                self.gpu_mgr.allocate_tokens(rid, 1)
+                self.gpu_mgr.note_tokens(rid, 1)
+            except OutOfBlocksError:
+                return False
+        grown = [b for b in self.gpu_mgr.request_block_ids(rid)
+                 if b not in before]
+        if grown:
+            self.swap.resolve_conflicts(self.clock, grown)
+        return True
+
+    def _emit_first_token(self, rid: int) -> None:
+        """The prompt's last position produced the response's first token."""
+        req = self._req(rid)
+        req.context_tokens += 1
+        if req.turn_done():
+            # max_tokens == 1: the prompt's last position already produced
+            # the whole response — no next-token slot, no decode step
+            # (without this the decode loop over-generated by one token)
+            req.finish_token(self.clock.now_us)
+            self.metrics.ttfts_us.append(req.ttfts_us[-1])
+            self.metrics.total_tokens += 1
+            self._credit(rid, first=True)
+            self._event(rid, "first_token", ttft_us=req.ttfts_us[-1])
+            self._finish_turn(rid)
+            return
+        if not self._allocate_token_slot(rid):
+            # a rebalance-time admission landed on a pool that stays full
+            # even after the victim fallback: bounce THIS request; the
+            # emitted token stays in its history and the resumption path
+            # (swap-in / re-prefill) allocates its next-token slot
+            req.finish_token(self.clock.now_us)
+            self.metrics.ttfts_us.append(req.ttfts_us[-1])
+            self.metrics.total_tokens += 1
+            self._credit(rid, first=True)
+            self._event(rid, "first_token", ttft_us=req.ttfts_us[-1])
+            self._preempt(rid)
+            return
+        req.finish_token(self.clock.now_us)
+        self.metrics.ttfts_us.append(req.ttfts_us[-1])
+        self.metrics.total_tokens += 1
+        self._credit(rid, first=True)
+        self._event(rid, "first_token", ttft_us=req.ttfts_us[-1])
+
+    def _admit_resume(self, rid: int) -> bool:
+        """Re-admit a recompute-preempted request: re-prefill the full
+        context (the recomputation cost the paper's swap mode avoids).
+        With chunked prefill enabled the recomputation runs through the
+        SAME chunked state machine as a fresh admission — one chunk per
+        engine iteration interleaved with decode steps — instead of one
+        monolithic re-prefill iteration; the completion emits NO first
+        token (``prefill_is_resume``): the request already holds its
+        pending token and resumes decoding."""
+        req = self._req(rid)
+        ctx = req.resume_tokens
+        try:
+            self.gpu_mgr.allocate_tokens(rid, ctx)
+            self.gpu_mgr.note_tokens(rid, ctx)
+        except OutOfBlocksError:
+            self.gpu_mgr.release_request(rid)   # roll back partial alloc
+            return False
+        gpu_blocks = self.gpu_mgr.request_block_ids(rid)
+        self.swap.resolve_conflicts(self.clock, gpu_blocks)
+        # A sim-mode recompute preemption can land MID chunked prefill —
+        # before the turn's first token existed (real mode can't reach
+        # here: _abort_chunked_prefill reroutes those to a fresh admit).
+        # Such a resume must still EMIT the first token on completion;
+        # a resume of a decoding request (first_token_us set) must not.
+        emitted = req.first_token_us is not None
+        chunk = self.config.policy.chunked_prefill_tokens
+        if chunk and ctx > chunk:
+            if self.pools is not None:
+                # the runner recomputes KV for all but the pending last
+                # token, chunk by chunk; ``context_tokens`` stays at the
+                # full context throughout (the blocks are allocated and
+                # the token positions fixed — only the KV is re-filling)
+                view = DecodeRequestView(rid, gpu_blocks, req.token_history)
+                req.prefill_remaining = self.runner.prefill_begin(
+                    view, emit_first=False)
+            else:
+                req.prefill_remaining = ctx
+            req.prefill_is_resume = emitted
+            req.resume_tokens = 0
+            self.metrics.prefills += 1
+            self.sched.move(rid, ReqState.RUNNING)
+            self._event(rid, "resume", tokens=ctx, chunked=True)
+            return True
+        self.clock.advance(self.iter_cost.prefill_us(max(ctx, 1)))
+        self.metrics.prefills += 1
+        if self.pools is not None:
+            # recompute: regenerate KV for the already-known history
+            self._real_reprefill(req)
+        req.resume_tokens = 0
+        self.sched.move(rid, ReqState.RUNNING)
+        self._event(rid, "resume", tokens=ctx, chunked=False)
+        if not emitted:
+            self._emit_first_token(rid)
+        return True
+
+    def _real_reprefill(self, req: Request) -> None:
+        """Recompute-preemption resume: the runner regenerates KV for the
+        already-known history (all but the last token — its K/V is written
+        by the next decode step, which consumes hist[-1] as input) and
+        inserts it through its persistent block tables."""
+        view = DecodeRequestView(req.rid,
+                                 self.gpu_mgr.request_block_ids(req.rid),
+                                 req.token_history)
+        # KV compute runs OUTSIDE the pool lock (it never touches the
+        # pool); only the scatter + rebind serialize with swap copies
+        staged = self.runner.prefill_compute(view, emit_first=False)
+        with self.swap._pool_lock:
+            self.pools.gpu = self.runner.prefill_insert(
+                view, self.pools.gpu, staged)
+
+    # ------------------------------------------------------------------
+    # real-model data plane
+    # ------------------------------------------------------------------
+
+    def _extend_prompt(self, req: Request) -> DecodeRequestView:
+        """Extend the token history with the current turn's prompt ids
+        (supplied by the client at add_request/continue_session time)
+        and build the runner view for its prefill."""
+        rid = req.rid
+        hist = req.token_history
+        self.runner.flush()          # history must be current before extend
+        turn = req.current_turn()
+        assert turn.prompt_ids is not None, \
+            "real mode needs prompt token ids (add_request got a count?)"
+        hist.extend(turn.prompt_ids)
+        req.hist_emitted = len(hist)     # stream deltas = response tokens
+        return DecodeRequestView(rid, self.gpu_mgr.request_block_ids(rid),
+                                 hist)
+
+    def _real_prefill(self, req: Request, reused: int = 0) -> None:
+        """Runner-managed whole-prompt prefill: extend the turn's prompt,
+        then the runner computes KV, inserts it through its persistent
+        block tables (device-side scatter — no host KV round-trip) and
+        emits the first response token (device-side sampling; greedy at
+        temperature 0).  With ``reused`` > 0 the carry is seeded from the
+        prefix the admission just restored into the pool
+        (``ops.seed_prefill_carry`` — bit-identical to recomputing), so
+        the monolithic path — like the chunked one — never recomputes a
+        re-admitted prefix."""
+        view = self._extend_prompt(req)
+        rid = req.rid
+        if reused > 0:
+            with self.swap._pool_lock:   # the carry seed reads the pool
+                total = self.runner.prefill_begin(
+                    view, emit_first=True, reused_tokens=reused,
+                    pool=self.pools.gpu)
+        else:
+            total = self.runner.prefill_begin(view, emit_first=True)
+        # KV compute + first-token draw run OUTSIDE the pool lock; only
+        # the scatter + rebind serialize with swap copies
+        staged = self.runner.prefill_chunk_compute(rid, total)
+        self.runner.prefill_emit_first(rid)
+        with self.swap._pool_lock:
+            self.pools.gpu = self.runner.prefill_insert(
+                view, self.pools.gpu, staged)
+
+    def _begin_real_chunked_prefill(self, req: Request,
+                                    reused: int) -> None:
+        """Open the runner's chunked-prefill state machine for a newly
+        admitted request (DESIGN.md §5).  The carry is seeded from the
+        ``reused`` prefix the admission just restored into the pool, so
+        only the non-reused tail is computed AND billed — matching the
+        sim-mode chunked accounting (the prefix's transfer cost was
+        already charged by the synchronous swap-in).  ``context_tokens``
+        tracks the tokens whose KV is resident and claimable (seeded
+        prefix + chunk inserts), so a mid-prefill preemption swaps out
+        exactly the processed prefix; ``prefill_remaining`` counts the
+        tokens left to compute — step 5 advances one chunk per
+        iteration."""
+        view = self._extend_prompt(req)
+        with self.swap._pool_lock:      # the carry seed reads the pool
+            req.prefill_remaining = self.runner.prefill_begin(
+                view, emit_first=True, reused_tokens=reused,
+                pool=self.pools.gpu)
+        req.context_tokens = len(req.token_history) - req.prefill_remaining
+
+    def _real_prefill_chunk(self, rid: int) -> int:
+        """Advance one request's in-flight chunked prefill by one chunk:
+        compute OUTSIDE the pool lock (the forward touches no pool
+        state), insert the chunk's KV under it, and on the final chunk
+        emit the first token.  Non-final chunks are trimmed to block-size
+        multiples so every insert stays block-aligned.  A chunked RESUME
+        (recompute re-prefill) neither advances ``context_tokens`` (the
+        full context was re-allocated up front) nor emits a first token.
+        Returns the chunk token count (charged to the sim clock by the
+        caller)."""
+        req = self._req(rid)
+        bs = self.config.block_size
+        n = min(self.config.policy.chunked_prefill_tokens,
+                req.prefill_remaining)
+        if n < req.prefill_remaining:
+            n -= n % bs
+            if n == 0:                 # chunk smaller than one block
+                n = min(bs, req.prefill_remaining)
+        staged = self.runner.prefill_chunk_compute(rid, n)
+        with self.swap._pool_lock:
+            self.pools.gpu = self.runner.prefill_chunk_insert(
+                rid, self.pools.gpu, staged)
+        req.prefill_remaining -= n
+        if not req.prefill_is_resume:
+            req.context_tokens += n
+        if req.prefill_remaining == 0:
+            self.runner.prefill_finish(rid)
+            if req.prefill_is_resume:
+                req.prefill_is_resume = False
+            else:
+                self._emit_first_token(rid)
+        return n
+
+    def _real_decode(self, rids: List[int]) -> None:
+        """Batched paged decode through the device-resident runner: only
+        changed block-table rows are uploaded, the pool is donated, and
+        the next-token host sync is deferred to the next iteration's
+        decode (overlapping this step with the next control plane)."""
+        views = [DecodeRequestView(r, self.gpu_mgr.request_block_ids(r),
+                                   self._req(r).token_history)
+                 for r in rids]
+        with self.swap._pool_lock:
+            self.pools.gpu = self.runner.decode(views, self.pools.gpu)
+
+    # ------------------------------------------------------------------
+    # the iteration
+    # ------------------------------------------------------------------
+
+    def step(self, until_us: Optional[float] = None) -> List[RequestOutput]:
+        """Advance the engine one iteration and return this step's
+        incremental per-request outputs (token deltas, first-token and
+        finish markers — aborts issued since the previous step are
+        folded in too).  ``until_us``: the caller's next known event
+        (arrival, wake-up); an idle engine advances its clock no further
+        than that, so open-world drivers control time without the engine
+        polling."""
+        t_wall0 = time.perf_counter()
+        m = self.metrics
+        bs = self.config.block_size
+        prefills_before = m.prefills
+
+        # Step 1: completed async swap-ins -> running.  A swap-in may
+        # consist of several chunk tasks, and a fine-grained conflict sync
+        # (resolve_conflicts) can retire tasks between polls; a request is
+        # resident — promote it — exactly when NO in-flight swap-in task
+        # remains for it (it would otherwise be stranded in SWAPPING_IN).
+        self.swap.poll_completed(self.clock)
+        if self.sched.swapping_in:
+            ongoing = {t.req_id for t in self.swap.ongoing_swap_in}
+            for rid in list(self.sched.swapping_in):
+                if rid not in ongoing:
+                    self.sched.move(rid, ReqState.RUNNING)
+                    self._event(rid, "promote")
+
+        # Step 2: budget safeguard — a request whose working set exceeds
+        # the whole GPU pool can never be served; fail it instead of
+        # deadlocking the queue.
+        budget = self._budget_tokens()
+        for rid in list(self.sched.waiting):
+            req = self._req(rid)
+            need = max(req.target_tokens,
+                       req.prefix_tokens + req.current_turn().prompt_tokens
+                       + bs)
+            if need > budget:
+                import warnings
+                warnings.warn(f"request {rid} needs {need} tokens "
+                              f"> pool budget {budget}; dropping")
+                self.abort(rid, reason="dropped")
+
+        # Step 3: priority update -> rebalance
+        updated = self.sched.step_trace()
+        if updated:
+            desired = self.sched.desired_running(
+                self._budget_tokens(), bs,
+                batch_bucket=(self.runner.batch_bucket
+                              if self.runner is not None else 0))
+            to_preempt, to_swap_in, to_admit = \
+                self.sched.classify_rebalance(desired)
+            for rid in to_preempt:
+                self._preempt(rid)
+            for rid in to_swap_in:
+                self._swap_in(rid)
+            for rid in to_admit:
+                self._admit(rid)
+
+        # Step 4: opportunistic admission (space permitting), capped at
+        # the batch-bucket-aware target instead of max_running outright
+        for rid in sorted(list(self.sched.waiting),
+                          key=self.sched.priority, reverse=True):
+            free_tok = self.gpu_mgr.free_blocks() * bs
+            req = self._req(rid)
+            need = req.prefix_tokens + req.current_turn().prompt_tokens + bs
+            if need > free_tok \
+                    or len(self.sched.running) + len(self.sched.swapping_in) \
+                    >= self._admission_target():
+                break
+            self._admit(rid)
+        for rid in list(self.sched.swapped):
+            if len(self.sched.running) + len(self.sched.swapping_in) \
+                    >= self._admission_target():
+                break
+            free_tok = self.gpu_mgr.free_blocks() * bs
+            if self._req(rid).context_tokens + bs > free_tok:
+                break
+            self._swap_in(rid)
+
+        # Step 5: decode one token for the running batch.  Requests with
+        # an in-flight chunked prefill advance their prefill instead of
+        # decoding (one chunk per iteration, piggybacked on the batch).
+        rids = [r for r in self.sched.running
+                if self._req(r).prefill_remaining == 0]
+        prefilling = [r for r in self.sched.running
+                      if self._req(r).prefill_remaining > 0]
+        chunk_tokens = 0
+        if prefilling:
+            # at most ONE prompt chunk per iteration (highest priority
+            # first) interleaved with the decode batch — the Sarathi-style
+            # fairness lever bounding tail TBT during admission bursts
+            chunk = self.config.policy.chunked_prefill_tokens
+            rid_p = max(prefilling, key=self.sched.priority)
+            reqp = self._req(rid_p)
+            if self.pools is not None:
+                chunk_tokens = self._real_prefill_chunk(rid_p)
+            else:
+                chunk_tokens = min(chunk, reqp.prefill_remaining)
+                reqp.prefill_remaining -= chunk_tokens
+                if reqp.prefill_remaining == 0:
+                    if reqp.prefill_is_resume:
+                        reqp.prefill_is_resume = False
+                    else:
+                        self._emit_first_token(rid_p)
+        if rids or prefilling:
+            # block allocation for the new token (conflict-checked in
+            # _allocate_token_slot).  Iterate over a SNAPSHOT and track a
+            # ``skipped`` set: a victim preempted from inside the batch
+            # must not shift the iteration (the old in-place
+            # ``rids.remove`` silently skipped the next request's
+            # allocation while still decoding and crediting it), and a
+            # request whose allocation failed must sit this iteration out
+            # entirely — decoding it anyway would advance
+            # ``context_tokens`` past its block table (desync).
+            skipped: set = set()
+            for rid in list(rids):
+                if rid in skipped or rid not in self.sched.running:
+                    continue       # preempted as a victim earlier this loop
+                if not self._allocate_token_slot(rid, skipped):
+                    skipped.add(rid)           # retry next iteration
+            decode_rids = [r for r in rids if r not in skipped
+                           and r in self.sched.running]
+            if decode_rids and self.pools is not None:
+                self._real_decode(decode_rids)
+            total_ctx = sum(self._req(r).context_tokens for r in decode_rids)
+            t_iter = self.iter_cost.decode_iter_us(len(decode_rids),
+                                                   total_ctx)
+            if chunk_tokens:
+                t_iter += self.iter_cost.prefill_us(chunk_tokens) \
+                    - self.iter_cost.hw.iter_overhead_us
+            if not decode_rids and not chunk_tokens:
+                # everyone was skipped (pool exhausted, no victim): charge
+                # the iteration overhead so the sim clock still advances
+                t_iter = self.iter_cost.hw.iter_overhead_us
+            if decode_rids:
+                # feed the adaptive swap profiler the overlap window one
+                # decode iteration offers (decide_async cost model)
+                self.swap.note_decode_iter(t_iter)
+            self.clock.advance(t_iter)
+            for rid in decode_rids:
+                req = self._req(rid)
+                req.context_tokens += 1
+                req.finish_token(self.clock.now_us)
+                m.total_tokens += 1
+                if req.tbts_us:
+                    m.tbts_us.append(req.tbts_us[-1])
+                self._credit(rid)
+                if req.turn_done():
+                    self._finish_turn(rid)
+            m.iter_records.append((self.clock.now_us, len(decode_rids),
+                                   t_iter, m.prefills - prefills_before,
+                                   self.swap.total_stall_us))
+        else:
+            # idle: advance to the next event (the caller's next arrival
+            # or wake-up, or an in-flight swap-in completing)
+            self._advance_idle(until_us)
+
+        m.iterations += 1
+        m.total_time_us = self.clock.now_us
+        m.ctx_switch_stall_us = self.swap.total_stall_us
+        m.callstack_wall_s += time.perf_counter() - t_wall0
+        return self._collect_outputs()
+
+    def _collect_outputs(self) -> List[RequestOutput]:
+        outs = list(self._outs.values())
+        self._outs = {}
+        if self.stream_tokens and self.runner is not None:
+            # materialize this step's token ids for streaming clients —
+            # the one deliberate host sync of the online path (the
+            # deferred-sync overlap is the price of live token deltas)
+            self.runner.flush()
+        for out in outs:
+            req = self.sched.requests.get(out.handle) \
+                or self.parked.get(out.handle)
+            if (self.stream_tokens and req is not None
+                    and self.pools is not None and out.token_ids is None):
+                hist = req.token_history
+                out.token_ids = hist[req.hist_emitted:]
+                req.hist_emitted = len(hist)
+        return outs
+
+    def _finish_turn(self, rid: int) -> None:
+        req = self._req(rid)
+        if self.runner is not None:
+            self.runner.flush()      # materialize the turn's last tokens
+        if req.token_history:
+            self._token_hist_by_conv[rid] = list(req.token_history)
+        # retain the KV copy for the next turn (reuse mechanism); baseline
+        # swaps the whole context out; recompute mode just frees
+        self._swap_out(rid, keep_copy=True)
+        req.resume_tokens = 0       # a follow-up turn is a fresh prefill
+        for q in (self.sched.waiting, self.sched.running,
+                  self.sched.swapped, self.sched.swapping_in):
+            if rid in q:
+                q.remove(rid)
+        self._record_slo(req, "length")
+        out = self._out(rid)
+        out.finished, out.finish_reason = True, "length"
+        out.generated, out.context_tokens = req.generated, req.context_tokens
+        if self.stream_tokens and self.pools is not None:
+            # fill the final delta HERE (history is flushed above): a
+            # non-retained request is gone before _collect_outputs runs
+            out.token_ids = req.token_history[req.hist_emitted:]
+            req.hist_emitted = len(req.token_history)
+        if req.retain_kv:
+            req.state = ReqState.FINISHED
+            self.parked[rid] = req
+            del self.sched.requests[rid]
+            self._event(rid, "finish", retained=True, tokens=req.generated)
+        else:
+            req.state = ReqState.DONE
+            self.reuse.release(rid)
+            del self.sched.requests[rid]
+            self._event(rid, "finish", retained=False, tokens=req.generated)
+
+    def _advance_idle(self, until_us: Optional[float] = None) -> None:
+        events = [t.done_at for t in self.swap.ongoing_swap_in]
+        if until_us is not None:
+            events.append(until_us)
+        if events:
+            self.clock.advance_to(max(min(events), self.clock.now_us + 100.0))
+        else:
+            self.clock.advance(1000.0)
+
+    def _admission_target(self) -> int:
+        """Batch-bucket-aware admission cap (real mode).  The decode step
+        executes the next pow2 batch regardless of occupancy, so filling
+        the compiled bucket is FREE (padded rows already run) while
+        spilling a boundary doubles the padded batch and compiles a new
+        variant.  Admission therefore targets the current bucket and only
+        crosses a boundary when the candidates would fill at least half
+        of the next bucket's new rows — with a bounded hold (16
+        iterations) so a lone straggler is never starved; the priority
+        rebalance path is never gated.  Sim mode — and a cold runner with
+        no compiled variant to protect yet — keeps the plain
+        ``max_running`` cap."""
+        cap = self.config.max_running
+        if self.runner is None or self.runner.batch_bucket == 0:
+            return cap
+        cur = len(self.sched.running) + len(self.sched.swapping_in)
+        bucket = self.runner.batch_bucket
+        while bucket < cur:
+            bucket *= 2
+        if cur < min(bucket, cap):
+            self._bucket_hold = 0       # not at a boundary: no hold episode
+            return min(bucket, cap)
+        waiting = len(self.sched.waiting) + len(self.sched.swapped)
+        if waiting == 0:
+            self._bucket_hold = 0       # episode ended without crossing
+            return min(bucket, cap)
+        if waiting >= max(1, bucket // 2) or self._bucket_hold >= 16:
+            self._bucket_hold = 0
+            return min(bucket * 2, cap)
+        if self.metrics.iterations != self._bucket_hold_iter:
+            # count the hold once per engine iteration, not per call
+            self._bucket_hold += 1
+            self._bucket_hold_iter = self.metrics.iterations
+        return min(bucket, cap)
+
+    def _find_victim(self, exclude) -> Optional[int]:
+        victims = self.sched.victims_for_space(exclude)
+        return victims[0] if victims else None
+
+    # ------------------------------------------------------------------
+
+    def shutdown(self) -> None:
+        if self.runner is not None:
+            self.runner.flush()
+        self.swap.shutdown()

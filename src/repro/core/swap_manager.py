@@ -280,6 +280,23 @@ class MultithreadingSwapManager:
                                  if id(t) not in done_ids]
         self.n_syncs += 1
 
+    def retire_request(self, rid: int) -> int:
+        """Abort support: drop an aborted request's in-flight swap-IN
+        chunk tasks.  Their data-plane copies already ran inline on the
+        dispatching thread (pool-mutating h2d copies never go to workers
+        — DESIGN.md §4.3), so only simulated latency is outstanding and
+        nothing dangles.  Its swap-OUT tasks are deliberately LEFT on
+        ``ongoing_swap_out``: their worker d2h gathers may still be
+        writing the request's (now released) CPU blocks, and later
+        copies reallocating those blocks order behind the listed futures
+        via ``data_deps`` — dropping the task would drop that ordering.
+        They retire on completion through ``poll_completed`` as usual.
+        Returns the number of swap-in tasks dropped."""
+        before = len(self.ongoing_swap_in)
+        self.ongoing_swap_in = [t for t in self.ongoing_swap_in
+                                if t.req_id != rid]
+        return before - len(self.ongoing_swap_in)
+
     def resolve_conflicts(self, clock: SimClock,
                           gpu_blocks: Sequence[int]) -> int:
         conflicts = self.detect_conflicts(gpu_blocks)

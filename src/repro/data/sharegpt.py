@@ -10,13 +10,16 @@ from __future__ import annotations
 import math
 import random
 from dataclasses import dataclass, field
-from typing import List
+from typing import List, Optional
 
 
 @dataclass
 class Turn:
     prompt_tokens: int
     response_tokens: int
+    # actual prompt token ids (real mode, supplied by the serving client
+    # at add_request/continue_session time); None for sim-mode traces
+    prompt_ids: Optional[List[int]] = None
 
 
 @dataclass
@@ -63,6 +66,29 @@ def sample_conversations(n: int, *, rate_req_s: float = 1.0, seed: int = 0,
         out.append(Conversation(conv_id=i, arrival_s=t, turns=turns,
                                 think_time_s=max(0.5, rng.gauss(5.0, 2.0))))
     return out
+
+
+def synth_prompt_ids(conv_id: int, turn_idx: int, n_tokens: int,
+                     vocab_size: int) -> List[int]:
+    """Deterministic synthetic prompt ids for one (conversation, turn) —
+    the token stream real-mode replay clients submit via ``add_request``
+    (a pure function of the ids, so any driver regenerates the identical
+    prompt: the bit-exact-replay anchor)."""
+    import numpy as np
+    rng = np.random.RandomState((conv_id * 1009 + turn_idx) % (2 ** 31))
+    return rng.randint(1, vocab_size, size=n_tokens).tolist()
+
+
+def prompt_for_turn(conv: "Conversation", turn_idx: int,
+                    vocab_size: Optional[int] = None):
+    """What a replay client passes as ``add_request``'s prompt for one
+    trace turn: the synthetic id stream when serving a real model
+    (``vocab_size`` given), else just the sim-mode token count."""
+    turn = conv.turns[turn_idx]
+    if vocab_size is None:
+        return turn.prompt_tokens
+    return synth_prompt_ids(conv.conv_id, turn_idx, turn.prompt_tokens,
+                            vocab_size)
 
 
 def _geometric(rng: random.Random, p: float) -> int:

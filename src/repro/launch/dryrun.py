@@ -78,6 +78,51 @@ def run_case(arch: str, shape_name: str, multi_pod: bool,
     return result
 
 
+def run_serving_case(arch: str) -> dict:
+    """Serving-path dry-run (ISSUE 5): lower + execute the online
+    ``ServingEngine`` hot path (bucketed prefill, donated decode step,
+    staged swap) for one smoke arch through the PUBLIC API — add a
+    couple of requests, step to completion, abort one mid-flight — and
+    report wall time plus the compiled-variant counts of the decode
+    step.  Catches serving-stack compile regressions the mesh cases
+    can't see."""
+    from repro.configs import get_smoke_config
+    from repro.core import (DecodeRunner, EngineConfig, SamplingParams,
+                            ServingEngine)
+    from repro.data.priority import PriorityTrace
+    from repro.data.sharegpt import synth_prompt_ids
+    from repro.models import transformer as T
+    from repro.models.paged import supports_paged
+
+    cfg = get_smoke_config(arch)
+    if not supports_paged(cfg):
+        return {"arch": arch, "case": "serving", "status": "skipped",
+                "reason": "no paged-pool support (needs uniform GQA)"}
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    ec = EngineConfig(mode="real", num_gpu_blocks=64, num_cpu_blocks=128,
+                      max_running=4, max_batch=4).with_policy("fastswitch")
+    t0 = time.time()
+    eng = ServingEngine(ec, trace=PriorityTrace("random", 1e-9, seed=0),
+                        model_bundle={"cfg": cfg, "params": params})
+    handles = [eng.add_request(synth_prompt_ids(i, 0, 12, cfg.vocab_size),
+                               SamplingParams(max_tokens=6))
+               for i in range(3)]
+    it = 0
+    while eng.has_work() and it < 2000:
+        eng.step()
+        if it == 2:
+            eng.abort(handles[-1])
+        it += 1
+    eng.shutdown()
+    ok = not eng.has_work() and eng.metrics.total_tokens > 0
+    return {"arch": arch, "case": "serving",
+            "status": "ok" if ok else "FAIL",
+            "t_total_s": round(time.time() - t0, 2),
+            "tokens": eng.metrics.total_tokens,
+            "aborted": eng.metrics.aborted,
+            "decode_jit_variants": DecodeRunner.jit_cache_size()}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", action="append", default=None,
@@ -91,6 +136,9 @@ def main() -> int:
     ap.add_argument("--no-roofline", action="store_true")
     ap.add_argument("--variant", default="baseline",
                     help="'+'-combinable: tp-params, kv-int8, moe-cap-shard")
+    ap.add_argument("--serving", action="store_true",
+                    help="also dry-run the online serving hot path "
+                         "(ServingEngine add_request/step/abort)")
     args = ap.parse_args()
 
     archs = args.arch or (list_archs() if args.all else ["qwen2-1.5b"])
@@ -100,6 +148,16 @@ def main() -> int:
 
     results = []
     n_fail = 0
+    if args.serving:
+        for arch in archs:
+            r = run_serving_case(arch)
+            results.append(r)
+            if r["status"] == "FAIL":
+                n_fail += 1
+            print(f"{r['status']:4s} {arch} x serving "
+                  + json.dumps({k: v for k, v in r.items()
+                                if k not in ("arch", "case", "status")}),
+                  flush=True)
     for arch in archs:
         for shape in shapes:
             for mp in pods:

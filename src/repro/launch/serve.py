@@ -1,58 +1,232 @@
-"""Serving launcher: run the FastSwitch engine end-to-end.
+"""Serving launcher: trace-replay benchmarks AND the online serving API.
 
-CPU-real example (reduced model, actual tokens through the paged pool):
+Quickstart — online open-world serving (the ``ServingEngine``
+``add_request/step/abort/continue_session`` API, DESIGN.md §6):
+
+  # sim-mode online replay with streaming finish markers, random
+  # cancellations and a per-request JSONL event log
+  PYTHONPATH=src python -m repro.launch.serve --online \
+      --conversations 20 --cancel-frac 0.2 --events /tmp/events.jsonl \
+      --slo-ttft-ms 500 --slo-tbt-ms 80
+
+  # real mode (reduced model, actual tokens through the paged pool),
+  # printing token-id deltas as they stream out
+  PYTHONPATH=src python -m repro.launch.serve --online --real --stream \
+      --conversations 6
+
+  # tier-1 smoke: tiny run + event-log well-formedness assertions
+  PYTHONPATH=src python -m repro.launch.serve --online --smoke [--real]
+
+The online driver is an ordinary CLIENT of the engine: it submits
+arrivals with ``add_request`` (multi-turn follow-ups via
+``continue_session`` — the KV-reuse path), drains ``step()`` outputs,
+and aborts a random fraction mid-flight to exercise cancellation in
+every lifecycle state.  At the end it prints the latency summary AND
+the per-request SLO-attainment / fairness rollup (``slo_summary``).
+
+Trace-driven (sim) benchmark replay — the classic closed-world runs:
+  PYTHONPATH=src python -m repro.launch.serve --policy vllm \
+      --policy fastswitch --conversations 200 --update-freq 0.04
+
+CPU-real replay:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --real \
       --conversations 8
-
-Trace-driven (sim) benchmark run:
-  PYTHONPATH=src python -m repro.launch.serve --policy vllm --policy fastswitch \
-      --conversations 200 --update-freq 0.04 --pattern markov
 """
 from __future__ import annotations
 
 import argparse
 import json
+import random
 
 
-def main() -> None:
-    from repro.core.policies import POLICIES
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b")
-    ap.add_argument("--real", action="store_true",
-                    help="reduced real model + paged pool (CPU)")
-    ap.add_argument("--policy", action="append", default=None,
-                    choices=sorted(POLICIES))
-    ap.add_argument("--conversations", type=int, default=100)
-    ap.add_argument("--rate", type=float, default=1.0)
-    ap.add_argument("--pattern", default="markov",
-                    choices=["markov", "random"])
-    ap.add_argument("--update-freq", type=float, default=0.02)
-    ap.add_argument("--gpu-blocks", type=int, default=None)
-    ap.add_argument("--cpu-blocks", type=int, default=None)
-    ap.add_argument("--max-running", type=int, default=None)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None)
-    args = ap.parse_args()
+def _build_real_bundle(arch: str, seed: int):
+    import jax
 
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    from repro.models.paged import supports_paged
+    cfg = get_smoke_config(arch)
+    if not supports_paged(cfg):
+        raise SystemExit(
+            f"{arch}: real-mode serving needs a uniform GQA arch "
+            "(paged pool path); use sim mode for this family")
+    params = T.init_params(cfg, jax.random.PRNGKey(seed))
+    return {"cfg": cfg, "params": params}
+
+
+def validate_event_log(path: str) -> int:
+    """Assert the JSONL event log is well-formed: every line parses,
+    kinds are known, timestamps are monotone, and every handle's
+    lifecycle is coherent (an arrive first; at most one terminal
+    finish/abort/drop).  Returns the number of events."""
+    from repro.core.request_api import EVENT_KINDS
+    n = 0
+    last_t = -1.0
+    seen_arrive = set()
+    terminal = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            ev = json.loads(line)
+            assert {"t_us", "handle", "kind"} <= set(ev), f"bad event {ev}"
+            assert ev["kind"] in EVENT_KINDS, f"unknown kind {ev['kind']}"
+            assert ev["t_us"] >= last_t, "event log not time-ordered"
+            last_t = ev["t_us"]
+            h = ev["handle"]
+            if ev["kind"] == "arrive":
+                seen_arrive.add(h)
+            else:
+                assert h in seen_arrive, f"event before arrive: {ev}"
+            if ev["kind"] in ("finish", "abort", "drop"):
+                terminal.setdefault(h, []).append(ev["kind"])
+            n += 1
+    for h, kinds in terminal.items():
+        # a retained session may finish several turns; abort/drop ends it
+        assert kinds.count("abort") + kinds.count("drop") <= 1, \
+            f"handle {h} terminated twice: {kinds}"
+    assert n > 0, "empty event log"
+    return n
+
+
+def run_online(args) -> dict:
+    """Open-world client loop over the ServingEngine API.
+
+    Deliberately an INDEPENDENT client — it shares no driver scaffold
+    with ``FastSwitchEngine``'s replay (tests pin the two equivalent);
+    what a network front-end would do, it does here inline."""
+    from repro.core import EngineConfig, SamplingParams, ServingEngine, SLOSpec
+    from repro.data.priority import PriorityTrace
+    from repro.data.sharegpt import prompt_for_turn, sample_conversations
+
+    policy = (args.policy or ["fastswitch"])[0]
+    n_conv = 6 if args.smoke else args.conversations
+    model = None
+    if args.real:
+        model = _build_real_bundle(args.arch, args.seed)
+        cfg = EngineConfig(
+            mode="real",
+            num_gpu_blocks=args.gpu_blocks or 64,
+            num_cpu_blocks=args.cpu_blocks or 256,
+            max_running=args.max_running or 4, max_batch=4,
+        ).with_policy(policy)
+        convs = sample_conversations(n_conv, rate_req_s=args.rate,
+                                     seed=args.seed, prompt_mu=2.5,
+                                     resp_mu=2.5, max_tokens=48)
+    else:
+        cfg = EngineConfig(
+            mode="sim",
+            num_gpu_blocks=args.gpu_blocks or (256 if args.smoke else 2048),
+            num_cpu_blocks=args.cpu_blocks or (1024 if args.smoke else 8192),
+            max_running=args.max_running or (8 if args.smoke else 32),
+        ).with_policy(policy)
+        convs = sample_conversations(n_conv, rate_req_s=args.rate,
+                                     seed=args.seed,
+                                     max_context=cfg.num_gpu_blocks * 8)
+
+    slo = None
+    if args.slo_ttft_ms or args.slo_tbt_ms:
+        slo = SLOSpec(ttft_ms=args.slo_ttft_ms or None,
+                      tbt_ms=args.slo_tbt_ms or None)
+    ev_file = open(args.events, "w") if args.events else None
+    sink = (lambda ev: ev_file.write(json.dumps(ev.as_dict()) + "\n")) \
+        if ev_file else None
+    engine = ServingEngine(cfg, trace=PriorityTrace(args.pattern,
+                                                    args.update_freq,
+                                                    seed=args.seed),
+                           model_bundle=model, event_sink=sink,
+                           stream_tokens=args.stream and args.real)
+
+    def prompt_for(conv, tix):
+        return prompt_for_turn(
+            conv, tix, model["cfg"].vocab_size if model else None)
+
+    rng = random.Random(args.seed + 1)
+    pending = sorted(convs, key=lambda c: c.arrival_s)
+    sleeping = []                    # (wake_s, conv, next_turn_idx)
+    by_handle = {c.conv_id: c for c in convs}
+    live, n_aborted = set(), 0
+    iters = 0
+    max_iters = 20_000 if args.real else 300_000
+    while (pending or sleeping or engine.has_work()) and iters < max_iters:
+        now_s = engine.clock.now_us / 1e6
+        while pending and pending[0].arrival_s <= now_s:
+            conv = pending.pop(0)
+            t = conv.turns[0]
+            engine.add_request(prompt_for(conv, 0),
+                               SamplingParams(max_tokens=t.response_tokens),
+                               slo=slo, handle=conv.conv_id,
+                               retain_kv=len(conv.turns) > 1)
+            live.add(conv.conv_id)
+        for entry in list(sleeping):
+            if entry[0] <= now_s:
+                sleeping.remove(entry)
+                _, conv, tix = entry
+                t = conv.turns[tix]
+                engine.continue_session(
+                    conv.conv_id, prompt_for(conv, tix),
+                    SamplingParams(max_tokens=t.response_tokens), slo=slo,
+                    retain_kv=tix + 1 < len(conv.turns))
+                live.add(conv.conv_id)
+        events = [w[0] * 1e6 for w in sleeping]
+        if pending:
+            events.append(pending[0].arrival_s * 1e6)
+        outs = engine.step(until_us=min(events) if events else None)
+        for out in outs:
+            if args.stream and (out.token_ids or out.finished):
+                ids = "".join(f" {t}" for t in (out.token_ids or []))
+                mark = f" [{out.finish_reason}]" if out.finished else ""
+                print(f"  req {out.handle}.{out.turn}:{ids}{mark}")
+            if out.finished:
+                live.discard(out.handle)
+                conv = by_handle[out.handle]
+                if (out.finish_reason == "length"
+                        and out.turn + 1 < len(conv.turns)):
+                    sleeping.append((out.t_us / 1e6 + conv.think_time_s,
+                                     conv, out.turn + 1))
+        # cancellation: a random client hangs up mid-flight (any state)
+        if args.cancel_frac and live and rng.random() < args.cancel_frac:
+            victim = rng.choice(sorted(live))
+            if engine.abort(victim):
+                live.discard(victim)
+                n_aborted += 1
+                # the whole conversation is gone: drop queued follow-ups
+                sleeping = [w for w in sleeping if w[1].conv_id != victim]
+        iters += 1
+    engine.shutdown()
+
+    m = engine.metrics
+    result = {**m.summary(), "slo": m.slo_summary(), **engine.swap.stats()}
+    print(f"online[{policy}] " + json.dumps(m.summary()))
+    print("slo " + json.dumps(m.slo_summary()))
+    if ev_file:
+        ev_file.close()
+        n_ev = validate_event_log(args.events)
+        print(f"event log {args.events}: {n_ev} events, well-formed")
+    if args.smoke:
+        assert not engine.has_work(), "smoke run did not drain"
+        assert m.total_tokens > 0, "smoke run served no tokens"
+        assert len(m.request_stats) > 0, "no per-request SLO records"
+        if args.cancel_frac:
+            assert m.aborted == n_aborted, \
+                f"abort accounting mismatch: {m.aborted} != {n_aborted}"
+        print(f"online smoke OK: {m.total_tokens} tokens, "
+              f"{len(m.request_stats)} turns, {m.aborted} aborted")
+    return result
+
+
+def run_replay(args) -> dict:
+    """Closed-world trace replay (FastSwitchEngine driving the serving
+    core) — the benchmark path."""
     from repro.core import EngineConfig, FastSwitchEngine
     from repro.data.priority import PriorityTrace
     from repro.data.sharegpt import sample_conversations, trace_stats
 
     policies = args.policy or ["fastswitch"]
     results = {}
-
     if args.real:
-        import jax
-
-        from repro.configs import get_smoke_config
-        from repro.models import transformer as T
-        cfg = get_smoke_config(args.arch)
-        from repro.models.paged import supports_paged
-        if not supports_paged(cfg):
-            raise SystemExit(
-                f"{args.arch}: real-mode serving needs a uniform GQA arch "
-                "(paged pool path); use sim mode for this family")
-        params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+        model = _build_real_bundle(args.arch, args.seed)
         convs = sample_conversations(args.conversations, rate_req_s=args.rate,
                                      seed=args.seed, prompt_mu=3.0,
                                      resp_mu=3.0, max_tokens=96)
@@ -67,7 +241,7 @@ def main() -> None:
                 ec, [c for c in convs],
                 trace=PriorityTrace(args.pattern, args.update_freq,
                                     seed=args.seed),
-                model_bundle={"cfg": cfg, "params": params})
+                model_bundle=model)
             m = eng.run()
             results[pol] = {**m.summary(), **eng.swap.stats()}
             print(pol, json.dumps(m.summary(), indent=None))
@@ -92,6 +266,53 @@ def main() -> None:
             print(f"{pol:12s} p99_ttft={s['p99_ttft_ms']:.1f}ms "
                   f"p999_tbt={s['p999_tbt_ms']:.1f}ms "
                   f"throughput={s['throughput_tok_s']:.1f} tok/s")
+    return results
+
+
+def main() -> None:
+    from repro.core.policies import POLICIES
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--real", action="store_true",
+                    help="reduced real model + paged pool (CPU)")
+    ap.add_argument("--policy", action="append", default=None,
+                    choices=sorted(POLICIES))
+    ap.add_argument("--conversations", type=int, default=100)
+    ap.add_argument("--rate", type=float, default=1.0)
+    ap.add_argument("--pattern", default="markov",
+                    choices=["markov", "random"])
+    ap.add_argument("--update-freq", type=float, default=0.02)
+    ap.add_argument("--gpu-blocks", type=int, default=None)
+    ap.add_argument("--cpu-blocks", type=int, default=None)
+    ap.add_argument("--max-running", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    # online serving API (DESIGN.md §6)
+    ap.add_argument("--online", action="store_true",
+                    help="drive the open-world add_request/step API")
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-request token deltas (real mode)")
+    ap.add_argument("--events", default=None,
+                    help="write the per-request JSONL event log here")
+    ap.add_argument("--cancel-frac", type=float, default=0.0,
+                    help="probability per step of aborting a live request")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0)
+    ap.add_argument("--slo-tbt-ms", type=float, default=0.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny online run + event-log assertions (tier-1)")
+    args = ap.parse_args()
+
+    if args.smoke and not args.online:
+        args.online = True
+    if args.smoke:
+        args.cancel_frac = args.cancel_frac or 0.05
+        if not (args.slo_ttft_ms or args.slo_tbt_ms):
+            args.slo_ttft_ms, args.slo_tbt_ms = 2000.0, 200.0
+
+    if args.online:
+        results = run_online(args)
+    else:
+        results = run_replay(args)
 
     if args.out:
         with open(args.out, "w") as f:

@@ -172,7 +172,7 @@ def test_alloc_failure_without_victim_skips_decode():
     trace = PriorityTrace("random", update_freq=1e-9, seed=0)
     trace._prio = {0: 0.9, 1: 0.5}
     eng = FastSwitchEngine(cfg, convs, trace=trace)
-    eng._find_victim = lambda exclude: None      # nobody to preempt
+    eng.core._find_victim = lambda exclude: None   # nobody to preempt
     for _ in range(3000):
         if eng.done():
             break
