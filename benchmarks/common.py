@@ -59,3 +59,44 @@ def run_policy(scenario: str, policy: str, pattern: str = "markov",
 
 def csv_line(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# machine-readable benchmark artifacts (BENCH_<name>.json)
+# ---------------------------------------------------------------------------
+
+# module-level row collector: benchmark scripts print one CSV row per
+# result through ``emit`` from anywhere (including helper functions),
+# and ``write_bench_json`` dumps everything collected since process
+# start — the CI artifact a perf dashboard can diff across commits.
+_BENCH_ROWS: list = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Print one ``name,us_per_call,derived`` CSV row AND record it for
+    ``write_bench_json``.  ``derived`` stays the semi-structured
+    ``k=v;k=v`` string the CSV format uses; the JSON row also carries it
+    parsed where the values are numeric."""
+    print(csv_line(name, us_per_call, derived))
+    parsed = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, _, val = part.partition("=")
+            try:
+                parsed[k] = float(val.rstrip("x"))
+            except ValueError:
+                parsed[k] = val
+    _BENCH_ROWS.append({"name": name,
+                        "us_per_call": round(us_per_call, 3),
+                        "derived": derived, **parsed})
+
+
+def write_bench_json(path: str, bench: str, smoke: bool) -> None:
+    import json
+    import platform
+    with open(path, "w") as f:
+        json.dump({"bench": bench, "smoke": smoke,
+                   "machine": platform.machine(),
+                   "rows": _BENCH_ROWS}, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path} ({len(_BENCH_ROWS)} rows)")

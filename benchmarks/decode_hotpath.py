@@ -31,6 +31,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:                                    # package run (benchmarks/run.py)
+    from benchmarks.common import emit, write_bench_json
+except ImportError:                     # direct run (tier1.sh)
+    from common import emit, write_bench_json
+
 from repro.configs import get_smoke_config
 from repro.core.decode_runner import DecodeRequestView, DecodeRunner
 from repro.kernels.ops import insert_prefill_cache_size
@@ -175,9 +180,9 @@ def run_prefill_interleave(smoke: bool):
 
     for name, chunked in (("monolithic", False), ("chunked", True)):
         dt, iters, toks, citers = run(chunked)
-        print(f"prefill_{name},{dt / max(iters, 1) * 1e6:.1f},"
-              f"decode_tokens_during_prefill={toks}"
-              f";prefill_window_iters={citers};prompt={prompt}")
+        emit(f"prefill_{name}", dt / max(iters, 1) * 1e6,
+             f"decode_tokens_during_prefill={toks}"
+             f";prefill_window_iters={citers};prompt={prompt}")
 
 
 def run_online_overhead(smoke: bool):
@@ -242,17 +247,20 @@ def run_online_overhead(smoke: bool):
     assert core.metrics.total_tokens == tok, \
         "direct step() loop served a different token count"
 
-    print(f"online_api_replay,{dt_replay / max(it_replay, 1) * 1e6:.1f},"
-          f"steps_s={it_replay / dt_replay:.0f};tokens={tok}")
-    print(f"online_api_direct,{dt_direct / max(it, 1) * 1e6:.1f},"
-          f"steps_s={it / dt_direct:.0f};"
-          f"overhead_pct={(dt_replay / max(it_replay, 1) / (dt_direct / max(it, 1)) - 1) * 100:.1f}")
+    emit("online_api_replay", dt_replay / max(it_replay, 1) * 1e6,
+         f"steps_s={it_replay / dt_replay:.0f};tokens={tok}")
+    emit("online_api_direct", dt_direct / max(it, 1) * 1e6,
+         f"steps_s={it / dt_direct:.0f};"
+         f"overhead_pct={(dt_replay / max(it_replay, 1) / (dt_direct / max(it, 1)) - 1) * 100:.1f}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced run for the tier-1 verify wrapper")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the rows as a JSON artifact "
+                         "(BENCH_decode_hotpath.json in CI)")
     # parse_known_args: benchmarks/run.py invokes main() with its own
     # positional selectors still in sys.argv
     args, _ = ap.parse_known_args()
@@ -270,12 +278,12 @@ def main() -> None:
     assert compiles_b <= bound, \
         f"bucketed path compiled {compiles_b} > bound {bound}"
 
-    print(f"decode_hotpath_legacy,{dt_l / n_steps * 1e6:.1f},"
-          f"steps_s={n_steps / dt_l:.2f};compiles={compiles_l}")
-    print(f"decode_hotpath_bucketed,{dt_b / n_steps * 1e6:.1f},"
-          f"steps_s={n_steps / dt_b:.2f};compiles={compiles_b}"
-          f";bound={bound};rows_updated={stats.rows_updated}"
-          f";host_syncs={stats.host_syncs}")
+    emit("decode_hotpath_legacy", dt_l / n_steps * 1e6,
+         f"steps_s={n_steps / dt_l:.2f};compiles={compiles_l}")
+    emit("decode_hotpath_bucketed", dt_b / n_steps * 1e6,
+         f"steps_s={n_steps / dt_b:.2f};compiles={compiles_b}"
+         f";bound={bound};rows_updated={stats.rows_updated}"
+         f";host_syncs={stats.host_syncs}")
 
     # prefill insertion: same prompt lengths through both paths
     rng = np.random.RandomState(0)
@@ -287,10 +295,9 @@ def main() -> None:
     dt_r, icompiles, _ = run_prefill_runner(cfg, params, pool0, trash,
                                             prompts)
     n = len(prompts)
-    print(f"prefill_insert_host,{dt_h / n * 1e6:.1f},"
-          f"prefills_s={n / dt_h:.2f}")
-    print(f"prefill_insert_runner,{dt_r / n * 1e6:.1f},"
-          f"prefills_s={n / dt_r:.2f};insert_compiles={icompiles}")
+    emit("prefill_insert_host", dt_h / n * 1e6, f"prefills_s={n / dt_h:.2f}")
+    emit("prefill_insert_runner", dt_r / n * 1e6,
+         f"prefills_s={n / dt_r:.2f};insert_compiles={icompiles}")
 
     # chunked-vs-monolithic prefill: decode tokens during the prefill
     # window (ISSUE 4 — the tail-TBT lever)
@@ -298,6 +305,9 @@ def main() -> None:
 
     # serving-API overhead: run() replay vs direct step() loop (ISSUE 5)
     run_online_overhead(args.smoke)
+
+    if args.json_out:
+        write_bench_json(args.json_out, "decode_hotpath", args.smoke)
 
 
 if __name__ == "__main__":

@@ -29,6 +29,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:                                    # package run (benchmarks/run.py)
+    from benchmarks.common import emit, write_bench_json
+except ImportError:                     # direct run (tier1.sh)
+    from common import emit, write_bench_json
+
 from repro.cache.paged import PagedPools, PoolSpec
 from repro.kernels import ops
 from repro.kernels.block_copy import runs_to_indices
@@ -76,6 +81,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced run for the tier-1 verify wrapper")
+    ap.add_argument("--json-out", default=None,
+                    help="also write the rows as a JSON artifact "
+                         "(BENCH_swap_path.json in CI)")
     args, _ = ap.parse_known_args()
     n_runs, run_len = (2, 4) if args.smoke else (4, 16)
     iters = 2 if args.smoke else 3
@@ -104,12 +112,15 @@ def main() -> None:
     compiles = ops.swap_gather_cache_size() + ops.swap_scatter_cache_size()
 
     assert ops_pb >= 2 * ops_st, "staged path must halve copy ops"
-    print(f"swap_per_block,{t_pb * 1e6:.1f},"
-          f"ops={ops_pb};blocks={n_blocks};bytes={swap_bytes}")
-    print(f"swap_host_vec,{t_hv * 1e6:.1f},ops={ops_hv};blocks={n_blocks}")
-    print(f"swap_staged,{t_st * 1e6:.1f},"
-          f"ops={ops_st};runs={n_runs};blocks={n_blocks}"
-          f";jit_variants={compiles};speedup_vs_per_block={t_pb / t_st:.2f}x")
+    emit("swap_per_block", t_pb * 1e6,
+         f"ops={ops_pb};blocks={n_blocks};bytes={swap_bytes}")
+    emit("swap_host_vec", t_hv * 1e6, f"ops={ops_hv};blocks={n_blocks}")
+    emit("swap_staged", t_st * 1e6,
+         f"ops={ops_st};runs={n_runs};blocks={n_blocks}"
+         f";jit_variants={compiles};speedup_vs_per_block={t_pb / t_st:.2f}x")
+
+    if args.json_out:
+        write_bench_json(args.json_out, "swap_path", args.smoke)
 
 
 if __name__ == "__main__":

@@ -9,8 +9,12 @@ set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
-python benchmarks/decode_hotpath.py --smoke
-python benchmarks/swap_path.py --smoke
+# hot-path smoke benches emit BENCH_*.json artifacts (uploaded by CI so
+# perf rows can be diffed across commits)
+python benchmarks/decode_hotpath.py --smoke \
+    --json-out /tmp/BENCH_decode_hotpath.json
+python benchmarks/swap_path.py --smoke \
+    --json-out /tmp/BENCH_swap_path.json
 # online serving-API smoke (ISSUE 5): open-world add_request/step replay
 # with cancellations, sim + real, asserting the JSONL event log is
 # well-formed and the SLO attainment records populate
@@ -18,3 +22,8 @@ python -m repro.launch.serve --online --smoke \
     --events /tmp/fastswitch_online_sim.jsonl
 python -m repro.launch.serve --online --smoke --real \
     --events /tmp/fastswitch_online_real.jsonl
+# chaos smoke (DESIGN.md §7): seeded fault schedule under the invariant
+# sanitizer on EVERY step — faults must fire, step() must never crash,
+# and the event log (error/shed/retry kinds included) stays well-formed
+python -m repro.launch.serve --online --smoke --chaos \
+    --events /tmp/fastswitch_online_chaos.jsonl

@@ -16,6 +16,21 @@ from repro.core.decode_runner import (  # noqa: F401
     DecodeRunner,
 )
 from repro.core.engine import FastSwitchEngine  # noqa: F401
+from repro.core.faults import (  # noqa: F401
+    EngineDrainingError,
+    EngineOverloadError,
+    FaultInjector,
+    FaultPlan,
+    FatalSwapFault,
+    InjectedFault,
+    PermanentSwapFault,
+    PoisonError,
+    TransientSwapFault,
+)
+from repro.core.invariants import (  # noqa: F401
+    InvariantViolation,
+    check_engine_invariants,
+)
 from repro.core.request_api import (  # noqa: F401
     RequestEvent,
     RequestOutput,

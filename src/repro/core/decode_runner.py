@@ -384,6 +384,42 @@ class DecodeRunner:
             act[list(self._active_rows)] = True
             self._active = jnp.asarray(act)
 
+    def invariant_report(self, live_rids) -> List[str]:
+        """Row-map validation for the engine sanitizer (DESIGN.md §7).
+        Returns violation strings (empty = clean): registered rows and
+        free rows must partition the batch bucket exactly; registered
+        rows belong to live rids; freed rows carry the trash sentinel's
+        empty host mirror; active rows are registered."""
+        v: List[str] = []
+        if self._batch_bucket == 0:
+            if self._rows or self._free:
+                v.append("D1: runner rows exist before first bucket build")
+            return v
+        reg = set(self._rows.values())
+        free = set(self._free)
+        if len(self._free) != len(free):
+            v.append(f"D1: duplicate rows in free list {self._free}")
+        if len(reg) != len(self._rows):
+            v.append(f"D1: two rids share a runner row {self._rows}")
+        if reg & free:
+            v.append(f"D1: rows both registered and free: {reg & free}")
+        if reg | free != set(range(self._batch_bucket)):
+            v.append(f"D1: rows {reg | free} do not partition bucket "
+                     f"{self._batch_bucket}")
+        live = set(live_rids)
+        for rid, row in self._rows.items():
+            if rid not in live:
+                v.append(f"D2: runner row {row} registered to dead rid "
+                         f"{rid}")
+        for row in free:
+            if self._row_blocks[row] != () or self._row_ctx[row] != 0:
+                v.append(f"D2: freed row {row} still carries blocks="
+                         f"{self._row_blocks[row]} ctx={self._row_ctx[row]}")
+        for row in self._active_rows:
+            if row not in reg:
+                v.append(f"D2: active row {row} not registered")
+        return v
+
     # -- chunked prefill state machine (DESIGN.md §5) -------------------
 
     def prefill_begin(self, view: DecodeRequestView, *,

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from typing import List, Optional
 
+from repro.core.faults import EngineDrainingError, EngineOverloadError
 from repro.core.request_api import RequestOutput, SamplingParams, SLOSpec
 from repro.core.serving import EngineMetrics, ServingEngine  # noqa: F401
 from repro.data.priority import PriorityTrace
@@ -63,6 +64,7 @@ class FastSwitchEngine:
         self.sleeping: List[_Wake] = []
         self.default_slo = slo
         self._convs = {c.conv_id: c for c in conversations}
+        self.dropped_submits = 0
 
     # attribute fall-through: the core owns all engine state (sched,
     # gpu_mgr, swap, reuse, clock, metrics, pools, runner, config, ...)
@@ -83,15 +85,22 @@ class FastSwitchEngine:
         turn = conv.turns[turn_idx]
         sp = SamplingParams(max_tokens=turn.response_tokens)
         retain = turn_idx + 1 < len(conv.turns)
-        if turn_idx == 0:
-            self.core.add_request(self._prompt_for(conv, turn_idx), sp,
-                                  slo=self.default_slo,
-                                  handle=conv.conv_id, retain_kv=retain)
-        else:
-            self.core.continue_session(conv.conv_id,
-                                       self._prompt_for(conv, turn_idx), sp,
-                                       slo=self.default_slo,
-                                       retain_kv=retain)
+        try:
+            if turn_idx == 0:
+                self.core.add_request(self._prompt_for(conv, turn_idx), sp,
+                                      slo=self.default_slo,
+                                      handle=conv.conv_id, retain_kv=retain)
+            else:
+                self.core.continue_session(conv.conv_id,
+                                           self._prompt_for(conv, turn_idx),
+                                           sp, slo=self.default_slo,
+                                           retain_kv=retain)
+        except (EngineOverloadError, EngineDrainingError):
+            # closed-world replay with admission control on: the trace
+            # has no retry loop, so a refused submit is simply dropped
+            # (counted by the core's ``rejected`` metric).  The default
+            # config has no waiting bound, so replays are unaffected.
+            self.dropped_submits += 1
 
     def _next_event_us(self) -> Optional[float]:
         events = [w.wake_s * 1e6 for w in self.sleeping]

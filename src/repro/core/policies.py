@@ -107,6 +107,27 @@ class EngineConfig:
     # Adaptive swap profiler window: recent-swap records AND recent
     # decode-iteration durations kept for decide_async's cost model.
     r_info_window: int = 64
+    # --- robustness / graceful degradation (DESIGN.md §7) -------------
+    # Bounded waiting queue: add_request refuses (or sheds) when the
+    # waiting queue holds this many requests.  0 = unbounded (legacy).
+    max_waiting: int = 0
+    # What a full waiting queue does: "reject" raises EngineOverloadError
+    # at add_request; "shed" aborts the lowest-value waiting request
+    # (SLO-doomed first, then lowest priority, newest first) to make room.
+    overload_policy: str = "reject"
+    # Run check_engine_invariants every N steps (0 = never).  Cheap
+    # enough for CI chaos smokes at N=1; production would sample.
+    check_invariants_every: int = 0
+    # Swap copy failure handling: bounded retries with linear backoff
+    # charged to the task's simulated completion time.
+    swap_max_retries: int = 2
+    swap_retry_backoff_us: float = 200.0
+    # Watchdog: an in-flight swap task still incomplete this long after
+    # issue is escalated to a synchronous retried copy.  0 = disabled.
+    swap_watchdog_us: float = 0.0
+    # Deterministic chaos schedule (core/faults.FaultPlan); None = no
+    # injection (all fault hooks are inert no-ops).
+    fault_plan: Optional[object] = None
 
     def with_policy(self, name: str) -> "EngineConfig":
         return replace(self, policy=POLICIES[name])

@@ -65,7 +65,10 @@ class RequestOutput:
     first_token: bool = False           # this step emitted the first token
     ttft_us: Optional[float] = None     # set when first_token
     finished: bool = False
-    finish_reason: Optional[str] = None  # "length" | "abort" | "dropped"
+    finish_reason: Optional[str] = None  # "length" | "abort" | "dropped" |
+    #                                      "error" | "shed"
+    error: Optional[str] = None         # human-readable fault cause when
+    #                                     finish_reason == "error"
     t_us: float = 0.0                   # engine clock at emission
 
 
@@ -76,7 +79,8 @@ class RequestEvent:
     t_us: float
     handle: int
     kind: str        # arrive|continue|admit|resume|first_token|preempt|
-    #                  swap_in|promote|finish|release|abort|drop
+    #                  swap_in|promote|finish|release|abort|drop|
+    #                  error|shed|retry|drain
     data: Dict[str, object] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, object]:
@@ -86,7 +90,11 @@ class RequestEvent:
 
 EVENT_KINDS = frozenset({
     "arrive", "continue", "admit", "resume", "first_token", "preempt",
-    "swap_in", "promote", "finish", "release", "abort", "drop"})
+    "swap_in", "promote", "finish", "release", "abort", "drop",
+    # robustness layer (DESIGN.md §7): request fault, overload shed,
+    # swap-copy retry, engine drain toggle (drain uses handle -1 — it is
+    # an engine-level event, not a request transition)
+    "error", "shed", "retry", "drain"})
 
 
 @dataclass

@@ -98,6 +98,20 @@ class KVCacheReuseManager:
         Returns tokens transferred h2d."""
         return self.valid_tokens(req_id)
 
+    def invalidate(self, req_id: int) -> None:
+        """Failure containment (DESIGN.md §7): a failed d2h increment
+        left the CPU copy's tail unwritten — nothing beyond what was
+        previously valid can be trusted, and since the failed increment's
+        extent within the allocation is unknown the whole copy is
+        conservatively voided.  The ALLOCATION is kept (the request may
+        still be live and swap out again later); only the trusted extent
+        drops to zero, so ``valid_tokens`` never advertises bytes that
+        never arrived."""
+        c = self.copies.get(req_id)
+        if c is not None:
+            c.valid_tokens = 0
+            c.stored_tokens = 0
+
     def release(self, req_id: int) -> None:
         """Conversation finished: drop the copy."""
         self.mgr.release_request(req_id)

@@ -179,6 +179,17 @@ class PriorityScheduler:
             self.swapping_in.append(rid)
         # FINISHED / DONE live outside the queues
 
+    def shed_order(self, doomed: Set[int]) -> List[int]:
+        """Overload shedding order over the WAITING queue (DESIGN.md §7):
+        least valuable first — requests already doomed to miss their TTFT
+        SLO (``doomed``, computed by the engine's queue model) before
+        viable ones, then lowest priority, then newest arrival (oldest
+        waiters have accumulated the most queueing investment; shedding
+        them wastes it and is the classic late-drop pathology)."""
+        return sorted(self.waiting,
+                      key=lambda r: (r not in doomed, self.priority(r),
+                                     -self.requests[r].turn_arrival_us))
+
     def victims_for_space(self, exclude: Set[int]) -> List[int]:
         """Lowest-priority running requests first (preemption order).
         At equal priority a request still mid chunked prefill

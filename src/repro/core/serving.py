@@ -48,6 +48,9 @@ from repro.cache.paged import PagedPools, PoolSpec
 from repro.core.block_group import (DynamicBlockGroupManager,
                                     OutOfBlocksError)
 from repro.core.decode_runner import DecodeRequestView, DecodeRunner
+from repro.core.faults import (EngineDrainingError, EngineOverloadError,
+                               FatalSwapFault, FaultInjector, PoisonError)
+from repro.core.invariants import check_engine_invariants
 from repro.core.policies import EngineConfig
 from repro.core.request_api import (RequestEvent, RequestOutput,
                                     RequestSLOStats, SamplingParams,
@@ -76,6 +79,12 @@ class EngineMetrics:
     callstack_wall_s: float = 0.0      # REAL wall time of the control plane
     aborted: int = 0                   # client cancellations
     dropped: int = 0                   # budget-safeguard drops
+    # robustness layer (DESIGN.md §7)
+    faulted: int = 0                   # request faults (finish_reason=error)
+    shed: int = 0                      # overload-shed waiting requests
+    rejected: int = 0                  # add_request refusals (overload/drain)
+    swap_failure_resumes: int = 0      # permanent swap failure -> recompute
+    invariant_checks: int = 0          # sanitizer passes that ran clean
     # per-turn SLO attainment records (request_api.RequestSLOStats)
     request_stats: List[RequestSLOStats] = field(default_factory=list)
     # (t_end_us, batch, t_iter_us, prefills_in_iter, stall_so_far_us)
@@ -104,6 +113,11 @@ class EngineMetrics:
             "callstack_wall_s": self.callstack_wall_s,
             "aborted": self.aborted,
             "dropped": self.dropped,
+            "faulted": self.faulted,
+            "shed": self.shed,
+            "rejected": self.rejected,
+            "swap_failure_resumes": self.swap_failure_resumes,
+            "invariant_checks": self.invariant_checks,
         }
 
     def slo_summary(self) -> Dict[str, Optional[float]]:
@@ -180,7 +194,9 @@ class ServingEngine:
             config.hardware, self.pools,
             async_enabled=pol.use_async_swap,
             adaptive=pol.adaptive_async,
-            r_info_window=config.r_info_window)
+            r_info_window=config.r_info_window,
+            max_copy_retries=config.swap_max_retries,
+            retry_backoff_us=config.swap_retry_backoff_us)
         self.iter_cost = IterationCostModel(
             config.hardware, model_params=model_params,
             kv_bytes_per_token=kv_tok)
@@ -212,6 +228,14 @@ class ServingEngine:
         self.events: Optional[List[RequestEvent]] = [] if keep_events else None
         self._event_sink = event_sink
         self.stream_tokens = stream_tokens
+        # robustness layer (DESIGN.md §7): deterministic fault injection,
+        # drain mode, per-(rid, direction) swap dispatch counters (the
+        # injector's stable site keys) and the allocation-pressure
+        # phantom's current holding
+        self.faults = FaultInjector(config.fault_plan)
+        self._draining = False
+        self._swap_seq: Dict[Tuple[int, str], int] = {}
+        self._pressure_blocks = 0
 
     # ------------------------------------------------------------------
     # public API: request lifecycle
@@ -231,6 +255,12 @@ class ServingEngine:
         so a follow-up ``continue_session`` pays only the prefix swap-in
         instead of a full re-prefill; the caller owns the copy's
         lifetime (``release_session``/``abort`` frees it)."""
+        if self._draining:
+            self.metrics.rejected += 1
+            raise EngineDrainingError(
+                "engine is draining: running requests finish, no new "
+                "work is admitted")
+        self._check_overload(slo)
         sampling = sampling or SamplingParams()
         self._check_sampling(sampling)
         if handle is None:
@@ -267,6 +297,11 @@ class ServingEngine:
         prompt extends the conversation and admission reuses the CPU KV
         copy of the previous turns (prefix swap-in instead of full
         prefill — the paper's §3.3 mechanism, now exercised open-world)."""
+        if self._draining:
+            self.metrics.rejected += 1
+            raise EngineDrainingError(
+                "engine is draining: running requests finish, no new "
+                "work is admitted")
         if handle in self.sched.requests:
             raise ValueError(f"handle {handle} still live; a follow-up "
                              "needs the previous turn finished")
@@ -317,6 +352,32 @@ class ServingEngine:
                 self._event(handle, "abort", state="finished")
                 return True
             return False
+        state = self._teardown_request(req, reason)
+        if reason == "dropped":
+            self.metrics.dropped += 1
+            self._event(handle, "drop", state=state)
+        elif reason == "shed":
+            self.metrics.shed += 1
+            self._event(handle, "shed", state=state)
+        else:
+            self.metrics.aborted += 1
+            self._event(handle, "abort", state=state)
+        return True
+
+    def _teardown_request(self, req, reason: str,
+                          error: Optional[str] = None) -> str:
+        """The ONE full-resource teardown for a live request — shared by
+        client ``abort``, budget drops, overload shedding and the
+        request-fault path, so fault cleanup can never drift from abort
+        cleanup (every leak class is released in one place): runner row
+        + open prefill carry (trash-sentinel rebind), in-flight swap-in
+        chunk tasks and queued copy failures, GPU blocks, the CPU reuse
+        copy, queue membership, and the terminal output/SLO record.
+        In-flight swap-OUT d2h gathers are left on the ongoing list so
+        later copies reusing their CPU blocks still order behind them
+        (``data_deps``); they retire on completion.  Returns the
+        pre-teardown state name (for the caller's event)."""
+        handle = req.rid
         state = req.state.value
         if self.runner is not None:
             self.runner.prefill_abort(handle)   # no-op if none open
@@ -325,6 +386,7 @@ class ServingEngine:
         req.prefill_is_resume = False
         req.resume_tokens = 0
         self.swap.retire_request(handle)
+        self.swap.take_failed_for(handle)   # drop stale copy failures
         self.gpu_mgr.release_request(handle)
         self.reuse.release(handle)
         for q in (self.sched.waiting, self.sched.running,
@@ -334,21 +396,115 @@ class ServingEngine:
         self._record_slo(req, reason)
         out = self._out(handle)
         out.finished, out.finish_reason = True, reason
+        if error is not None:
+            out.error = error
         out.generated, out.context_tokens = req.generated, req.context_tokens
         req.state = ReqState.DONE
         del self.sched.requests[handle]
-        if reason == "dropped":
-            self.metrics.dropped += 1
-            self._event(handle, "drop", state=state)
-        else:
-            self.metrics.aborted += 1
-            self._event(handle, "abort", state=state)
-        return True
+        return state
+
+    def _fault_request(self, rid: int, exc: BaseException) -> None:
+        """Containment endpoint: an exception escaping a per-request
+        operation faults THAT request — terminal ``finish_reason="error"``
+        output, an ``error`` event, full resource teardown — instead of
+        crashing ``step()`` and every other live request with it."""
+        req = self.sched.requests.get(rid)
+        if req is None:
+            return
+        msg = str(exc)
+        if type(exc).__name__ not in msg:
+            msg = f"{type(exc).__name__}: {msg}"
+        state = self._teardown_request(req, "error", error=msg)
+        self.metrics.faulted += 1
+        self._event(rid, "error", state=state, error=msg)
+
+    def _contained(self, rid: int, fn, *args, **kwargs):
+        """Run one per-request operation with fault isolation: an
+        escaping exception faults ``rid`` (terminal error output + full
+        teardown) and returns None.  Applied at every step() site whose
+        failure is attributable to a single request — batched decode
+        stays engine-fatal (its failure has no single owner)."""
+        try:
+            return fn(*args, **kwargs)
+        except Exception as e:
+            self._fault_request(rid, e)
+            return None
 
     def has_work(self) -> bool:
         """True while any request is live (retained sessions idle in
         ``parked`` don't count — they cost CPU blocks, not steps)."""
         return bool(self.sched.requests)
+
+    # ------------------------------------------------------------------
+    # overload protection / drain (DESIGN.md §7)
+    # ------------------------------------------------------------------
+
+    def drain(self) -> None:
+        """Enter drain mode: running/queued requests finish normally but
+        ``add_request``/``continue_session`` refuse new work — the
+        front-end's graceful-shutdown primitive.  Irreversible for the
+        engine's lifetime (restart to serve again)."""
+        if not self._draining:
+            self._draining = True
+            self._event(-1, "drain", enabled=True)
+
+    @property
+    def draining(self) -> bool:
+        return self._draining
+
+    def predicted_ttft_us(self, queue_pos: int) -> float:
+        """Coarse admission-queue model: a request entering at waiting
+        position ``queue_pos`` waits roughly one mean turn duration per
+        ``max_running`` requests ahead of it (turns drain in running-slot
+        waves).  Mean turn duration comes from the recent SLO records;
+        before any history a prefill-cost floor stands in.  Deliberately
+        cheap and pessimism-biased — it gates shedding decisions, not
+        billing."""
+        stats = self.metrics.request_stats[-32:]
+        durs = [s.ttft_us + s.generated * s.mean_tbt_us for s in stats
+                if s.ttft_us is not None]
+        mean_turn = (sum(durs) / len(durs)) if durs \
+            else self.iter_cost.prefill_us(512)
+        lanes = max(1, self.config.max_running)
+        return (queue_pos // lanes + 1) * mean_turn
+
+    def _doomed_waiting(self) -> set:
+        """Waiting requests already predicted to miss their TTFT SLO
+        (elapsed wait + predicted remaining queue delay > deadline):
+        the shed policy's first victims — serving them spends GPU time
+        on responses the client has already timed out on."""
+        doomed = set()
+        now = self.clock.now_us
+        for pos, rid in enumerate(self.sched.waiting):
+            req = self.sched.requests[rid]
+            slo = req.slo
+            if slo is None or slo.ttft_us is None:
+                continue
+            waited = now - req.turn_arrival_us
+            if waited + self.predicted_ttft_us(pos) > slo.ttft_us:
+                doomed.add(rid)
+        return doomed
+
+    def _check_overload(self, slo: Optional[SLOSpec]) -> None:
+        """Bounded waiting queue (``EngineConfig.max_waiting``): policy
+        "reject" raises a structured ``EngineOverloadError`` (front-ends
+        map it to 429 + retry hint); policy "shed" aborts the least
+        valuable waiting request — SLO-doomed first, then lowest
+        priority, then newest — to make room for the arrival."""
+        mw = self.config.max_waiting
+        if mw <= 0 or len(self.sched.waiting) < mw:
+            return
+        depth = len(self.sched.waiting)
+        if self.config.overload_policy == "shed":
+            order = self.sched.shed_order(self._doomed_waiting())
+            if order:
+                self.abort(order[0], reason="shed")
+                return
+        self.metrics.rejected += 1
+        raise EngineOverloadError(
+            f"waiting queue full ({depth} >= max_waiting={mw})",
+            queue_depth=depth, max_waiting=mw,
+            predicted_ttft_us=self.predicted_ttft_us(depth))
 
     # ------------------------------------------------------------------
     # helpers
@@ -572,11 +728,46 @@ class ServingEngine:
         self.metrics.swap_in_count += 1
         self._event(rid, "swap_in", asynchronous=asynchronous,
                     tokens=tokens)
+        # Swap-in copies always run INLINE on the dispatching thread
+        # (pool-mutating h2d never goes to workers — DESIGN.md §4.3), so
+        # a terminal copy failure is known right here, before the request
+        # is promoted onto KV that never arrived.
+        if self.swap.has_failed(rid, "in"):
+            self._recover_swap_in_failure(rid)
+            return False
         if asynchronous:
             self.sched.move(rid, ReqState.SWAPPING_IN)
             return False
         self.sched.move(rid, ReqState.RUNNING)
         return True
+
+    def _recover_swap_in_failure(self, rid: int) -> None:
+        """Escalation ladder for a swap-in whose copy retries are spent
+        (DESIGN.md §7): the GPU-side KV is incomplete and must not be
+        decoded against.  Recoverable failures degrade to a
+        RECOMPUTE-mode resume — GPU blocks dropped, the request re-enters
+        WAITING with ``resume_tokens`` covering its full context, and
+        ``_admit_resume`` regenerates the KV from the token history (the
+        CPU copy stays valid; nothing corrupted it).  A fatal failure
+        ends in a request fault."""
+        tasks = self.swap.take_failed_for(rid)
+        self.swap.retire_request(rid)    # drop remaining in-flight chunks
+        req = self.sched.requests.get(rid)
+        if req is None:
+            return
+        fatal = any(t.failed is not None and "Fatal" in t.failed
+                    for t in tasks)
+        if fatal:
+            err = next(t.failed for t in tasks if t.failed is not None)
+            self._fault_request(rid, FatalSwapFault(err))
+            return
+        self.gpu_mgr.release_request(rid)
+        req.resume_tokens = req.context_tokens
+        req.prefill_remaining = 0
+        req.prefill_is_resume = False
+        self.metrics.swap_failure_resumes += 1
+        self.sched.move(rid, ReqState.WAITING)
+        self._event(rid, "preempt", to="waiting", swap_failure="in")
 
     def _dispatch_swap(self, rid: int, direction: str,
                        gpu_runs: List[Tuple[int, int]], cpu_ids: List[int],
@@ -618,11 +809,26 @@ class ServingEngine:
                         copy_fn = (lambda r=data_runs, c=cpu_c:
                                    pools.copy_in_staged(c, r))
             pos += cnt
+            # deterministic fault injection (DESIGN.md §7): one draw per
+            # chunk task, keyed by the per-(rid, direction) dispatch
+            # sequence number — stable across runs and thread timing.
+            # Wrapping also when copy_fn is None gives sim mode the same
+            # failure surface as the real data plane.
+            stall_us = 0.0
+            if self.faults.enabled:
+                seq = self._swap_seq.get((rid, direction), 0)
+                self._swap_seq[(rid, direction)] = seq + 1
+                spec = self.faults.swap_fault(rid, direction, seq)
+                if spec is not None:
+                    if spec.kind is not None:
+                        copy_fn = FaultInjector.wrap_copy(spec, copy_fn)
+                    stall_us = spec.stall_us
             self.swap.dispatch(self.clock, rid, direction,
                                self._transfer_runs(runs_c), self.block_bytes,
                                runs_to_indices(runs_c),
                                asynchronous=asynchronous, copy_fn=copy_fn,
-                               copy_deps=deps, cpu_blocks=cpu_c)
+                               copy_deps=deps, cpu_blocks=cpu_c,
+                               extra_latency_us=stall_us)
 
     # ------------------------------------------------------------------
     # admission / prefill
@@ -703,6 +909,22 @@ class ServingEngine:
                 if self.pools is not None else []
             self._dispatch_swap(rid, "in", runs_in, cpu_ids,
                                 asynchronous=False)  # prefill needs it NOW
+            if self.swap.has_failed(rid, "in"):
+                # prefix restore failed terminally: degrade to a
+                # reused=0 full prefill (DESIGN.md §7).  Void the copy —
+                # this admission must not advertise a prefix it could
+                # not restore — roll back the allocation and stay
+                # WAITING; the next admission recomputes everything.
+                # A FATAL failure propagates to the containment wrapper
+                # and faults the request.
+                tasks = self.swap.take_failed_for(rid)
+                self.gpu_mgr.release_request(rid)
+                self.reuse.invalidate(rid)
+                fatal = [t.failed for t in tasks
+                         if t.failed is not None and "Fatal" in t.failed]
+                if fatal:
+                    raise FatalSwapFault(fatal[0])
+                return False
         # prefill compute for the non-reused tokens
         new_tokens = new_ctx - reused
         chunk = self.config.policy.chunked_prefill_tokens
@@ -775,6 +997,12 @@ class ServingEngine:
 
     def _emit_first_token(self, rid: int) -> None:
         """The prompt's last position produced the response's first token."""
+        if self.faults.enabled and self.faults.poisoned(rid):
+            # poison hook: this request's compute path blows up (stands
+            # in for a NaN logit / tokenizer crash); the containment
+            # wrapper faults exactly this request
+            self.faults.note_poison_fired()
+            raise PoisonError(f"injected poison request (handle {rid})")
         req = self._req(rid)
         req.context_tokens += 1
         if req.turn_done():
@@ -952,6 +1180,9 @@ class ServingEngine:
         full context was re-allocated up front) nor emits a first token.
         Returns the chunk token count (charged to the sim clock by the
         caller)."""
+        if self.faults.enabled and self.faults.poisoned(rid):
+            self.faults.note_poison_fired()
+            raise PoisonError(f"injected poison request (handle {rid})")
         req = self._req(rid)
         bs = self.config.block_size
         n = min(self.config.policy.chunked_prefill_tokens,
@@ -1003,6 +1234,22 @@ class ServingEngine:
         bs = self.config.block_size
         prefills_before = m.prefills
 
+        # Step 0 (robustness, DESIGN.md §7): watchdog-escalate stuck swap
+        # tasks, surface copy retries as events, run the recovery ladder
+        # over terminally failed copies, and apply this iteration's
+        # injected allocation pressure.
+        if self.config.swap_watchdog_us > 0:
+            for t in self.swap.watchdog_check(self.clock,
+                                              self.config.swap_watchdog_us):
+                self._event(t.req_id, "retry", watchdog=True,
+                            direction=t.direction)
+        for rec in self.swap.drain_retries():
+            self._event(rec["rid"], "retry", direction=rec["direction"],
+                        attempt=rec["attempt"], error=rec["error"])
+        self._process_failed_swaps()
+        if self.faults.enabled:
+            self._apply_alloc_pressure()
+
         # Step 1: completed async swap-ins -> running.  A swap-in may
         # consist of several chunk tasks, and a fine-grained conflict sync
         # (resolve_conflicts) can retire tasks between polls; a request is
@@ -1041,11 +1288,11 @@ class ServingEngine:
             to_preempt, to_swap_in, to_admit = \
                 self.sched.classify_rebalance(desired)
             for rid in to_preempt:
-                self._preempt(rid)
+                self._contained(rid, self._preempt, rid)
             for rid in to_swap_in:
-                self._swap_in(rid)
+                self._contained(rid, self._swap_in, rid)
             for rid in to_admit:
-                self._admit(rid)
+                self._contained(rid, self._admit, rid)
 
         # Step 4: opportunistic admission (space permitting), capped at
         # the batch-bucket-aware target instead of max_running outright
@@ -1058,7 +1305,7 @@ class ServingEngine:
                     or len(self.sched.running) + len(self.sched.swapping_in) \
                     >= self._admission_target():
                 break
-            self._admit(rid)
+            self._contained(rid, self._admit, rid)
         for rid in list(self.sched.swapped):
             if len(self.sched.running) + len(self.sched.swapping_in) \
                     >= self._admission_target():
@@ -1066,7 +1313,7 @@ class ServingEngine:
             free_tok = self.gpu_mgr.free_blocks() * bs
             if self._req(rid).context_tokens + bs > free_tok:
                 break
-            self._swap_in(rid)
+            self._contained(rid, self._swap_in, rid)
 
         # Step 5: decode one token for the running batch.  Requests with
         # an in-flight chunked prefill advance their prefill instead of
@@ -1084,7 +1331,8 @@ class ServingEngine:
             rid_p = max(prefilling, key=self.sched.priority)
             reqp = self._req(rid_p)
             if self.pools is not None:
-                chunk_tokens = self._real_prefill_chunk(rid_p)
+                chunk_tokens = self._contained(
+                    rid_p, self._real_prefill_chunk, rid_p) or 0
             else:
                 chunk_tokens = min(chunk, reqp.prefill_remaining)
                 reqp.prefill_remaining -= chunk_tokens
@@ -1092,7 +1340,8 @@ class ServingEngine:
                     if reqp.prefill_is_resume:
                         reqp.prefill_is_resume = False
                     else:
-                        self._emit_first_token(rid_p)
+                        self._contained(rid_p, self._emit_first_token,
+                                        rid_p)
         if rids or prefilling:
             # block allocation for the new token (conflict-checked in
             # _allocate_token_slot).  Iterate over a SNAPSHOT and track a
@@ -1107,7 +1356,8 @@ class ServingEngine:
             for rid in list(rids):
                 if rid in skipped or rid not in self.sched.running:
                     continue       # preempted as a victim earlier this loop
-                if not self._allocate_token_slot(rid, skipped):
+                if not self._contained(rid, self._allocate_token_slot,
+                                       rid, skipped):
                     skipped.add(rid)           # retry next iteration
             decode_rids = [r for r in rids if r not in skipped
                            and r in self.sched.running]
@@ -1149,8 +1399,90 @@ class ServingEngine:
         m.iterations += 1
         m.total_time_us = self.clock.now_us
         m.ctx_switch_stall_us = self.swap.total_stall_us
+
+        # run the recovery ladder again over failures surfaced DURING
+        # this step (inline sim copies, fast workers): a terminally
+        # failed copy in the engine's final step would otherwise sit in
+        # the failed queue forever — the drain loop stops calling step()
+        self._process_failed_swaps()
+
+        # injected allocation pressure dies with the last live request —
+        # an emptied engine must reclaim the phantom reserve THIS step
+        # (the drain loop stops calling step() once has_work is False)
+        if self._pressure_blocks and not self.sched.requests:
+            self.gpu_mgr.release_request(self._PRESSURE_RID)
+            self._pressure_blocks = 0
+
+        # invariant sanitizer (DESIGN.md §7): cross-layer state check
+        # every N steps; raises InvariantViolation with a state dump —
+        # deliberately NOT contained (corrupt engine state has no single
+        # owning request; continuing would serve garbage)
+        n_inv = self.config.check_invariants_every
+        if n_inv > 0 and m.iterations % n_inv == 0:
+            check_engine_invariants(self)
+            m.invariant_checks += 1
+
         m.callstack_wall_s += time.perf_counter() - t_wall0
         return self._collect_outputs()
+
+    def _process_failed_swaps(self) -> None:
+        """Recovery ladder over terminally failed copies surfaced since
+        the last step (worker d2h gathers fail ASYNCHRONOUSLY — inline
+        swap-in failures were already handled at their dispatch site;
+        this drain is their backstop).  A failed swap-OUT means the CPU
+        copy's increment never arrived: the copy is voided, and a
+        SWAPPED request whose resumption depended on it converts to a
+        recompute-mode resume (KV regenerated from token history).
+        Fatal failures end in a request fault; failures of finished /
+        aborted requests need nothing beyond the voided copy."""
+        for t in self.swap.take_failed():
+            rid = t.req_id
+            req = self.sched.requests.get(rid)
+            if t.direction == "in":
+                if req is not None:
+                    self._recover_swap_in_failure(rid)
+                continue
+            self.reuse.invalidate(rid)
+            if req is None:
+                continue        # finished/parked/aborted: copy voided
+            if t.failed is not None and "Fatal" in t.failed:
+                self._fault_request(rid, FatalSwapFault(t.failed))
+                continue
+            if req.state is ReqState.SWAPPED:
+                # the CPU KV this request would swap back in is
+                # incomplete: resume by recomputation instead
+                req.resume_tokens = req.context_tokens
+                req.prefill_remaining = 0
+                req.prefill_is_resume = False
+                self.metrics.swap_failure_resumes += 1
+                self.sched.move(rid, ReqState.WAITING)
+                self._event(rid, "preempt", to="waiting",
+                            swap_failure="out")
+
+    _PRESSURE_RID = -7777       # phantom owner of injected-reserve blocks
+
+    def _apply_alloc_pressure(self) -> None:
+        """Allocation-pressure injection: a phantom request holds the
+        plan's reserved blocks for the spike window, so the shortage
+        flows through every real path — admission gating, token-slot
+        allocation, victim preemption — rather than a bolted-on check.
+        Released as the window closes (and whenever the engine is empty,
+        so drained runs can never leak phantom blocks)."""
+        want = self.faults.reserved_blocks(self.metrics.iterations) \
+            if self.sched.requests else 0
+        if want == self._pressure_blocks:
+            return
+        self.gpu_mgr.release_request(self._PRESSURE_RID)
+        self._pressure_blocks = 0
+        if want > 0:
+            try:
+                bs = self.config.block_size
+                self.gpu_mgr.allocate_tokens(self._PRESSURE_RID, want * bs)
+                self.gpu_mgr.note_tokens(self._PRESSURE_RID, want * bs)
+                self._pressure_blocks = want
+            except OutOfBlocksError:
+                # pool already under real pressure: the spike is moot
+                self.gpu_mgr.release_request(self._PRESSURE_RID)
 
     def _collect_outputs(self) -> List[RequestOutput]:
         outs = list(self._outs.values())
@@ -1174,6 +1506,12 @@ class ServingEngine:
         req = self._req(rid)
         if self.runner is not None:
             self.runner.flush()      # materialize the turn's last tokens
+            # free the decode row eagerly (same as abort): the lazy
+            # `_update_rows` release only runs at the NEXT decode batch,
+            # and a finished request must not hold a row (or trip the
+            # sanitizer's D2 check) waiting for a decode that may never
+            # come
+            self.runner.release(rid)
         if req.token_history:
             self._token_hist_by_conv[rid] = list(req.token_history)
         # retain the KV copy for the next turn (reuse mechanism); baseline

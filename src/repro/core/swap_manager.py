@@ -51,6 +51,12 @@ class SwapTask:
     cpu_blocks: Set[int] = field(default_factory=set)
     future: Optional[Future] = None
     synchronous: bool = False
+    # failure containment (DESIGN.md §7): the copy closure is retained so
+    # retries and the watchdog's synchronous rescue can re-run it
+    copy_fn: Optional[object] = None
+    retries: int = 0                  # failed attempts absorbed by retry
+    failed: Optional[str] = None      # terminal copy error (retries spent)
+    stalled_us: float = 0.0           # injected completion-signal delay
 
     def is_completed(self, now_us: float) -> bool:
         if self.future is not None and not self.future.done():
@@ -73,7 +79,9 @@ class MultithreadingSwapManager:
                  *, async_enabled: bool = True, adaptive: bool = True,
                  n_threads: int = 4, sync_every: int = 16,
                  sync_point_us: float = 5.0, r_info_window: int = 64,
-                 sync_stall_frac: float = 0.04):
+                 sync_stall_frac: float = 0.04,
+                 max_copy_retries: int = 2,
+                 retry_backoff_us: float = 200.0):
         self.hw = hw
         self.pools = pools
         self.async_enabled = async_enabled
@@ -111,6 +119,19 @@ class MultithreadingSwapManager:
         self.n_conflicts = 0
         self.n_syncs = 0
         self.callstack_overhead_us = 0.0   # fine-grained sync points etc.
+        # failure containment (DESIGN.md §7): copy errors never escape a
+        # worker — a copy is retried with backoff (charged to the task's
+        # simulated ``done_at``); a task whose retries are spent lands on
+        # ``failed_tasks`` for the engine's recovery ladder to process.
+        self.max_copy_retries = max_copy_retries
+        self.retry_backoff_us = retry_backoff_us
+        self._fail_lock = threading.Lock()
+        self.failed_tasks: List[SwapTask] = []
+        self.retry_log: List[Dict[str, object]] = []   # engine drains ->
+        #                                                "retry" events
+        self.n_retries = 0
+        self.n_copy_failures = 0
+        self.n_watchdog = 0
 
     # ------------------------------------------------------------------
     # cost helpers
@@ -144,7 +165,8 @@ class MultithreadingSwapManager:
                  runs: Sequence[Tuple[int, int]], block_bytes: int,
                  gpu_blocks: Sequence[int], *, asynchronous: bool,
                  copy_fn=None, copy_deps: Sequence[Future] = (),
-                 cpu_blocks: Sequence[int] = ()) -> SwapTask:
+                 cpu_blocks: Sequence[int] = (),
+                 extra_latency_us: float = 0.0) -> SwapTask:
         """Issue one swap (all ops of one request, one direction).
 
         ``copy_deps``: data-plane futures that must complete before
@@ -153,7 +175,12 @@ class MultithreadingSwapManager:
         lock is taken — a dependency's own copy needs that lock, so
         waiting inside it would deadlock.  ``cpu_blocks``: the host
         blocks this task's copy writes (out) or reads (in), tracked so
-        later copies can order behind it."""
+        later copies can order behind it.
+
+        ``extra_latency_us``: injected completion-signal delay (fault
+        injection): extends the task's ``done_at`` but NOT the stream
+        timeline — a stuck signal does not occupy the link; the watchdog
+        is what rescues it."""
         h2d = direction == "in"
         n_ops, n_blocks, nbytes, disp, ex = self._op_costs(
             runs, block_bytes, h2d)
@@ -166,6 +193,7 @@ class MultithreadingSwapManager:
         done_at = start + duration
         self.stream_free_at = done_at
         self.total_io_us += duration
+        done_at += extra_latency_us
 
         if asynchronous:
             # dispatch happens on a worker thread: main thread not blocked
@@ -181,7 +209,8 @@ class MultithreadingSwapManager:
                         issued_at=issued_at, done_at=done_at,
                         gpu_blocks=set(gpu_blocks),
                         cpu_blocks=set(cpu_blocks),
-                        synchronous=not asynchronous)
+                        synchronous=not asynchronous,
+                        copy_fn=copy_fn, stalled_us=extra_latency_us)
         if copy_fn is not None:
             if asynchronous and self._executor is not None \
                     and direction == "out":
@@ -192,9 +221,15 @@ class MultithreadingSwapManager:
                 # swap-in scatter) stays single-threaded — cross-thread
                 # donation of in-flight buffers tears KV (DESIGN.md §4.3).
                 task.future = self._executor.submit(
-                    self._run_copy, copy_deps, copy_fn)
+                    self._run_copy_guarded, task, copy_deps)
             else:
-                self._run_copy(copy_deps, copy_fn)
+                self._run_copy_guarded(task, copy_deps)
+                if task.synchronous and task.retries:
+                    # inline retries pushed done_at out by the backoff:
+                    # the dispatching thread waited that out too
+                    extra = max(0.0, task.done_at - clock.now_us)
+                    self.total_stall_us += extra
+                    clock.advance_to(task.done_at)
         self.total_ops += n_ops
         self.total_blocks += n_blocks
         self.total_bytes += nbytes
@@ -219,10 +254,44 @@ class MultithreadingSwapManager:
         with self._pool_lock:
             return fn()
 
-    def _run_copy(self, deps: Sequence[Future], fn):
+    def _run_copy_guarded(self, task: SwapTask,
+                          deps: Sequence[Future]) -> None:
+        """Run one task's data-plane copy with bounded retry.  NEVER
+        raises: an exception from a copy must not escape a worker future
+        into whatever unrelated request later awaits it (``synchronize``,
+        ``data_deps``) — that is the exact failure-amplification this
+        layer removes.  Each retry pushes the task's simulated ``done_at``
+        out by a linear backoff; spent retries mark the task ``failed``
+        and queue it for the engine's recovery ladder."""
         for f in deps:              # data ordering only — no sim-clock cost
-            f.result()
-        return self._locked(fn)
+            try:
+                f.result()
+            except BaseException:
+                pass                # dep failures are handled by THEIR task
+        if task.copy_fn is None:
+            return
+        attempt = 0
+        while True:
+            try:
+                with self._pool_lock:
+                    task.copy_fn()
+                return
+            except Exception as e:
+                attempt += 1
+                task.retries = attempt
+                with self._fail_lock:
+                    self.n_retries += 1
+                    self.retry_log.append({
+                        "rid": task.req_id, "direction": task.direction,
+                        "attempt": attempt,
+                        "error": f"{type(e).__name__}: {e}"})
+                if attempt > self.max_copy_retries:
+                    task.failed = f"{type(e).__name__}: {e}"
+                    with self._fail_lock:
+                        self.n_copy_failures += 1
+                        self.failed_tasks.append(task)
+                    return
+                task.done_at += self.retry_backoff_us * attempt
 
     def data_deps(self, cpu_blocks: Sequence[int]) -> List[Future]:
         """Data-plane futures a new copy touching ``cpu_blocks`` must
@@ -296,6 +365,95 @@ class MultithreadingSwapManager:
         self.ongoing_swap_in = [t for t in self.ongoing_swap_in
                                 if t.req_id != rid]
         return before - len(self.ongoing_swap_in)
+
+    # ------------------------------------------------------------------
+    # failure containment (DESIGN.md §7)
+    # ------------------------------------------------------------------
+
+    def has_failed(self, rid: int, direction: Optional[str] = None) -> bool:
+        """True if an unprocessed copy failure is queued for ``rid``."""
+        with self._fail_lock:
+            return any(t.req_id == rid
+                       and (direction is None or t.direction == direction)
+                       for t in self.failed_tasks)
+
+    def take_failed(self) -> List[SwapTask]:
+        """Drain the failed-task queue (engine step 0: the recovery
+        ladder processes each failure exactly once)."""
+        with self._fail_lock:
+            out, self.failed_tasks = self.failed_tasks, []
+        # a failed task's data never arrived — drop it from the ongoing
+        # lists so it neither blocks promotion forever nor orders later
+        # copies behind a write that will not happen
+        dead = {id(t) for t in out}
+        self.ongoing_swap_in = [t for t in self.ongoing_swap_in
+                                if id(t) not in dead]
+        self.ongoing_swap_out = [t for t in self.ongoing_swap_out
+                                 if id(t) not in dead]
+        return out
+
+    def take_failed_for(self, rid: int) -> List[SwapTask]:
+        """Drain (and de-list) queued copy failures for one request —
+        the inline-detection path (``_swap_in`` / prefix restore) and
+        request teardown, which must not leave stale failures for a
+        later reuse of the handle."""
+        with self._fail_lock:
+            mine = [t for t in self.failed_tasks if t.req_id == rid]
+            self.failed_tasks = [t for t in self.failed_tasks
+                                 if t.req_id != rid]
+        dead = {id(t) for t in mine}
+        self.ongoing_swap_in = [t for t in self.ongoing_swap_in
+                                if id(t) not in dead]
+        self.ongoing_swap_out = [t for t in self.ongoing_swap_out
+                                 if id(t) not in dead]
+        return mine
+
+    def drain_retries(self) -> List[Dict[str, object]]:
+        """Drain the retry log (engine -> "retry" events)."""
+        with self._fail_lock:
+            out, self.retry_log = self.retry_log, []
+        return out
+
+    def watchdog_check(self, clock: SimClock,
+                       watchdog_us: float) -> List[SwapTask]:
+        """Escalate stuck in-flight tasks (DESIGN.md §7 ladder step 2):
+        a task still incomplete ``watchdog_us`` after issue gets its data
+        plane forced synchronously on the engine thread — if its copy had
+        already failed terminally, one last synchronous retry runs here —
+        and its stuck completion signal clamped to now (+ one sync-point
+        charge).  Returns the tasks rescued; a task whose synchronous
+        retry also failed stays ``failed`` for ``take_failed``."""
+        if watchdog_us <= 0:
+            return []
+        rescued: List[SwapTask] = []
+        for t in list(self.ongoing_swap_in) + list(self.ongoing_swap_out):
+            if t.is_completed(clock.now_us) or t.failed is not None:
+                continue
+            if clock.now_us - t.issued_at < watchdog_us:
+                continue
+            if t.future is not None:
+                t.future.result()       # guarded runner: never raises
+            if t.failed is not None:
+                # terminal copy failure surfaced while we waited: one
+                # synchronous retried copy on the engine thread
+                try:
+                    with self._pool_lock:
+                        if t.copy_fn is not None:
+                            t.copy_fn()
+                    t.failed = None
+                    with self._fail_lock:
+                        if t in self.failed_tasks:
+                            self.failed_tasks.remove(t)
+                except Exception:
+                    continue            # stays failed; ladder escalates
+            stall = self.sync_point_us
+            self.total_stall_us += stall
+            self.callstack_overhead_us += stall
+            clock.advance(stall)
+            t.done_at = min(t.done_at, clock.now_us)
+            self.n_watchdog += 1
+            rescued.append(t)
+        return rescued
 
     def resolve_conflicts(self, clock: SimClock,
                           gpu_blocks: Sequence[int]) -> int:
@@ -388,6 +546,9 @@ class MultithreadingSwapManager:
             "n_syncs": self.n_syncs,
             "ongoing": len(self.ongoing_swap_in),
             "callstack_overhead_us": self.callstack_overhead_us,
+            "copy_retries": self.n_retries,
+            "copy_failures": self.n_copy_failures,
+            "watchdog_rescues": self.n_watchdog,
         }
 
     def shutdown(self):

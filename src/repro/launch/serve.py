@@ -17,6 +17,20 @@ Quickstart — online open-world serving (the ``ServingEngine``
   # tier-1 smoke: tiny run + event-log well-formedness assertions
   PYTHONPATH=src python -m repro.launch.serve --online --smoke [--real]
 
+Failure containment / chaos quickstart (DESIGN.md §7):
+
+  # seeded chaos schedule (swap faults, stalls, poison requests,
+  # allocation-pressure spikes) with the invariant sanitizer on every
+  # step — the engine must degrade per-request, never crash step()
+  PYTHONPATH=src python -m repro.launch.serve --online --chaos --smoke
+
+  # admission control: bounded waiting queue, shed-lowest-priority
+  PYTHONPATH=src python -m repro.launch.serve --online --max-waiting 8 \
+      --overload-policy shed --conversations 50 --rate 20
+
+  # drain mode: stop admitting at t=5s, finish in-flight work, exit
+  PYTHONPATH=src python -m repro.launch.serve --online --drain 5
+
 The online driver is an ordinary CLIENT of the engine: it submits
 arrivals with ``add_request`` (multi-turn follow-ups via
 ``continue_session`` — the KV-reuse path), drains ``step()`` outputs,
@@ -57,8 +71,11 @@ def _build_real_bundle(arch: str, seed: int):
 def validate_event_log(path: str) -> int:
     """Assert the JSONL event log is well-formed: every line parses,
     kinds are known, timestamps are monotone, and every handle's
-    lifecycle is coherent (an arrive first; at most one terminal
-    finish/abort/drop).  Returns the number of events."""
+    lifecycle is coherent (an arrive first; at most one hard terminal
+    among abort/drop/error/shed).
+    System events (``drain``) carry a negative handle and sit outside
+    any request lifecycle.  ``retry`` events must name a direction.
+    Returns the number of events."""
     from repro.core.request_api import EVENT_KINDS
     n = 0
     last_t = -1.0
@@ -75,17 +92,27 @@ def validate_event_log(path: str) -> int:
             assert ev["t_us"] >= last_t, "event log not time-ordered"
             last_t = ev["t_us"]
             h = ev["handle"]
+            if h < 0:
+                # engine-level event (drain): no per-request lifecycle
+                assert ev["kind"] == "drain", f"system event kind: {ev}"
+                n += 1
+                continue
             if ev["kind"] == "arrive":
                 seen_arrive.add(h)
             else:
                 assert h in seen_arrive, f"event before arrive: {ev}"
-            if ev["kind"] in ("finish", "abort", "drop"):
+            if ev["kind"] == "retry":
+                assert ev.get("direction") in ("in", "out"), \
+                    f"retry without direction: {ev}"
+            if ev["kind"] == "error":
+                assert ev.get("error"), f"error event without message: {ev}"
+            if ev["kind"] in ("abort", "drop", "error", "shed"):
                 terminal.setdefault(h, []).append(ev["kind"])
             n += 1
     for h, kinds in terminal.items():
-        # a retained session may finish several turns; abort/drop ends it
-        assert kinds.count("abort") + kinds.count("drop") <= 1, \
-            f"handle {h} terminated twice: {kinds}"
+        # a retained session may finish several turns; exactly one
+        # hard terminal (abort/drop/error/shed) may end it
+        assert len(kinds) <= 1, f"handle {h} terminated twice: {kinds}"
     assert n > 0, "empty event log"
     return n
 
@@ -96,12 +123,24 @@ def run_online(args) -> dict:
     Deliberately an INDEPENDENT client — it shares no driver scaffold
     with ``FastSwitchEngine``'s replay (tests pin the two equivalent);
     what a network front-end would do, it does here inline."""
-    from repro.core import EngineConfig, SamplingParams, ServingEngine, SLOSpec
+    import dataclasses
+
+    from repro.core import (EngineConfig, EngineDrainingError,
+                            EngineOverloadError, FaultPlan, SamplingParams,
+                            ServingEngine, SLOSpec)
     from repro.data.priority import PriorityTrace
     from repro.data.sharegpt import prompt_for_turn, sample_conversations
 
     policy = (args.policy or ["fastswitch"])[0]
     n_conv = 6 if args.smoke else args.conversations
+    if args.chaos and args.smoke and not args.real:
+        # the chaos smoke needs CONTENTION: a roomy pool never swaps, so
+        # no swap-fault site is ever reached.  Starve it instead.
+        n_conv = 16
+        args.gpu_blocks = args.gpu_blocks or 64
+        args.cpu_blocks = args.cpu_blocks or 256
+        args.max_running = args.max_running or 4
+        args.rate = max(args.rate, 20.0)
     model = None
     if args.real:
         model = _build_real_bundle(args.arch, args.seed)
@@ -125,6 +164,20 @@ def run_online(args) -> dict:
                                      seed=args.seed,
                                      max_context=cfg.num_gpu_blocks * 8)
 
+    # robustness wiring (DESIGN.md §7): seeded chaos schedule, invariant
+    # sanitizer cadence, copy watchdog, bounded admission
+    overrides = {}
+    if args.chaos:
+        overrides["fault_plan"] = FaultPlan.chaos(seed=args.seed,
+                                                  intensity=args.chaos)
+        overrides["swap_watchdog_us"] = 100_000.0
+        overrides["check_invariants_every"] = 1 if args.smoke else 50
+    if args.max_waiting:
+        overrides["max_waiting"] = args.max_waiting
+        overrides["overload_policy"] = args.overload_policy
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+
     slo = None
     if args.slo_ttft_ms or args.slo_tbt_ms:
         slo = SLOSpec(ttft_ms=args.slo_ttft_ms or None,
@@ -146,29 +199,45 @@ def run_online(args) -> dict:
     pending = sorted(convs, key=lambda c: c.arrival_s)
     sleeping = []                    # (wake_s, conv, next_turn_idx)
     by_handle = {c.conv_id: c for c in convs}
-    live, n_aborted = set(), 0
+    live, n_aborted, n_refused = set(), 0, 0
     iters = 0
     max_iters = 20_000 if args.real else 300_000
     while (pending or sleeping or engine.has_work()) and iters < max_iters:
         now_s = engine.clock.now_us / 1e6
+        if args.drain and now_s >= args.drain and not engine.draining:
+            # stop admissions; in-flight work runs to completion.  The
+            # client drops its own backlog too — every further submit
+            # would just raise EngineDrainingError.
+            engine.drain()
+            n_refused += len(pending) + len(sleeping)
+            pending, sleeping = [], []
+            print(f"draining at t={now_s:.2f}s "
+                  f"({len(engine.sched.requests)} in flight)")
         while pending and pending[0].arrival_s <= now_s:
             conv = pending.pop(0)
             t = conv.turns[0]
-            engine.add_request(prompt_for(conv, 0),
-                               SamplingParams(max_tokens=t.response_tokens),
-                               slo=slo, handle=conv.conv_id,
-                               retain_kv=len(conv.turns) > 1)
-            live.add(conv.conv_id)
+            try:
+                engine.add_request(
+                    prompt_for(conv, 0),
+                    SamplingParams(max_tokens=t.response_tokens),
+                    slo=slo, handle=conv.conv_id,
+                    retain_kv=len(conv.turns) > 1)
+                live.add(conv.conv_id)
+            except (EngineOverloadError, EngineDrainingError):
+                n_refused += 1       # a real front-end would 429/503 here
         for entry in list(sleeping):
             if entry[0] <= now_s:
                 sleeping.remove(entry)
                 _, conv, tix = entry
                 t = conv.turns[tix]
-                engine.continue_session(
-                    conv.conv_id, prompt_for(conv, tix),
-                    SamplingParams(max_tokens=t.response_tokens), slo=slo,
-                    retain_kv=tix + 1 < len(conv.turns))
-                live.add(conv.conv_id)
+                try:
+                    engine.continue_session(
+                        conv.conv_id, prompt_for(conv, tix),
+                        SamplingParams(max_tokens=t.response_tokens),
+                        slo=slo, retain_kv=tix + 1 < len(conv.turns))
+                    live.add(conv.conv_id)
+                except (EngineOverloadError, EngineDrainingError):
+                    n_refused += 1
         events = [w[0] * 1e6 for w in sleeping]
         if pending:
             events.append(pending[0].arrival_s * 1e6)
@@ -198,8 +267,22 @@ def run_online(args) -> dict:
 
     m = engine.metrics
     result = {**m.summary(), "slo": m.slo_summary(), **engine.swap.stats()}
+    if args.chaos:
+        result["faults_fired"] = dict(engine.faults.fired)
     print(f"online[{policy}] " + json.dumps(m.summary()))
     print("slo " + json.dumps(m.slo_summary()))
+    if args.chaos:
+        print("chaos " + json.dumps({
+            "fired": dict(engine.faults.fired), "faulted": m.faulted,
+            "swap_failure_resumes": m.swap_failure_resumes,
+            "copy_retries": engine.swap.n_retries,
+            "copy_failures": engine.swap.n_copy_failures,
+            "watchdog_rescues": engine.swap.n_watchdog,
+            "invariant_checks": m.invariant_checks}))
+    if args.max_waiting or args.drain:
+        print("admission " + json.dumps({
+            "rejected": m.rejected, "shed": m.shed,
+            "client_refused": n_refused}))
     if ev_file:
         ev_file.close()
         n_ev = validate_event_log(args.events)
@@ -211,8 +294,16 @@ def run_online(args) -> dict:
         if args.cancel_frac:
             assert m.aborted == n_aborted, \
                 f"abort accounting mismatch: {m.aborted} != {n_aborted}"
+        if args.chaos:
+            # the chaos smoke is a CONTAINMENT gate: with the sanitizer
+            # on every step, faults must have fired and every live
+            # request must still have ended in a terminal state
+            assert sum(engine.faults.fired.values()) > 0, \
+                "chaos smoke fired no faults"
+            assert m.invariant_checks > 0, "invariant sanitizer never ran"
         print(f"online smoke OK: {m.total_tokens} tokens, "
-              f"{len(m.request_stats)} turns, {m.aborted} aborted")
+              f"{len(m.request_stats)} turns, {m.aborted} aborted, "
+              f"{m.faulted} faulted")
     return result
 
 
@@ -300,6 +391,20 @@ def main() -> None:
     ap.add_argument("--slo-tbt-ms", type=float, default=0.0)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny online run + event-log assertions (tier-1)")
+    # robustness / failure containment (DESIGN.md §7)
+    ap.add_argument("--chaos", nargs="?", const=1.0, type=float,
+                    default=0.0, metavar="INTENSITY",
+                    help="seeded fault-injection schedule "
+                         "(FaultPlan.chaos; optional intensity, default 1)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="bound the waiting queue (0 = unbounded)")
+    ap.add_argument("--overload-policy", default="reject",
+                    choices=["reject", "shed"],
+                    help="full queue: reject the new request or shed "
+                         "the least valuable waiting one")
+    ap.add_argument("--drain", type=float, default=0.0, metavar="T_S",
+                    help="enter drain mode at t=T_S: refuse new work, "
+                         "finish in-flight requests, exit")
     args = ap.parse_args()
 
     if args.smoke and not args.online:

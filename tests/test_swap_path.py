@@ -304,18 +304,18 @@ def test_swap_in_copy_ordered_behind_queued_swap_out_data():
         runs_in = [(5, 2)]                     # swap-in relocates the blocks
         # model the race window: the out-worker is descheduled between
         # picking up the task and acquiring the pool lock
-        orig_run = mgr._run_copy
+        orig_run = mgr._run_copy_guarded
 
-        def delayed_run(deps, fn):
+        def delayed_run(task, deps):
             _time.sleep(0.2)
-            return orig_run(deps, fn)
-        mgr._run_copy = delayed_run
+            return orig_run(task, deps)
+        mgr._run_copy_guarded = delayed_run
         out = mgr.dispatch(clock, 1, "out", runs_out, 1024,
                            runs_to_indices(runs_out), asynchronous=True,
                            copy_fn=lambda: pools.copy_out_staged(runs_out,
                                                                  cpu_ids),
                            cpu_blocks=cpu_ids)
-        mgr._run_copy = orig_run
+        mgr._run_copy_guarded = orig_run
         deps = mgr.data_deps(cpu_ids)
         assert deps == [out.future]
         # overlap-keyed: disjoint CPU blocks have no dependency, and a
