@@ -6,9 +6,11 @@ runs) through three data planes:
   * ``per_block``  — one blocking d2h gather / un-donated h2d ``.at[].set``
                      PER BLOCK (the vLLM-style dispatch-bound baseline;
                      the copy-in also pays a full-pool copy per block)
-  * ``host_vec``   — the pre-refactor engine path (``PagedPools.copy_out/
-                     copy_in``): one vectorized host gather + ONE
-                     un-donated full-pool ``.at[].set`` per swap
+  * ``host_vec``   — the pre-refactor engine path: one vectorized host
+                     gather + ONE un-donated full-pool ``.at[].set`` per
+                     swap (kept here as a local legacy implementation:
+                     ``PagedPools.copy_in`` itself is now stage-routed,
+                     fslint FS006)
   * ``staged``     — the engine's path (``copy_out_staged/copy_in_staged``):
                      grouped Pallas gather into a contiguous device slab,
                      one slab transfer, donated scatter (DESIGN.md §4)
@@ -48,18 +50,26 @@ def _mk_pools(num_blocks):
     return pools, spec
 
 
+def _legacy_copy_in(pools, cpu_blocks, gpu_blocks):
+    """The retired un-donated h2d path (whole-pool functional update),
+    preserved verbatim so the baseline legs keep measuring it after
+    ``PagedPools.copy_in`` was stage-routed."""
+    data = jnp.asarray(pools.cpu_bf16()[:, :, np.asarray(cpu_blocks)])
+    pools.gpu = pools.gpu.at[:, :, np.asarray(gpu_blocks)].set(data)
+
+
 def swap_per_block(pools, blocks, cpu_ids):
     """One d2h per block out; one un-donated ``.at[].set`` per block in."""
     for g, c in zip(blocks, cpu_ids):
         pools.copy_out([g], [c])
     for g, c in zip(blocks, cpu_ids):
-        pools.copy_in([c], [g])
+        _legacy_copy_in(pools, [c], [g])
     pools.gpu.block_until_ready()
 
 
 def swap_host_vec(pools, blocks, cpu_ids):
     pools.copy_out(blocks, cpu_ids)
-    pools.copy_in(cpu_ids, blocks)
+    _legacy_copy_in(pools, cpu_ids, blocks)
     pools.gpu.block_until_ready()
 
 

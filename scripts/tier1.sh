@@ -8,6 +8,18 @@
 set -e
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# fslint gate (DESIGN.md §8): hot-path static analysis — donation
+# safety, jit-variant budget, host-sync hygiene, swap-plane thread
+# discipline.  Stdlib-only (no jax import), runs in milliseconds; the
+# json report is uploaded by CI.  Any non-baselined finding fails the
+# build.
+python -m repro.analysis src/repro --format json \
+    > /tmp/fslint.json || { cat /tmp/fslint.json; exit 1; }
+# generic lint (unused imports / undefined names; [tool.ruff] in
+# pyproject.toml) — runs wherever ruff is on PATH, skipped elsewhere
+if command -v ruff >/dev/null 2>&1; then
+    ruff check src tests benchmarks
+fi
 python -m pytest -x -q "$@"
 # hot-path smoke benches emit BENCH_*.json artifacts (uploaded by CI so
 # perf rows can be diffed across commits)

@@ -1,0 +1,21 @@
+"""fslint — static analysis for the FastSwitch JAX hot path.
+
+The engine's performance contract lives in a handful of disciplines
+that are invisible to generic linters: donated pool buffers must be
+rebound by their caller (PR 3's cross-thread KV tear), every jit
+variant reachable from the serving hot path must bucket its
+shape-determining arguments to pow2 (PR 4's O(log) cache bounds),
+host synchronisation is only allowed at the documented staged-copy
+points (PR 2's torn async d2h reads), swap worker threads must never
+touch pool-mutating donated ops (the swap-plane residency contract),
+and copy futures must never be awaited while holding the pool lock
+(swap_manager's deadlock contract).
+
+``python -m repro.analysis [paths]`` runs the rule set over a source
+tree; see DESIGN.md §8 for the rule catalog and policy.
+
+The package is stdlib-only on purpose: it never imports jax or the
+repro runtime, so the CI gate costs milliseconds and runs anywhere.
+"""
+from repro.analysis.core import Config, Finding  # noqa: F401
+from repro.analysis.driver import jit_budget, run_analysis  # noqa: F401

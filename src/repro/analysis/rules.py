@@ -1,0 +1,524 @@
+"""The fslint rule set.
+
+Each rule encodes one discipline the FastSwitch hot path depends on,
+grounded in a real bug from this repo's history (DESIGN.md §8 has the
+full catalog):
+
+* FS001 use-after-donate — PR 3's cross-thread donation KV tear.
+* FS002 jit-variant budget — PR 1/PR 4's O(log) jit-cache bounds.
+* FS003 host-sync in hot path — PR 2's torn async d2h reads and the
+  deferred-sync token pipeline.
+* FS004 swap-plane thread discipline — the PR 3 residency contract
+  (worker threads run read-only d2h gathers only).
+* FS005 lock-order / await-outside-lock — swap_manager's "await copy
+  deps *before* taking the pool lock" contract.
+* FS006 un-donated pool write — the legacy whole-pool ``.at[].set``
+  copy-in path this PR retires.
+
+Rules report syntactic facts with dataflow just deep enough to avoid
+noise; they are deliberately intra-module (plus a project call graph)
+and never import jax.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.astutil import (
+    FunctionInfo,
+    assign_target_paths,
+    call_name,
+    dotted_path,
+    enclosing_loop,
+    enclosing_statement,
+    last_component,
+)
+from repro.analysis.callgraph import Project
+from repro.analysis.core import Finding
+from repro.analysis.dataflow import (
+    BucketEnv,
+    DeviceWalk,
+    class_device_attrs,
+    collect_direction_facts,
+    device_returning_functions,
+)
+
+
+class Rule:
+    id: str = "FS000"
+    title: str = ""
+
+    def run(self, project: Project) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+def _finding(rule: str, fi: FunctionInfo, node: ast.AST,
+             message: str) -> Finding:
+    return Finding(
+        rule=rule, path=fi.module.rel_path,
+        line=getattr(node, "lineno", fi.node.lineno),
+        col=getattr(node, "col_offset", 0),
+        qualname=fi.qualname, message=message)
+
+
+def _owned_calls(fi: FunctionInfo) -> List[ast.Call]:
+    """Call nodes belonging to ``fi`` itself (lambdas included, nested
+    named defs excluded — they are analysed separately)."""
+    out = []
+    for node in ast.walk(fi.node):
+        if isinstance(node, ast.Call):
+            owner = fi.module.function_for(node)
+            if owner is None or owner.node is fi.node:
+                out.append(node)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# FS001 — use-after-donate
+# ---------------------------------------------------------------------------
+
+class UseAfterDonate(Rule):
+    id = "FS001"
+    title = "use-after-donate"
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        for fi in project.functions.values():
+            findings.extend(self._check_function(project, fi))
+        return findings
+
+    def _check_function(self, project: Project,
+                        fi: FunctionInfo) -> List[Finding]:
+        out: List[Finding] = []
+        parents = fi.module.parents
+        for call in _owned_calls(fi):
+            for callee in project.resolve_call(call, fi.module, fi):
+                donated = project.donated_params.get(callee.qualname)
+                if not donated:
+                    continue
+                for pname, arg in project.map_call_args(call, callee):
+                    if pname not in donated:
+                        continue
+                    path = dotted_path(arg)
+                    if path is None:
+                        continue  # rvalue expression: nothing survives
+                    stmt = enclosing_statement(call, parents)
+                    if stmt is None or isinstance(stmt, ast.Return):
+                        continue
+                    rebound_here = path in assign_target_paths(stmt)
+                    bare = last_component(callee.qualname)
+                    loop = enclosing_loop(call, fi.node, parents)
+                    if loop is not None and not rebound_here:
+                        if not self._rebinds_in(loop, path):
+                            out.append(_finding(
+                                self.id, fi, call,
+                                f"'{path}' is donated to {bare} inside a "
+                                f"loop without being rebound; the next "
+                                f"iteration reads a freed buffer"))
+                            continue
+                    if rebound_here:
+                        continue
+                    use = self._first_use_after(fi, stmt, path)
+                    if use is not None:
+                        out.append(_finding(
+                            self.id, fi, use,
+                            f"'{path}' was donated to {bare} and is read "
+                            f"again afterwards; rebind it from the call's "
+                            f"return value (owner-of-record protocol)"))
+        return out
+
+    @staticmethod
+    def _rebinds_in(scope: ast.AST, path: str) -> bool:
+        for node in ast.walk(scope):
+            if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                if path in assign_target_paths(node):
+                    return True
+        return False
+
+    @staticmethod
+    def _first_use_after(fi: FunctionInfo, stmt: ast.stmt,
+                         path: str) -> Optional[ast.AST]:
+        origin = (stmt.end_lineno or stmt.lineno,
+                  stmt.end_col_offset or 0)
+        # first revival: end of the first later statement that rebinds
+        revive: Optional[Tuple[int, int]] = None
+        for node in ast.walk(fi.node):
+            if isinstance(node, (ast.Assign, ast.AnnAssign)):
+                pos = (node.end_lineno or node.lineno,
+                       node.end_col_offset or 0)
+                if pos > origin and path in assign_target_paths(node):
+                    if revive is None or pos < revive:
+                        revive = pos
+        best: Optional[ast.AST] = None
+        best_pos: Optional[Tuple[int, int]] = None
+        for node in ast.walk(fi.node):
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            if not isinstance(getattr(node, "ctx", None), ast.Load):
+                continue
+            p = dotted_path(node)
+            if p is None or (p != path and not p.startswith(path + ".")):
+                continue
+            pos = (node.lineno, node.col_offset)
+            if pos <= origin:
+                continue
+            if revive is not None and pos > revive:
+                continue
+            if best_pos is None or pos < best_pos:
+                best, best_pos = node, pos
+        return best
+
+
+# ---------------------------------------------------------------------------
+# FS002 — jit-variant budget
+# ---------------------------------------------------------------------------
+
+class JitVariantBudget(Rule):
+    id = "FS002"
+    title = "jit-variant-budget"
+
+    def __init__(self) -> None:
+        # qualname of jit def -> max bucketed degrees observed at any
+        # hot call site; consumed by `launch/dryrun.py --audit-jit`.
+        self.degrees: Dict[str, int] = {}
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        self.degrees = {}
+        for qual, fi in project.functions.items():
+            if qual not in project.hot:
+                continue
+            benv = BucketEnv(fi, project)
+            for call in _owned_calls(fi):
+                for callee in project.resolve_call(call, fi.module, fi):
+                    spec = project.jit_specs.get(callee.qualname)
+                    if spec is None:
+                        continue
+                    bucketed = 0
+                    for pname, arg in project.map_call_args(call, callee):
+                        flags = benv.flags(arg)
+                        # one degree of freedom per bucketed *static*
+                        # arg; traced-shape buckets are correlated with
+                        # these, so the audit bound stays tight
+                        if flags.bucketed and pname in spec.static_argnames:
+                            bucketed += 1
+                        if not flags.suspect:
+                            continue
+                        kind = ("static arg"
+                                if pname in spec.static_argnames
+                                else "traced array arg")
+                        findings.append(_finding(
+                            self.id, fi, arg,
+                            f"{kind} '{pname}' of jitted "
+                            f"{last_component(callee.qualname)} derives "
+                            f"from a per-call size; route it through a "
+                            f"pow2 bucketing helper or the jit cache "
+                            f"grows per distinct value"))
+                    cur = self.degrees.get(callee.qualname, 0)
+                    self.degrees[callee.qualname] = max(cur, bucketed)
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# FS003 — host sync in hot path
+# ---------------------------------------------------------------------------
+
+class HostSyncInHotPath(Rule):
+    id = "FS003"
+    title = "host-sync-in-hot-path"
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        device_returning = device_returning_functions(project)
+        attr_cache: Dict[Tuple[str, str], Dict[str, str]] = {}
+        allow = project.config.sync_allowlist
+        for qual, fi in project.functions.items():
+            if qual not in project.hot:
+                continue
+            if any(qual.endswith(suffix) for suffix in allow):
+                continue
+            attrs: Dict[str, str] = {}
+            if fi.class_name is not None:
+                key = (fi.module.modname, fi.class_name)
+                if key not in attr_cache:
+                    attr_cache[key] = class_device_attrs(
+                        project, fi.module, fi.class_name, device_returning)
+                attrs = attr_cache[key]
+            walk = DeviceWalk(fi, project, attrs, device_returning)
+            for site in walk.syncs:
+                findings.append(_finding(
+                    self.id, fi, site.node,
+                    f"{site.detail} inside the serving hot path; defer it "
+                    f"or move it to a documented staged sync point"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# FS004 — swap-plane thread discipline
+# ---------------------------------------------------------------------------
+
+class SwapThreadDiscipline(Rule):
+    id = "FS004"
+    title = "swap-thread-discipline"
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        cfg = project.config
+        facts = collect_direction_facts(project)
+        mutators = self._pool_mutators(project)
+        for submit_fi, call, targets, guard in facts.submit_sites:
+            reachable = project.reachable_from(targets)
+            # expand through indirect `task.copy_fn()` dispatch: which
+            # registered closures can a worker thread actually run?
+            for _ in range(4):  # closures may chain; small fixpoint
+                extra: List[str] = []
+                for qual in list(reachable):
+                    if qual not in facts.indirect_callers:
+                        continue
+                    for rec in facts.registered:
+                        if guard == cfg.out_label and \
+                                rec.label == "in":
+                            continue  # provably h2d-only: not submitted
+                        extra.extend(rec.callees)
+                new = project.reachable_from(extra) - reachable
+                if not new:
+                    break
+                reachable |= new
+            hit = sorted(reachable & mutators)
+            if hit:
+                findings.append(_finding(
+                    self.id, submit_fi, call,
+                    f"pool-mutating op(s) {', '.join(hit[:3])} reachable "
+                    f"from a swap worker thread; workers may only run "
+                    f"read-only d2h gathers (residency contract)"))
+        return findings
+
+    @staticmethod
+    def _pool_mutators(project: Project) -> Set[str]:
+        mutators = {qual for qual, donated
+                    in project.donated_params.items() if donated}
+        for qual, fi in project.functions.items():
+            if qual in project.jit_specs:
+                continue
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if isinstance(t, ast.Attribute) and \
+                                t.attr in project.config.pool_attr_names:
+                            mutators.add(qual)
+        return mutators
+
+
+# ---------------------------------------------------------------------------
+# FS005 — lock order / await under pool lock
+# ---------------------------------------------------------------------------
+
+class LockDiscipline(Rule):
+    id = "FS005"
+    title = "lock-discipline"
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        suffix = project.config.lock_suffix
+        awaiting = self._direct_awaiters(project)
+        acquires = self._direct_acquires(project, suffix)
+        reach_cache: Dict[str, Set[str]] = {}
+
+        def reach(qual: str) -> Set[str]:
+            if qual not in reach_cache:
+                reach_cache[qual] = project.reachable_from([qual])
+            return reach_cache[qual]
+
+        edges: Dict[str, Set[str]] = {}
+        edge_sites: Dict[Tuple[str, str], Tuple[FunctionInfo, ast.AST]] = {}
+
+        for qual, fi in project.functions.items():
+            self._scan(project, fi, fi.node.body, [], suffix, awaiting,
+                       acquires, reach, findings, edges, edge_sites)
+
+        # lock-order cycles across the whole project
+        for a, b in self._cycle_edges(edges):
+            fi, site = edge_sites[(a, b)]
+            findings.append(_finding(
+                self.id, fi, site,
+                f"lock-order cycle: '{a}' is held while acquiring '{b}' "
+                f"and elsewhere the reverse; pick one global order"))
+        return findings
+
+    # -- project scans ----------------------------------------------------
+
+    @staticmethod
+    def _direct_awaiters(project: Project) -> Set[str]:
+        out: Set[str] = set()
+        for qual, fi in project.functions.items():
+            for node in ast.walk(fi.node):
+                if isinstance(node, ast.Call) and \
+                        isinstance(node.func, ast.Attribute) and \
+                        node.func.attr == "result":
+                    out.add(qual)
+                    break
+        return out
+
+    @staticmethod
+    def _lock_names(stmt: ast.stmt, suffix: str) -> List[str]:
+        names = []
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                path = dotted_path(item.context_expr)
+                if path is not None and \
+                        last_component(path).endswith(suffix):
+                    names.append(last_component(path))
+        return names
+
+    def _direct_acquires(self, project: Project,
+                         suffix: str) -> Dict[str, Set[str]]:
+        out: Dict[str, Set[str]] = {}
+        for qual, fi in project.functions.items():
+            got: Set[str] = set()
+            for node in ast.walk(fi.node):
+                if isinstance(node, (ast.With, ast.AsyncWith)):
+                    got.update(self._lock_names(node, suffix))
+            if got:
+                out[qual] = got
+        return out
+
+    def _scan(self, project: Project, fi: FunctionInfo,
+              body: List[ast.stmt], held: List[str], suffix: str,
+              awaiting: Set[str], acquires: Dict[str, Set[str]],
+              reach, findings: List[Finding],
+              edges: Dict[str, Set[str]], edge_sites: Dict) -> None:
+        for stmt in body:
+            locks = self._lock_names(stmt, suffix)
+            if locks:
+                for new in locks:
+                    for h in held:
+                        if h == new:
+                            findings.append(_finding(
+                                self.id, fi, stmt,
+                                f"re-acquisition of non-reentrant lock "
+                                f"'{new}' while already held"))
+                        else:
+                            edges.setdefault(h, set()).add(new)
+                            edge_sites.setdefault((h, new), (fi, stmt))
+                self._scan(project, fi, stmt.body, held + locks, suffix,
+                           awaiting, acquires, reach, findings, edges,
+                           edge_sites)
+                continue
+            if held:
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    if isinstance(node.func, ast.Attribute) and \
+                            node.func.attr == "result":
+                        findings.append(_finding(
+                            self.id, fi, node,
+                            f"future awaited while holding "
+                            f"'{held[-1]}'; await copy deps before "
+                            f"taking the pool lock"))
+                        continue
+                    for callee in project.resolve_call(node, fi.module, fi):
+                        r = reach(callee.qualname)
+                        waits = r & awaiting
+                        if waits:
+                            findings.append(_finding(
+                                self.id, fi, node,
+                                f"call to {last_component(callee.qualname)} "
+                                f"awaits a future "
+                                f"({last_component(sorted(waits)[0])}) "
+                                f"while '{held[-1]}' is held"))
+                        for acq_qual in r:
+                            for lock in acquires.get(acq_qual, ()):  #
+                                if lock in held:
+                                    findings.append(_finding(
+                                        self.id, fi, node,
+                                        f"call path into "
+                                        f"{last_component(acq_qual)} "
+                                        f"re-acquires '{lock}' already "
+                                        f"held here"))
+                                else:
+                                    for h in held:
+                                        edges.setdefault(h, set()).add(lock)
+                                        edge_sites.setdefault(
+                                            (h, lock), (fi, node))
+            # recurse into nested blocks with the same held set
+            for sub in self._sub_bodies(stmt):
+                self._scan(project, fi, sub, held, suffix, awaiting,
+                           acquires, reach, findings, edges, edge_sites)
+
+    @staticmethod
+    def _sub_bodies(stmt: ast.stmt) -> List[List[ast.stmt]]:
+        out = []
+        for attr in ("body", "orelse", "finalbody"):
+            sub = getattr(stmt, attr, None)
+            if isinstance(sub, list) and sub and \
+                    isinstance(sub[0], ast.stmt):
+                out.append(sub)
+        for h in getattr(stmt, "handlers", []) or []:
+            out.append(h.body)
+        return out
+
+    @staticmethod
+    def _cycle_edges(edges: Dict[str, Set[str]]) -> List[Tuple[str, str]]:
+        out = []
+        for a, succs in edges.items():
+            for b in succs:
+                if a in edges.get(b, set()):
+                    out.append((a, b))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# FS006 — un-donated whole-pool write
+# ---------------------------------------------------------------------------
+
+class UndonatedPoolWrite(Rule):
+    id = "FS006"
+    title = "undonated-pool-write"
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        traced = project.reachable_from(project.jit_specs.keys())
+        for qual, fi in project.functions.items():
+            if qual in project.jit_specs or qual in traced:
+                continue  # inside-trace updates are donated by the jit
+            for node in ast.walk(fi.node):
+                pool = self._pool_at_set(node, project)
+                if pool is not None:
+                    findings.append(_finding(
+                        self.id, fi, node,
+                        f"un-donated functional update of pool '{pool}' "
+                        f"copies the entire pool; route through the "
+                        f"staged/donating swap path"))
+        return findings
+
+    @staticmethod
+    def _pool_at_set(node: ast.AST, project: Project) -> Optional[str]:
+        # matches <pool>.at[...].set(...)/.add(...) etc. outside jit
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("set", "add", "mul", "max", "min")):
+            return None
+        sub = node.func.value
+        if not isinstance(sub, ast.Subscript):
+            return None
+        at = sub.value
+        if not (isinstance(at, ast.Attribute) and at.attr == "at"):
+            return None
+        base = dotted_path(at.value)
+        if base is not None and \
+                last_component(base) in project.config.pool_attr_names:
+            return base
+        return None
+
+
+ALL_RULES: Tuple[type, ...] = (
+    UseAfterDonate, JitVariantBudget, HostSyncInHotPath,
+    SwapThreadDiscipline, LockDiscipline, UndonatedPoolWrite,
+)
+
+
+def make_rules(only: Optional[Tuple[str, ...]] = None) -> List[Rule]:
+    rules = [cls() for cls in ALL_RULES]
+    if only:
+        rules = [r for r in rules if r.id in only]
+    return rules

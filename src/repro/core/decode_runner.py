@@ -185,6 +185,7 @@ class DecodeRunner:
             return
         rows_hist, nxt = self._pending
         self._pending = None
+        # fslint: disable=FS003(the deferred-sync point: ONE batched d2h pull per step, by design)
         vals = np.asarray(nxt)
         self.stats.host_syncs += 1
         for row, hist in rows_hist:
@@ -215,6 +216,7 @@ class DecodeRunner:
             bt[i, :len(ids)] = ids
             ctx[i] = self._row_ctx[i]
             tok[i] = v.token_history[-1]
+            # fslint: disable=FS003(rebuild-time row-key pull, a few bytes outside the steady-state step)
             keys[i] = np.asarray(self._row_key(v.rid))
             act[i] = True
         self._free = list(range(len(views), batch_bucket))
@@ -516,6 +518,7 @@ class DecodeRunner:
         tok = sample_tokens(st.last_logits[None, :], first_key[None, :],
                             jnp.asarray([len(hist)], jnp.int32),
                             self._temp, self._top_k, self._top_p)
+        # fslint: disable=FS003(first-token emit must sync: the token gates scheduling and streaming)
         hist.append(int(tok[0]))
         st.emitted = True
 

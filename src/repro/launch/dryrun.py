@@ -123,6 +123,58 @@ def run_serving_case(arch: str) -> dict:
             "decode_jit_variants": DecodeRunner.jit_cache_size()}
 
 
+def run_jit_audit(arch: str) -> dict:
+    """Runtime cross-check of fslint's FS002 jit-variant budget
+    (DESIGN.md §8): run the static pass to get the degrees-of-freedom
+    table for every hot jitted function, run the serving compile smoke,
+    then compare the LIVE jit-cache sizes against the static upper
+    bound ``(log2(max_tokens) + 2) ** max(degrees, 2)``.  A runtime
+    count above the bound means shapes reached a jitted hot function
+    without pow2 bucketing — a cache explosion neither the linter (it
+    only sees static routes) nor the smoke (it only sees counts) can
+    prove alone."""
+    from pathlib import Path
+
+    from repro.analysis.driver import AnalysisResult, jit_budget
+    from repro.core import DecodeRunner
+    from repro.kernels import ops
+
+    src_root = Path(__file__).resolve().parents[2]   # .../src
+    degrees = jit_budget([str(src_root / "repro")],
+                         repo_root=str(src_root.parent))
+    serving = run_serving_case(arch)
+    if serving["status"] != "ok":
+        return {"arch": arch, "case": "jit-audit", "status": "FAIL",
+                "reason": f"serving smoke {serving['status']}", **serving}
+
+    # the smoke's pool budget: EngineConfig(num_gpu_blocks=64) * block 16
+    max_tokens = 64 * 16
+    metrics = {
+        "models.paged.paged_decode_step_device":
+            DecodeRunner.jit_cache_size(),
+        "kernels.ops._gather_swap": ops.swap_gather_cache_size(),
+        "kernels.ops._scatter_swap": ops.swap_scatter_cache_size(),
+        "kernels.ops._insert_prefill": ops.insert_prefill_cache_size(),
+        "models.paged.prefill_kv_chunk": ops.prefill_chunk_cache_size(),
+    }
+    rows = {}
+    violations = []
+    for suffix, live in metrics.items():
+        d = max((deg for qual, deg in degrees.items()
+                 if qual.endswith(suffix)), default=0)
+        bound = AnalysisResult.variant_bound(d, max_tokens)
+        rows[suffix] = {"live_variants": live, "static_degrees": d,
+                        "bound": bound}
+        if live > bound:
+            violations.append(f"{suffix}: {live} > {bound}")
+    return {"arch": arch, "case": "jit-audit",
+            "status": "FAIL" if violations else "ok",
+            "max_tokens": max_tokens,
+            "functions": rows,
+            "violations": violations,
+            "t_total_s": serving.get("t_total_s")}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", action="append", default=None,
@@ -139,6 +191,10 @@ def main() -> int:
     ap.add_argument("--serving", action="store_true",
                     help="also dry-run the online serving hot path "
                          "(ServingEngine add_request/step/abort)")
+    ap.add_argument("--audit-jit", action="store_true",
+                    help="compare live jit-variant counts after the "
+                         "serving compile smoke against fslint FS002's "
+                         "static bounds; fail on any excess")
     args = ap.parse_args()
 
     archs = args.arch or (list_archs() if args.all else ["qwen2-1.5b"])
@@ -148,6 +204,23 @@ def main() -> int:
 
     results = []
     n_fail = 0
+    if args.audit_jit:
+        for arch in archs:
+            r = run_jit_audit(arch)
+            results.append(r)
+            if r["status"] == "FAIL":
+                n_fail += 1
+            print(f"{r['status']:4s} {arch} x jit-audit "
+                  + json.dumps({k: v for k, v in r.items()
+                                if k in ("functions", "violations")}),
+                  flush=True)
+        if not (args.serving or args.all or args.arch or args.shape):
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                print(f"wrote {args.out}")
+            return 1 if n_fail else 0
     if args.serving:
         for arch in archs:
             r = run_serving_case(arch)

@@ -1,0 +1,695 @@
+"""fslint (src/repro/analysis) — fixture-driven rule tests.
+
+Each rule gets a positive (planted violation detected), a negative
+(disciplined code stays clean), and a suppressed variant (inline
+disable honoured).  Plus: baseline round-trip, malformed-suppression
+reporting, the CLI json contract, and a self-run over ``src/repro``
+asserting the shipped tree carries zero non-baselined findings (the
+tier-1 CI gate).
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import Config, run_analysis
+from repro.analysis.baseline import Baseline
+from repro.analysis.core import parse_suppressions
+from repro.analysis.driver import AnalysisResult
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run(tmp_path, sources, rules=None):
+    for name, text in sources.items():
+        (tmp_path / name).write_text(text, encoding="utf-8")
+    cfg = Config(rules=tuple(rules) if rules else None)
+    return run_analysis([str(tmp_path)], cfg, repo_root=str(tmp_path))
+
+
+def _rules_of(result):
+    return sorted({f.rule for f in result.findings})
+
+
+JIT_PRELUDE = """\
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def donate_step(pool, x):
+    return pool + x
+"""
+
+
+# ---------------------------------------------------------------------------
+# FS001 use-after-donate
+# ---------------------------------------------------------------------------
+
+class TestFS001:
+    def test_positive_read_after_donate(self, tmp_path):
+        res = _run(tmp_path, {"m.py": JIT_PRELUDE + """
+
+def bad(pool, x):
+    out = donate_step(pool, x)
+    return pool.sum() + out
+"""}, rules=["FS001"])
+        assert [f.rule for f in res.findings] == ["FS001"]
+        assert "'pool'" in res.findings[0].message
+
+    def test_positive_donate_in_loop_without_rebind(self, tmp_path):
+        res = _run(tmp_path, {"m.py": JIT_PRELUDE + """
+
+def bad_loop(pool, xs):
+    acc = None
+    for x in xs:
+        acc = donate_step(pool, x)
+    return acc
+"""}, rules=["FS001"])
+        assert [f.rule for f in res.findings] == ["FS001"]
+        assert "loop" in res.findings[0].message
+
+    def test_positive_through_wrapper_propagation(self, tmp_path):
+        res = _run(tmp_path, {"m.py": JIT_PRELUDE + """
+
+def wrapper(pool, x):
+    return donate_step(pool, x)
+
+
+def caller(pool, x):
+    y = wrapper(pool, x)
+    return pool * 2
+"""}, rules=["FS001"])
+        assert [f.rule for f in res.findings] == ["FS001"]
+        assert res.findings[0].qualname.endswith("caller")
+
+    def test_negative_rebind_and_return(self, tmp_path):
+        res = _run(tmp_path, {"m.py": JIT_PRELUDE + """
+
+def good(pool, x):
+    pool = donate_step(pool, x)
+    return pool
+
+
+def good_return(pool, x):
+    return donate_step(pool, x)
+
+
+def good_loop(pool, xs):
+    for x in xs:
+        pool = donate_step(pool, x)
+    return pool
+"""}, rules=["FS001"])
+        assert res.findings == []
+
+    def test_suppressed(self, tmp_path):
+        res = _run(tmp_path, {"m.py": JIT_PRELUDE + """
+
+def waived(pool, x):
+    out = donate_step(pool, x)
+    # fslint: disable=FS001(test fixture reads a donated buffer on purpose)
+    return pool.sum() + out
+"""}, rules=["FS001"])
+        assert res.findings == []
+        assert [f.rule for f in res.suppressed] == ["FS001"]
+
+
+# ---------------------------------------------------------------------------
+# FS002 jit-variant budget
+# ---------------------------------------------------------------------------
+
+FS002_PRELUDE = """\
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _next_pow2(n):
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def padded(x, n):
+    return x[:n]
+"""
+
+
+class TestFS002:
+    def test_positive_unbucketed_static_arg(self, tmp_path):
+        res = _run(tmp_path, {"m.py": FS002_PRELUDE + """
+
+def decode(items):
+    return padded(jnp.zeros((4,)), n=len(items))
+"""}, rules=["FS002"])
+        assert [f.rule for f in res.findings] == ["FS002"]
+        assert "static arg 'n'" in res.findings[0].message
+
+    def test_positive_unbucketed_traced_shape(self, tmp_path):
+        res = _run(tmp_path, {"m.py": FS002_PRELUDE + """
+
+def step(items):
+    return padded(jnp.zeros((len(items),)), n=4)
+"""}, rules=["FS002"])
+        assert [f.rule for f in res.findings] == ["FS002"]
+        assert "traced array arg" in res.findings[0].message
+
+    def test_negative_bucketed(self, tmp_path):
+        res = _run(tmp_path, {"m.py": FS002_PRELUDE + """
+
+def step(items):
+    n = max(_next_pow2(len(items)), 4)
+    return padded(jnp.zeros((n,)), n=n)
+"""}, rules=["FS002"])
+        assert res.findings == []
+
+    def test_cold_path_not_checked(self, tmp_path):
+        # only hot-path-reachable call sites are budget-checked
+        res = _run(tmp_path, {"m.py": FS002_PRELUDE + """
+
+def offline_eval(items):
+    return padded(jnp.zeros((4,)), n=len(items))
+"""}, rules=["FS002"])
+        assert res.findings == []
+
+    def test_degrees_reported_for_audit(self, tmp_path):
+        res = _run(tmp_path, {"m.py": FS002_PRELUDE + """
+
+def step(items):
+    n = _next_pow2(len(items))
+    return padded(jnp.zeros((n,)), n=n)
+"""}, rules=["FS002"])
+        (qual, deg), = res.jit_degrees.items()
+        assert qual.endswith("padded") and deg == 1
+
+    def test_suppressed(self, tmp_path):
+        res = _run(tmp_path, {"m.py": FS002_PRELUDE + """
+
+def step(items):
+    # fslint: disable=FS002(bounded offline batch, at most 3 variants)
+    return padded(jnp.zeros((4,)), n=len(items))
+"""}, rules=["FS002"])
+        assert res.findings == []
+        assert [f.rule for f in res.suppressed] == ["FS002"]
+
+
+# ---------------------------------------------------------------------------
+# FS003 host sync in hot path
+# ---------------------------------------------------------------------------
+
+class TestFS003:
+    def test_positive_np_asarray_on_device(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import numpy as np
+import jax.numpy as jnp
+
+
+def step(xs):
+    dev = jnp.asarray(xs) * 2
+    return np.asarray(dev)[0]
+"""}, rules=["FS003"])
+        assert [f.rule for f in res.findings] == ["FS003"]
+        assert "np.asarray" in res.findings[0].message
+
+    def test_positive_int_item_and_branch(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import jax.numpy as jnp
+
+
+def step(xs):
+    dev = jnp.sum(jnp.asarray(xs))
+    a = int(dev)
+    b = dev.item()
+    if dev > 0:
+        a += 1
+    return a + b
+"""}, rules=["FS003"])
+        kinds = sorted(f.message.split(" ")[0] for f in res.findings)
+        assert len(res.findings) == 3
+        assert any("int()" in f.message for f in res.findings), kinds
+        assert any(".item()" in f.message for f in res.findings)
+        assert any("branching" in f.message for f in res.findings)
+
+    def test_positive_device_attr_ring_buffer(self, tmp_path):
+        # device values parked in a container attribute keep their
+        # taint when read back in a later step (deferred-sync pattern)
+        res = _run(tmp_path, {"m.py": """\
+import numpy as np
+import jax.numpy as jnp
+
+
+class Runner:
+    def __init__(self):
+        self._pending = []
+
+    def decode(self, xs):
+        nxt = jnp.asarray(xs) + 1
+        self._pending.append(nxt)
+
+    def step(self):
+        for nxt in self._pending:
+            print(np.asarray(nxt))
+        if not self._pending:      # host len check: NOT a sync
+            return
+"""}, rules=["FS003"])
+        assert [f.rule for f in res.findings] == ["FS003"]
+
+    def test_negative_host_values_and_cold_path(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import numpy as np
+import jax.numpy as jnp
+
+
+def step(xs):
+    host = np.asarray(xs)          # unknown input: no device taint
+    return int(host[0])
+
+
+def offline(xs):
+    dev = jnp.asarray(xs)
+    return np.asarray(dev)         # not reachable from a hot root
+"""}, rules=["FS003"])
+        assert res.findings == []
+
+    def test_allowlisted_staged_sync_point(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import jax
+import jax.numpy as jnp
+
+
+class PagedPools:
+    def copy_in_staged(self, blocks):
+        self.gpu = jnp.asarray(blocks)
+        jax.block_until_ready(self.gpu)
+
+
+def step(pools, blocks):
+    pools.copy_in_staged(blocks)
+"""}, rules=["FS003"])
+        assert res.findings == []
+
+    def test_suppressed(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import numpy as np
+import jax.numpy as jnp
+
+
+def step(xs):
+    dev = jnp.asarray(xs) * 2
+    # fslint: disable=FS003(documented deferred sync point)
+    return np.asarray(dev)[0]
+"""}, rules=["FS003"])
+        assert res.findings == []
+        assert [f.rule for f in res.suppressed] == ["FS003"]
+
+
+# ---------------------------------------------------------------------------
+# FS004 swap-plane thread discipline
+# ---------------------------------------------------------------------------
+
+FS004_COMMON = """\
+import functools
+
+import jax
+from concurrent.futures import ThreadPoolExecutor
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter(pool, x):
+    return pool
+
+
+class Pools:
+    def copy_in_staged(self, blocks):
+        self.gpu = scatter(self.gpu, blocks)
+
+    def copy_out_staged(self, blocks):
+        return list(blocks)
+
+
+def make_task(pools, task, direction):
+    if direction == "out":
+        copy_fn = lambda: pools.copy_out_staged([1])
+    else:
+        copy_fn = lambda: pools.copy_in_staged([1])
+    task.copy_fn = copy_fn
+    return task
+"""
+
+
+class TestFS004:
+    def test_positive_unguarded_submit(self, tmp_path):
+        res = _run(tmp_path, {"m.py": FS004_COMMON + """
+
+class Manager:
+    def __init__(self):
+        self._executor = ThreadPoolExecutor(1)
+
+    def dispatch(self, task, direction):
+        task.future = self._executor.submit(self._run, task)
+
+    def _run(self, task):
+        task.copy_fn()
+"""}, rules=["FS004"])
+        assert [f.rule for f in res.findings] == ["FS004"]
+        assert "copy_in_staged" in res.findings[0].message
+
+    def test_negative_direction_guarded_submit(self, tmp_path):
+        res = _run(tmp_path, {"m.py": FS004_COMMON + """
+
+class Manager:
+    def __init__(self):
+        self._executor = ThreadPoolExecutor(1)
+
+    def dispatch(self, task, direction, asynchronous):
+        if asynchronous and direction == "out":
+            task.future = self._executor.submit(self._run, task)
+        else:
+            self._run(task)
+
+    def _run(self, task):
+        task.copy_fn()
+"""}, rules=["FS004"])
+        assert res.findings == []
+
+    def test_suppressed(self, tmp_path):
+        res = _run(tmp_path, {"m.py": FS004_COMMON + """
+
+class Manager:
+    def __init__(self):
+        self._executor = ThreadPoolExecutor(1)
+
+    def dispatch(self, task, direction):
+        # fslint: disable=FS004(single-threaded executor used as a queue)
+        task.future = self._executor.submit(self._run, task)
+
+    def _run(self, task):
+        task.copy_fn()
+"""}, rules=["FS004"])
+        assert res.findings == []
+        assert [f.rule for f in res.suppressed] == ["FS004"]
+
+
+# ---------------------------------------------------------------------------
+# FS005 lock discipline
+# ---------------------------------------------------------------------------
+
+class TestFS005:
+    def test_positive_await_under_lock(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import threading
+
+
+class M:
+    def __init__(self):
+        self._pool_lock = threading.Lock()
+
+    def bad(self, task):
+        with self._pool_lock:
+            task.future.result()
+"""}, rules=["FS005"])
+        assert [f.rule for f in res.findings] == ["FS005"]
+        assert "_pool_lock" in res.findings[0].message
+
+    def test_positive_transitive_await_under_lock(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import threading
+
+
+class M:
+    def __init__(self):
+        self._pool_lock = threading.Lock()
+
+    def waiter(self, task):
+        task.future.result()
+
+    def bad(self, task):
+        with self._pool_lock:
+            self.waiter(task)
+"""}, rules=["FS005"])
+        assert len(res.findings) == 1
+        assert "awaits a future" in res.findings[0].message
+
+    def test_positive_lock_order_cycle(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import threading
+
+
+class M:
+    def __init__(self):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+
+    def f1(self):
+        with self._a_lock:
+            with self._b_lock:
+                pass
+
+    def f2(self):
+        with self._b_lock:
+            with self._a_lock:
+                pass
+"""}, rules=["FS005"])
+        assert res.findings and \
+            all("cycle" in f.message for f in res.findings)
+
+    def test_negative_await_before_lock(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import threading
+
+
+class M:
+    def __init__(self):
+        self._pool_lock = threading.Lock()
+
+    def good(self, task, deps):
+        for d in deps:
+            d.result()
+        with self._pool_lock:
+            task.run()
+"""}, rules=["FS005"])
+        assert res.findings == []
+
+    def test_suppressed(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import threading
+
+
+class M:
+    def __init__(self):
+        self._pool_lock = threading.Lock()
+
+    def waived(self, task):
+        with self._pool_lock:
+            # fslint: disable=FS005(future is already done at this point)
+            task.future.result()
+"""}, rules=["FS005"])
+        assert res.findings == []
+        assert [f.rule for f in res.suppressed] == ["FS005"]
+
+
+# ---------------------------------------------------------------------------
+# FS006 un-donated pool write
+# ---------------------------------------------------------------------------
+
+class TestFS006:
+    def test_positive_whole_pool_at_set(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import jax.numpy as jnp
+
+
+class P:
+    def copy_in(self, data, blocks):
+        self.gpu = self.gpu.at[:, blocks].set(data)
+"""}, rules=["FS006"])
+        assert [f.rule for f in res.findings] == ["FS006"]
+
+    def test_negative_inside_jit_and_non_pool(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def update(pool, x):
+    return pool.at[0].set(x)
+
+
+def helper(pool, x):
+    return pool.at[0].set(x)      # reachable only from the jit body
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def outer(pool, x):
+    return helper(pool, x)
+
+
+def table_update(bt, rows, vals):
+    return bt.at[rows].set(vals)  # not a pool-named buffer
+"""}, rules=["FS006"])
+        assert res.findings == []
+
+    def test_suppressed(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import jax.numpy as jnp
+
+
+class P:
+    def write_debug(self, data, blocks):
+        # fslint: disable=FS006(host-side debug utility)
+        self.gpu = self.gpu.at[:, blocks].set(data)
+"""}, rules=["FS006"])
+        assert res.findings == []
+        assert [f.rule for f in res.suppressed] == ["FS006"]
+
+
+# ---------------------------------------------------------------------------
+# suppression parsing / FS000
+# ---------------------------------------------------------------------------
+
+class TestSuppressions:
+    def test_reason_required(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import numpy as np
+import jax.numpy as jnp
+
+
+def step(xs):
+    dev = jnp.asarray(xs)
+    # fslint: disable=FS003
+    return np.asarray(dev)
+"""})
+        rules = _rules_of(res)
+        assert "FS000" in rules          # malformed suppression reported
+        assert "FS003" in rules          # and the finding is NOT waived
+
+    def test_multi_clause_parsing(self):
+        sup = parse_suppressions(
+            "x = 1  # fslint: disable=FS001(a b), FS003(c)\n")
+        assert sup.by_line[1] == {"FS001": "a b", "FS003": "c"}
+        assert sup.covers(1, "FS001") and sup.covers(2, "FS003")
+        assert not sup.covers(1, "FS002") and not sup.covers(3, "FS001")
+
+    def test_fs000_cannot_be_disabled(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+# fslint: disable=FS000(nope)
+x = 1
+"""})
+        assert "FS000" in _rules_of(res)
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+class TestBaseline:
+    FIXTURE = {"m.py": """\
+import jax.numpy as jnp
+
+
+class P:
+    def copy_in(self, data, blocks):
+        self.gpu = self.gpu.at[:, blocks].set(data)
+"""}
+
+    def test_round_trip_and_stale(self, tmp_path):
+        res = _run(tmp_path, self.FIXTURE, rules=["FS006"])
+        assert len(res.findings) == 1
+
+        bl_path = tmp_path / "baseline.json"
+        bl = Baseline(bl_path)
+        bl.save(res.findings)
+
+        # reload: the finding is now grandfathered
+        bl2 = Baseline.load(bl_path)
+        new, known, stale = bl2.split(res.findings)
+        assert new == [] and len(known) == 1 and stale == []
+
+        # fingerprints survive line shifts (edits above the finding)
+        shifted = _run(tmp_path, {
+            "m.py": "# a new leading comment\n" + self.FIXTURE["m.py"]},
+            rules=["FS006"])
+        new, known, stale = bl2.split(shifted.findings)
+        assert new == [] and len(known) == 1 and stale == []
+
+        # fixing the violation leaves a prunable stale entry, not a gate
+        clean = _run(tmp_path, {"m.py": "x = 1\n"}, rules=["FS006"])
+        new, known, stale = bl2.split(clean.findings)
+        assert new == [] and known == [] and len(stale) == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI contract + self-run gate
+# ---------------------------------------------------------------------------
+
+def _cli(args, cwd):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd, env=env)
+
+
+class TestCLI:
+    def test_dirty_fixture_exits_1_with_json(self, tmp_path):
+        (tmp_path / "m.py").write_text(
+            "import jax.numpy as jnp\n\n\n"
+            "class P:\n"
+            "    def copy_in(self, d, b):\n"
+            "        self.gpu = self.gpu.at[:, b].set(d)\n",
+            encoding="utf-8")
+        proc = _cli(["m.py", "--format", "json", "--baseline",
+                     "absent.json"], cwd=tmp_path)
+        assert proc.returncode == 1, proc.stderr
+        payload = json.loads(proc.stdout)
+        assert payload["exit"] == 1
+        assert [f["rule"] for f in payload["new"]] == ["FS006"]
+
+    def test_clean_fixture_exits_0(self, tmp_path):
+        (tmp_path / "m.py").write_text("x = 1\n", encoding="utf-8")
+        proc = _cli(["m.py"], cwd=tmp_path)
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_unknown_rule_exits_2(self, tmp_path):
+        (tmp_path / "m.py").write_text("x = 1\n", encoding="utf-8")
+        proc = _cli(["m.py", "--rule", "FS999"], cwd=tmp_path)
+        assert proc.returncode == 2
+
+    def test_missing_path_exits_2(self, tmp_path):
+        proc = _cli(["does_not_exist_dir"], cwd=tmp_path)
+        assert proc.returncode == 2
+
+
+class TestSelfRun:
+    def test_shipped_tree_is_clean(self):
+        """The tier-1 gate: zero non-baselined findings on src/repro."""
+        res = run_analysis([str(REPO / "src" / "repro")],
+                           repo_root=str(REPO))
+        bl = Baseline.load(REPO / "fslint-baseline.json")
+        new, _known, _stale = bl.split(res.findings)
+        assert new == [], "\n".join(f.render() for f in new)
+
+    def test_real_tree_donation_registry_sane(self):
+        """The donation registry must keep seeing the real hot-path
+        chain — if these disappear, FS001/FS004 have gone blind."""
+        from repro.analysis.callgraph import Project
+        p = Project([REPO / "src" / "repro"], REPO, Config())
+        donated = set(p.donated_params)
+        for suffix in ("kernels.ops._scatter_swap",
+                       "models.paged.paged_decode_step_device",
+                       "core.decode_runner.DecodeRunner.decode",
+                       "core.decode_runner.DecodeRunner.prefill_insert"):
+            assert any(q.endswith(suffix) for q in donated), suffix
+
+    def test_variant_bound_shape(self):
+        assert AnalysisResult.variant_bound(0, 1024) == 13 ** 2
+        assert AnalysisResult.variant_bound(3, 1024) == 13 ** 3
+        assert AnalysisResult.variant_bound(2, 2048) == 14 ** 2
