@@ -25,7 +25,28 @@ CSV: name,us_per_call,derived  (derived = steps/s and compile counts).
 """
 import argparse
 import math
+import os
+import sys
 import time
+
+
+def _force_mesh_devices() -> None:
+    """``--mesh DxM`` needs D*M host devices, and XLA only honours
+    ``xla_force_host_platform_device_count`` BEFORE the first jax
+    import — so pre-scan argv here, above the jax import."""
+    for i, a in enumerate(sys.argv):
+        if a == "--mesh" or a.startswith("--mesh="):
+            v = a.split("=", 1)[1] if "=" in a else sys.argv[i + 1]
+            d, _, m = v.lower().partition("x")
+            n = int(d) * int(m)
+            flags = os.environ.get("XLA_FLAGS", "")
+            if n > 1 and "host_platform_device_count" not in flags:
+                os.environ["XLA_FLAGS"] = (
+                    f"{flags} --xla_force_host_platform_device_count={n}"
+                ).strip()
+
+
+_force_mesh_devices()
 
 import jax
 import jax.numpy as jnp
@@ -254,6 +275,50 @@ def run_online_overhead(smoke: bool):
          f"overhead_pct={(dt_replay / max(it_replay, 1) / (dt_direct / max(it, 1)) - 1) * 100:.1f}")
 
 
+def run_mesh_rows(args, mesh_shape) -> None:
+    """ISSUE 8 rows: runner-driven decode steps/s per mesh shape on a
+    uniformly shardable model (4 q / 4 kv heads).  Both shapes run in
+    THIS process (same forced-device env) so the @1x1 row is the
+    apples-to-apples no-regression reference, and their greedy token
+    histories are asserted bit-identical."""
+    import dataclasses
+    d, m = mesh_shape
+    cfg = dataclasses.replace(get_smoke_config("llama3.2-3b"),
+                              n_heads=4, n_kv_heads=4, head_dim=16,
+                              d_model=64, n_layers=2, d_ff=128,
+                              vocab_size=256)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    n_steps = 16 if args.smoke else 64
+    max_pages = n_steps // BS + 2
+    hists = {}
+    for shape in ((1, 1), (d, m)):
+        mesh = None if shape == (1, 1) else jax.make_mesh(
+            shape, ("data", "model"))
+        nb = max_pages + 2
+        pool = jnp.zeros((cfg.n_layers, 2, nb, BS, cfg.n_kv_heads,
+                          cfg.resolved_head_dim), jnp.bfloat16)
+        if mesh is not None:
+            from repro.models.sharding import pool_pspec
+            pool = jax.device_put(
+                pool, jax.sharding.NamedSharding(mesh, pool_pspec()))
+        runner = DecodeRunner({"cfg": cfg, "params": params},
+                              block_size=BS, trash_block=nb - 1, mesh=mesh)
+        hist = [1]
+        c0 = DecodeRunner.jit_cache_size()
+        t0 = time.perf_counter()
+        for ctx in range(n_steps):
+            pool = runner.decode(
+                [DecodeRequestView(0, _blocks_for(ctx), hist)], pool)
+        runner.flush()
+        dt = time.perf_counter() - t0
+        hists[shape] = list(hist)
+        emit(f"decode_hotpath@{shape[0]}x{shape[1]}", dt / n_steps * 1e6,
+             f"steps_s={n_steps / dt:.2f};shards={1 if mesh is None else m}"
+             f";compiles={DecodeRunner.jit_cache_size() - c0}")
+    assert hists[(1, 1)] == hists[(d, m)], \
+        "mesh decode diverged from single-device greedy history"
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -261,9 +326,19 @@ def main() -> None:
     ap.add_argument("--json-out", default=None,
                     help="also write the rows as a JSON artifact "
                          "(BENCH_decode_hotpath.json in CI)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="emit ONLY the mesh-sharded decode rows for this "
+                         "(data, model) shape (plus the in-process 1x1 "
+                         "reference); forces D*M host devices itself")
     # parse_known_args: benchmarks/run.py invokes main() with its own
     # positional selectors still in sys.argv
     args, _ = ap.parse_known_args()
+    if args.mesh:
+        d, _, m = args.mesh.lower().partition("x")
+        run_mesh_rows(args, (int(d), int(m)))
+        if args.json_out:
+            write_bench_json(args.json_out, "decode_hotpath", args.smoke)
+        return
     max_pages = 4 if args.smoke else 10
     n_steps = max_pages * BS - 2
     bound = math.ceil(math.log2(max_pages)) + 1

@@ -25,7 +25,28 @@ buffer update per grid step, a cost that grows with pool size and does
 not exist on real TPUs where each run is one streaming DMA chain.
 """
 import argparse
+import os
+import sys
 import time
+
+
+def _force_mesh_devices() -> None:
+    """``--mesh DxM`` needs D*M host devices, and XLA only honours
+    ``xla_force_host_platform_device_count`` BEFORE the first jax
+    import — so pre-scan argv here, above the jax import."""
+    for i, a in enumerate(sys.argv):
+        if a == "--mesh" or a.startswith("--mesh="):
+            v = a.split("=", 1)[1] if "=" in a else sys.argv[i + 1]
+            d, _, m = v.lower().partition("x")
+            n = int(d) * int(m)
+            flags = os.environ.get("XLA_FLAGS", "")
+            if n > 1 and "host_platform_device_count" not in flags:
+                os.environ["XLA_FLAGS"] = (
+                    f"{flags} --xla_force_host_platform_device_count={n}"
+                ).strip()
+
+
+_force_mesh_devices()
 
 import jax
 import jax.numpy as jnp
@@ -41,12 +62,14 @@ from repro.kernels import ops
 from repro.kernels.block_copy import runs_to_indices
 
 
-def _mk_pools(num_blocks):
-    spec = PoolSpec(n_layers=2, n_kv_heads=2, head_dim=16, block_size=16,
-                    num_gpu_blocks=num_blocks, num_cpu_blocks=num_blocks)
-    pools = PagedPools(spec)
+def _mk_pools(num_blocks, n_kv_heads=2, mesh=None):
+    spec = PoolSpec(n_layers=2, n_kv_heads=n_kv_heads, head_dim=16,
+                    block_size=16, num_gpu_blocks=num_blocks,
+                    num_cpu_blocks=num_blocks)
+    pools = PagedPools(spec, mesh=mesh)
     key = jax.random.PRNGKey(0)
-    pools.gpu = jax.random.normal(key, pools.gpu.shape).astype(jnp.bfloat16)
+    data = jax.random.normal(key, pools.gpu.shape).astype(jnp.bfloat16)
+    pools.gpu = jax.device_put(data, pools.gpu.sharding)
     return pools, spec
 
 
@@ -87,6 +110,38 @@ def _time(fn, iters):
     return (time.perf_counter() - t0) / iters
 
 
+def run_mesh_rows(args, mesh_shape) -> None:
+    """ISSUE 8 rows: the staged swap leg per mesh shape — per-shard slabs
+    keep it ONE run-coalesced gather/scatter + one host transfer per
+    chunk PER SHARD (each 1/n_shards the bytes).  Both shapes run in
+    THIS process (same forced-device env) so the @1x1 row is the
+    apples-to-apples no-regression reference for the sharded row."""
+    d, m = mesh_shape
+    n_runs, run_len = (2, 4) if args.smoke else (4, 16)
+    iters = 2 if args.smoke else 3
+    num_blocks = 64 if args.smoke else 512
+    for shape in ((1, 1), (d, m)):
+        mesh = None if shape == (1, 1) else jax.make_mesh(
+            shape, ("data", "model"))
+        # n_kv_heads divisible by the model axis (4-way needs 4 heads)
+        pools, spec = _mk_pools(num_blocks, n_kv_heads=max(4, shape[1]),
+                                mesh=mesh)
+        runs = [(i * run_len * 2, run_len) for i in range(n_runs)]
+        blocks = runs_to_indices(runs)
+        cpu_ids = list(range(len(blocks)))
+        snap = np.asarray(pools.gpu)
+        t = _time(lambda: swap_staged(pools, runs, cpu_ids), iters)
+        np.testing.assert_array_equal(np.asarray(pools.gpu), snap)
+        chunks = pools.staged_out_calls
+        emit(f"swap_staged@{shape[0]}x{shape[1]}", t * 1e6,
+             f"blocks={len(blocks)};shards={pools.n_shards}"
+             f";d2h_per_chunk={pools.d2h_transfers // chunks}"
+             f";h2d_per_chunk={pools.h2d_transfers // chunks}"
+             f";bytes={2 * len(blocks) * spec.block_bytes()}")
+        assert pools.d2h_transfers == pools.n_shards * chunks
+        assert pools.h2d_transfers == pools.n_shards * pools.staged_in_calls
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -94,7 +149,17 @@ def main() -> None:
     ap.add_argument("--json-out", default=None,
                     help="also write the rows as a JSON artifact "
                          "(BENCH_swap_path.json in CI)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="emit ONLY the mesh-sharded staged rows for this "
+                         "(data, model) shape (plus the in-process 1x1 "
+                         "reference); forces D*M host devices itself")
     args, _ = ap.parse_known_args()
+    if args.mesh:
+        d, _, m = args.mesh.lower().partition("x")
+        run_mesh_rows(args, (int(d), int(m)))
+        if args.json_out:
+            write_bench_json(args.json_out, "swap_path", args.smoke)
+        return
     n_runs, run_len = (2, 4) if args.smoke else (4, 16)
     iters = 2 if args.smoke else 3
     # pool much larger than the swapped set, as in serving: the baselines'

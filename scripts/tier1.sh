@@ -27,6 +27,15 @@ python benchmarks/decode_hotpath.py --smoke \
     --json-out /tmp/BENCH_decode_hotpath.json
 python benchmarks/swap_path.py --smoke \
     --json-out /tmp/BENCH_swap_path.json
+# mesh-sharded rows (ISSUE 8, multi-device CPU): each bench re-invokes
+# with a forced 4-device host (--mesh sets XLA_FLAGS itself, pre-import)
+# and MERGES its @1x1/@1x4 rows into the same artifact — the @1x1 row is
+# the in-process no-regression reference for the sharded row, and the
+# 4-way engine bit-parity tests run under pytest (tests/test_mesh_*)
+python benchmarks/decode_hotpath.py --smoke --mesh 1x4 \
+    --json-out /tmp/BENCH_decode_hotpath.json
+python benchmarks/swap_path.py --smoke --mesh 1x4 \
+    --json-out /tmp/BENCH_swap_path.json
 # online serving-API smoke (ISSUE 5): open-world add_request/step replay
 # with cancellations, sim + real, asserting the JSONL event log is
 # well-formed and the SLO attainment records populate

@@ -73,6 +73,33 @@ def _is_jax_jit(node: ast.expr) -> bool:
     return name in ("jax.jit", "jit")
 
 
+# SPMD wrappers that preserve the wrapped function's signature: a
+# ``jax.jit(shard_map(f, ...), donate_argnums=...)`` site donates f's
+# params exactly like ``jax.jit(f, ...)`` would, so the indexer must
+# see through them or every mesh-sharded step shows up as an undonated
+# unbucketed hot-path jit (false FS001/FS002/FS006).
+_SPMD_WRAPPERS = ("shard_map", "jax.experimental.shard_map.shard_map",
+                  "shmap", "pjit", "jax.experimental.pjit.pjit")
+
+
+def _unwrap_jit_target(node: ast.expr) -> Optional[str]:
+    """Dotted name of the function a jit call-form ultimately wraps.
+
+    Sees through signature-preserving SPMD wrappers (``shard_map``,
+    ``pjit``) and ``functools.partial`` so assignment-style specs like
+    ``g = jax.jit(shard_map(f, mesh=..., out_specs=...), ...)`` map the
+    alias ``g`` back onto ``f``'s def (param names then resolve for
+    donation/bucketing facts).  None when the target is dynamic."""
+    from repro.analysis.astutil import dotted_path
+    if isinstance(node, (ast.Name, ast.Attribute)):
+        return dotted_path(node)
+    if isinstance(node, ast.Call) and node.args:
+        callee = call_name(node)
+        if callee in _SPMD_WRAPPERS + ("functools.partial", "partial"):
+            return _unwrap_jit_target(node.args[0])
+    return None
+
+
 def parse_jit_decorator(dec: ast.expr) -> Optional[Tuple[Tuple[str, ...],
                                                          Tuple[int, ...]]]:
     """(static_argnames, donate_argnums) if ``dec`` is a jax.jit
@@ -126,6 +153,11 @@ class Project:
                 self.by_bare_name.setdefault(fi.name, []).append(fi)
 
         self.jit_specs: Dict[str, JitSpec] = {}
+        # assignment-style alias qual -> the def it wraps (possibly
+        # through shard_map/pjit/partial); _build_edges links the two so
+        # reachable_from(jit_specs) covers the wrapped body ("inside the
+        # trace" facts like FS006's donation exemption hold for it).
+        self._jit_alias_of: Dict[str, str] = {}
         self._index_jit_defs()
 
         # qualname -> donated param names (seeded from jit specs,
@@ -173,15 +205,23 @@ class Project:
                         qual = f"{mod.modname}.{tgt.id}"
                         self.jit_specs[qual] = JitSpec(qual, static, donate)
                         # map the alias onto the wrapped def so param
-                        # names resolve
+                        # names resolve — including through shard_map/
+                        # pjit/partial wrappers (signature-preserving)
                         if node.value.args:
-                            from repro.analysis.astutil import dotted_path
-                            wrapped = dotted_path(node.value.args[0])
+                            wrapped = _unwrap_jit_target(node.value.args[0])
                             if wrapped:
                                 src = mod.functions.get(
                                     f"{mod.modname}.{wrapped}")
                                 if src is not None:
                                     self.functions.setdefault(qual, src)
+                                    self._jit_alias_of[qual] = src.qualname
+                                    # rules look up facts by the qualname
+                                    # a call RESOLVES to — the wrapped
+                                    # def — so mirror the spec there
+                                    self.jit_specs.setdefault(
+                                        src.qualname,
+                                        JitSpec(src.qualname, static,
+                                                donate))
 
     def jit_spec_for(self, fi: FunctionInfo) -> Optional[JitSpec]:
         return self.jit_specs.get(fi.qualname)
@@ -256,6 +296,9 @@ class Project:
                 if sub_fi.node is not fi.node and \
                         sub_qual.startswith(qual + "."):
                     callees.add(sub_qual)
+            wrapped = self._jit_alias_of.get(qual)
+            if wrapped is not None:
+                callees.add(wrapped)
             self._edges[qual] = callees
 
     def callees(self, qual: str) -> Set[str]:

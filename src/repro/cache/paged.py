@@ -62,14 +62,39 @@ class PoolSpec:
 
 
 class PagedPools:
-    def __init__(self, spec: PoolSpec, with_data: bool = True):
+    def __init__(self, spec: PoolSpec, with_data: bool = True, mesh=None):
+        """``mesh``: a ("data", "model") jax mesh — the GPU pool's KV
+        head axis is then partitioned over ``model`` (NamedSharding,
+        DESIGN.md §9) and every staged swap runs per shard: the slab
+        stays head-sharded and the host link carries one transfer per
+        chunk PER SHARD.  A 1-device mesh is normalized to None — the
+        single-device data plane is byte-identical to the pre-mesh code
+        (and the sharded path degrades to it bit-exactly)."""
         self.spec = spec
         self.with_data = with_data
+        if mesh is not None and mesh.size == 1:
+            mesh = None
+        self.mesh = mesh
+        self.n_shards = 1 if mesh is None else int(mesh.shape["model"])
+        if mesh is not None:
+            assert spec.n_kv_heads % self.n_shards == 0, (
+                spec.n_kv_heads, self.n_shards)
+        # host-transfer accounting (asserted by the per-shard swap tests;
+        # each count is one device<->host hop — a sharded slab moves
+        # n_shards of them, each 1/n_shards the bytes)
+        self.d2h_transfers = 0
+        self.h2d_transfers = 0
+        self.staged_out_calls = 0
+        self.staged_in_calls = 0
         if with_data:
             s = spec
             self.gpu = jnp.zeros((s.n_layers, 2, s.num_gpu_blocks,
                                   s.block_size, s.n_kv_heads, s.head_dim),
                                  jnp.bfloat16)
+            if mesh is not None:
+                from repro.models.sharding import pool_pspec
+                self.gpu = jax.device_put(
+                    self.gpu, jax.sharding.NamedSharding(mesh, pool_pspec()))
             # bf16 bit pattern: uint16 halves host memory vs the old
             # float32 store and the staged d2h path copies bytes verbatim
             self.cpu = np.zeros((s.n_layers, 2, s.num_cpu_blocks,
@@ -119,9 +144,14 @@ class PagedPools:
         single vectorized store of the bf16 bit pattern."""
         if not self.with_data or not gpu_runs:
             return
-        slab, total = ops.gather_swap_runs(self.gpu, gpu_runs)
+        slab, total = ops.gather_swap_runs(self.gpu, gpu_runs,
+                                           mesh=self.mesh)
         assert total == len(cpu_blocks), (total, len(cpu_blocks))
-        host = np.asarray(slab[:, :total])           # ONE d2h (slab prefix)
+        # ONE d2h per shard (the slab prefix; head-sharded under a mesh)
+        sliced = slab[:, :total]
+        host = np.asarray(sliced)
+        self.staged_out_calls += 1
+        self.d2h_transfers += len(sliced.sharding.device_set)
         s = self.spec
         self.cpu[:, :, np.asarray(cpu_blocks)] = host.view(np.uint16).reshape(
             s.n_layers, 2, total, s.block_size, s.n_kv_heads, s.head_dim)
@@ -139,16 +169,26 @@ class PagedPools:
         total = sum(n for _, n in gpu_runs)
         assert total == len(cpu_blocks), (total, len(cpu_blocks))
         C = s.n_layers * 2
-        E = s.block_size * s.n_kv_heads * s.head_dim
         # zeros, not empty: the pow2 pad tail is masked off by the run
         # lengths, but it IS uploaded and streamed through the kernel —
         # uninitialized bytes decode to NaN/denormal bf16, which
         # measurably slows the copy (and earns nothing: one memset)
-        slab = np.zeros((C, ops.slab_bucket_blocks(total), E), np.uint16)
+        slab = np.zeros((C, ops.slab_bucket_blocks(total), s.block_size,
+                         s.n_kv_heads, s.head_dim), np.uint16)
         slab[:, :total] = self.cpu[:, :, np.asarray(cpu_blocks)].reshape(
-            C, total, E)
-        dev = jnp.asarray(slab.view(jnp.bfloat16))   # ONE h2d (bucketed slab)
-        self.gpu = ops.scatter_swap_runs(self.gpu, dev, gpu_runs)
+            C, total, s.block_size, s.n_kv_heads, s.head_dim)
+        # ONE h2d per shard (bucketed slab; head-sharded under a mesh)
+        if self.mesh is None:
+            dev = jnp.asarray(slab.view(jnp.bfloat16))
+        else:
+            from repro.models.sharding import slab_pspec
+            dev = jax.device_put(
+                slab.view(jnp.bfloat16),
+                jax.sharding.NamedSharding(self.mesh, slab_pspec()))
+        self.staged_in_calls += 1
+        self.h2d_transfers += len(dev.sharding.device_set)
+        self.gpu = ops.scatter_swap_runs(self.gpu, dev, gpu_runs,
+                                         mesh=self.mesh)
         # Materialize before the caller releases the pool lock: a swap
         # task's future completing must mean THE DATA IS RESIDENT
         # (step-1 promotes on it).  A lazy donated scatter escaping the

@@ -51,10 +51,17 @@ pipeline (DESIGN.md §3.5/§3.6):
   * **Device-side sampling** — temperature/top-k/top-p sampling is fused
     into the decode step with a per-row on-device array of base PRNG
     keys; the step folds the position in, so the random stream is a pure
-    function of (seed, rid, position).  The parameters are traced
-    scalars, so greedy (temperature 0, bit-exact argmax) and sampled
-    runs share one compiled variant and the deferred sync stays one
-    token array per step.
+    function of (seed, rid, position).  The parameters ride a PER-ROW
+    traced (B, 3) array maintained with the row state, so every request
+    carries its own ``SamplingParams`` while greedy (temperature 0,
+    bit-exact argmax) and sampled rows share one compiled variant per
+    bucket and the deferred sync stays one token array per step.
+  * **Mesh sharding** (DESIGN.md §9) — with a ``mesh`` the decode step,
+    chunked prefill and fused sampler run tensor-parallel under
+    ``shard_map``: q/k/v projections and the KV pool are head-sharded
+    over ``model``, head outputs are all-gathered (a pure concat) ahead
+    of the replicated output projection, and no float reduction ever
+    crosses shards — token streams are bit-identical to single-device.
 
 Row-occupancy invariant: a row is either *registered* (owned by a live
 request, block table = its pages) or *freed* (block table = trash page,
@@ -71,7 +78,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.models.paged import paged_decode_step_device, sample_tokens
+from repro.models.paged import (paged_decode_step_device,
+                                paged_decode_step_device_sharded,
+                                sample_tokens)
 
 
 def next_pow2(n: int) -> int:
@@ -84,6 +93,11 @@ class DecodeRequestView:
     rid: int
     block_ids: Sequence[int]       # GPU pages covering context+1 tokens
     token_history: List[int]       # shared list; flush() appends to it
+    # per-request (temperature, top_k, top_p); None = runner default.
+    # Rides the row state as one (3,) f32 slot of the (B, 3) sampling
+    # array the fused sampler traces — any mix of per-request configs
+    # shares ONE compiled variant per bucket.
+    sampling: Optional[Tuple[float, float, float]] = None
 
 
 @dataclass
@@ -121,16 +135,37 @@ class DecodeRunner:
     def __init__(self, model_bundle: dict, *, block_size: int,
                  trash_block: int, min_pages_bucket: int = 1,
                  temperature: float = 0.0, top_k: int = 0,
-                 top_p: float = 1.0, seed: int = 0):
+                 top_p: float = 1.0, seed: int = 0, mesh=None):
         self.mb = model_bundle
         self.bs = block_size
         self.trash = trash_block
         self._min_pages = max(1, min_pages_bucket)
-        # sampling config: traced scalars (uploaded once, never a new
-        # compiled variant) + the base PRNG key the per-row keys fold from
-        self._temp = jnp.float32(temperature)
-        self._top_k = jnp.int32(top_k)
-        self._top_p = jnp.float32(top_p)
+        # ``mesh``: a ("data", "model") jax mesh — the decode / prefill
+        # steps then run tensor-parallel under ``shard_map`` with the
+        # q/k/v projections and the KV pool head-sharded (DESIGN.md §9).
+        # A 1-device mesh is normalized to None: the single-device step
+        # is byte-identical to the pre-mesh code and the sharded path
+        # degrades to it bit-exactly.
+        if mesh is not None and mesh.size == 1:
+            mesh = None
+        self._mesh = mesh
+        self._params = model_bundle["params"]
+        if mesh is not None:
+            from repro.models.paged import shardable_heads
+            from repro.models.sharding import serving_param_pspecs
+            cfg = model_bundle["cfg"]
+            assert shardable_heads(cfg, mesh.shape["model"]), (
+                cfg.name, dict(mesh.shape))
+            self._params = jax.tree.map(
+                lambda x, s: jax.device_put(
+                    x, jax.sharding.NamedSharding(mesh, s)),
+                self._params, serving_param_pspecs(self._params))
+        # sampling config: the runner-wide default row of the per-row
+        # (B, 3) [temperature, top_k, top_p] array the fused sampler
+        # traces (values never force a compile — the shape follows the
+        # bucket), + the base PRNG key the per-row keys fold from
+        self._default_sampling = np.asarray(
+            [temperature, float(top_k), top_p], np.float32)
         self._base_key = jax.random.PRNGKey(seed)
         # bucket high-water marks (never shrink: shrinking would thrash
         # the jit cache for no memory win at these sizes)
@@ -147,6 +182,7 @@ class DecodeRunner:
         self._tok = None                              # (B,) int32
         self._keys = None                             # (B, 2) uint32
         self._active = None                           # (B,) bool
+        self._sampling = None                         # (B, 3) f32
         self._active_rows: frozenset = frozenset()
         # deferred next-token sync: ([(row, token_history)], device array)
         self._pending: Optional[Tuple[list, jnp.ndarray]] = None
@@ -171,6 +207,14 @@ class DecodeRunner:
         prefill first-token draw from the row's decode stream."""
         k = jax.random.fold_in(self._base_key, rid)
         return jax.random.fold_in(k, salt) if salt else k
+
+    def _row_sampling(self, view: DecodeRequestView) -> np.ndarray:
+        """The (3,) f32 [temperature, top_k, top_p] row for ``view`` —
+        its per-request override, or the runner default."""
+        if view.sampling is None:
+            return self._default_sampling
+        t, k, p = view.sampling
+        return np.asarray([t, float(k), p], np.float32)
 
     # ------------------------------------------------------------------
     # deferred host sync
@@ -208,6 +252,7 @@ class DecodeRunner:
         tok = np.zeros((batch_bucket,), np.int32)
         keys = np.zeros((batch_bucket, 2), np.uint32)
         act = np.zeros((batch_bucket,), bool)
+        smp = np.zeros((batch_bucket, 3), np.float32)
         for i, v in enumerate(views):
             ids = tuple(v.block_ids)
             self._rows[v.rid] = i
@@ -219,33 +264,38 @@ class DecodeRunner:
             # fslint: disable=FS003(rebuild-time row-key pull, a few bytes outside the steady-state step)
             keys[i] = np.asarray(self._row_key(v.rid))
             act[i] = True
+            smp[i] = self._row_sampling(v)
         self._free = list(range(len(views), batch_bucket))
         self._bt = jnp.asarray(bt)
         self._ctx = jnp.asarray(ctx)
         self._tok = jnp.asarray(tok)
         self._keys = jnp.asarray(keys)
         self._active = jnp.asarray(act)
+        self._sampling = jnp.asarray(smp)
         self._active_rows = frozenset(range(len(views)))
 
     def _scatter_rows(self, pending: Dict[int, Tuple[Tuple[int, ...],
                                                      Optional[int],
                                                      Optional[int],
+                                                     Optional[np.ndarray],
                                                      Optional[np.ndarray]]]
                       ) -> None:
-        """One batched device scatter for the changed rows.  Entry value is
-        (block_ids, ctx, tok, key_data); ctx/tok/key are None for rows
-        whose device counters are already right (block-table-only write)."""
+        """One batched device scatter for the changed rows.  Entry value
+        is (block_ids, ctx, tok, key_data, sampling_row); the trailing
+        four are None for rows whose device counters are already right
+        (block-table-only write)."""
         if not pending:
             return
         pb = self._pages_bucket
-        entries = [(r, ids, c, t, kd)
-                   for r, (ids, c, t, kd) in sorted(pending.items())]
+        entries = [(r, ids, c, t, kd, sr)
+                   for r, (ids, c, t, kd, sr) in sorted(pending.items())]
         rows = jnp.asarray([e[0] for e in entries], jnp.int32)
         btrows = np.full((len(entries), pb), self.trash, np.int32)
-        for j, (_, ids, _, _, _) in enumerate(entries):
+        for j, (_, ids, _, _, _, _) in enumerate(entries):
             btrows[j, :len(ids)] = ids
         self._bt = self._bt.at[rows].set(jnp.asarray(btrows))
-        full = [(r, c, t, kd) for r, _, c, t, kd in entries if c is not None]
+        full = [(r, c, t, kd, sr)
+                for r, _, c, t, kd, sr in entries if c is not None]
         if full:
             frows = jnp.asarray([f[0] for f in full], jnp.int32)
             self._ctx = self._ctx.at[frows].set(
@@ -254,6 +304,9 @@ class DecodeRunner:
                 jnp.asarray([f[2] for f in full], jnp.int32))
             self._keys = self._keys.at[frows].set(
                 jnp.asarray(np.stack([np.asarray(f[3], np.uint32)
+                                      for f in full])))
+            self._sampling = self._sampling.at[frows].set(
+                jnp.asarray(np.stack([np.asarray(f[4], np.float32)
                                       for f in full])))
         self.stats.rows_updated += len(entries)
 
@@ -264,14 +317,17 @@ class DecodeRunner:
         # re-register of the same row collapses to one write (duplicate
         # scatter indices have undefined order)
         pending: Dict[int, Tuple[Tuple[int, ...], Optional[int],
-                                 Optional[int], Optional[np.ndarray]]] = {}
+                                 Optional[int], Optional[np.ndarray],
+                                 Optional[np.ndarray]]] = {}
         zero_key = np.zeros((2,), np.uint32)
+        zero_smp = np.zeros((3,), np.float32)
         for rid in [r for r in self._rows if r not in current]:
             row = self._rows.pop(rid)
             self._row_blocks[row] = ()
             self._row_ctx[row] = 0
             self._free.append(row)
-            pending[row] = ((), 0, 0, zero_key)   # point at trash, mask off
+            # point at trash, mask off
+            pending[row] = ((), 0, 0, zero_key, zero_smp)
         for v in views:
             ids = tuple(v.block_ids)
             row = self._rows.get(v.rid)
@@ -282,7 +338,8 @@ class DecodeRunner:
                 self._row_blocks[row] = ids
                 self._row_ctx[row] = hist_ctx
                 pending[row] = (ids, hist_ctx, v.token_history[-1],
-                                self._row_key(v.rid))
+                                self._row_key(v.rid),
+                                self._row_sampling(v))
             elif self._row_ctx[row] != hist_ctx:
                 # context jumped outside the decode loop: a turn-boundary
                 # re-admission extends the history and rewrites prefill KV
@@ -292,10 +349,11 @@ class DecodeRunner:
                 self._row_blocks[row] = ids
                 self._row_ctx[row] = hist_ctx
                 pending[row] = (ids, hist_ctx, v.token_history[-1],
-                                self._row_key(v.rid))
+                                self._row_key(v.rid),
+                                self._row_sampling(v))
             elif ids != self._row_blocks[row]:
                 self._row_blocks[row] = ids       # page-boundary growth or
-                pending[row] = (ids, None, None, None)  # swap-in relocation
+                pending[row] = (ids, None, None, None, None)  # swap-in move
         self._scatter_rows(pending)
         active = frozenset(self._rows[v.rid] for v in views)
         if active != self._active_rows:
@@ -326,11 +384,18 @@ class DecodeRunner:
         else:
             self._update_rows(views)
 
-        nxt, pool, self._ctx, self._tok = \
-            paged_decode_step_device(
-                self.mb["params"], pool, self._bt, self._ctx, self._tok,
-                self._active, self._keys, self._temp, self._top_k,
-                self._top_p, cfg=self.mb["cfg"])
+        if self._mesh is None:
+            nxt, pool, self._ctx, self._tok = \
+                paged_decode_step_device(
+                    self._params, pool, self._bt, self._ctx, self._tok,
+                    self._active, self._keys, self._sampling,
+                    cfg=self.mb["cfg"])
+        else:
+            nxt, pool, self._ctx, self._tok = \
+                paged_decode_step_device_sharded(
+                    self._params, pool, self._bt, self._ctx, self._tok,
+                    self._active, self._keys, self._sampling,
+                    cfg=self.mb["cfg"], mesh=self._mesh)
         self._pending = ([(self._rows[v.rid], v.token_history)
                           for v in views], nxt)
         for v in views:
@@ -362,7 +427,8 @@ class DecodeRunner:
         self._row_blocks[row] = ids
         self._row_ctx[row] = hist_ctx
         self._scatter_rows({row: (ids, hist_ctx, view.token_history[-1],
-                                  self._row_key(view.rid))})
+                                  self._row_key(view.rid),
+                                  self._row_sampling(view))})
         return True
 
     def release(self, rid: int) -> None:
@@ -379,7 +445,8 @@ class DecodeRunner:
         self._row_blocks[row] = ()
         self._row_ctx[row] = 0
         self._free.append(row)
-        self._scatter_rows({row: ((), 0, 0, np.zeros((2,), np.uint32))})
+        self._scatter_rows({row: ((), 0, 0, np.zeros((2,), np.uint32),
+                                  np.zeros((3,), np.float32))})
         if row in self._active_rows:
             self._active_rows = self._active_rows - {row}
             act = np.zeros((self._batch_bucket,), bool)
@@ -485,9 +552,9 @@ class DecodeRunner:
         assert st.pos + n_tokens <= len(st.toks), (st.pos, n_tokens)
         chunk = st.toks[st.pos:st.pos + n_tokens]
         st.last_logits, st.k_carry, st.v_carry, k_c, v_c = \
-            ops.prefill_chunk(self.mb["params"], chunk, st.k_carry,
+            ops.prefill_chunk(self._params, chunk, st.k_carry,
                               st.v_carry, st.pos, cfg=self.mb["cfg"],
-                              block_size=bs)
+                              block_size=bs, mesh=self._mesh)
         c_pad = k_c.shape[1]
         n_pages = -(-n_tokens // bs)
         blocks = np.full((c_pad // bs,), self.trash, np.int32)
@@ -515,9 +582,9 @@ class DecodeRunner:
             return
         hist = st.view.token_history
         first_key = self._row_key(st.view.rid, salt=1)
+        smp = jnp.asarray(self._row_sampling(st.view))[None, :]
         tok = sample_tokens(st.last_logits[None, :], first_key[None, :],
-                            jnp.asarray([len(hist)], jnp.int32),
-                            self._temp, self._top_k, self._top_p)
+                            jnp.asarray([len(hist)], jnp.int32), smp)
         # fslint: disable=FS003(first-token emit must sync: the token gates scheduling and streaming)
         hist.append(int(tok[0]))
         st.emitted = True
@@ -593,6 +660,8 @@ class DecodeRunner:
 
     @staticmethod
     def jit_cache_size() -> int:
-        """Compiled-variant count of the decode step (all shapes/configs
-        in this process) — the recompile metric for decode_hotpath."""
-        return int(paged_decode_step_device._cache_size())
+        """Compiled-variant count of the decode step, single-device and
+        sharded variants combined (all shapes/configs in this process) —
+        the recompile metric for decode_hotpath."""
+        return int(paged_decode_step_device._cache_size()
+                   + paged_decode_step_device_sharded._cache_size())

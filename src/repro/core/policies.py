@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.io.cost_model import A10_PCIE4, HardwareSpec
 
@@ -93,12 +93,21 @@ class EngineConfig:
     kv_bytes_per_token: int = 131072   # LLaMA-8B bf16: 32L*8H*128D*2*2
     seed: int = 0
     # real-mode device-side sampling (DecodeRunner / DESIGN.md §3.6):
-    # temperature 0.0 = bit-exact greedy argmax; top_k 0 / top_p 1.0
-    # disable the respective filter.  All three are traced scalars, so
-    # changing them never adds a compiled decode variant.
+    # the ENGINE DEFAULTS a request inherits when its SamplingParams
+    # leave a field None.  temperature 0.0 = bit-exact greedy argmax;
+    # top_k 0 / top_p 1.0 disable the respective filter.  The values
+    # ride a per-row traced (B, 3) array, so neither the defaults nor
+    # per-request overrides ever add a compiled decode variant.
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
+    # Device mesh (data, model) the real-mode engine serves on
+    # (DESIGN.md §9): model > 1 shards q/k/v projections, the paged KV
+    # pool and the staged swap plane over that many tensor-parallel
+    # shards (head-sharded; token streams stay bit-identical to
+    # single-device).  (1, 1) — the default — is the single-device
+    # engine, byte-for-byte the pre-mesh code path.
+    mesh_shape: Tuple[int, int] = (1, 1)
     # Swap data plane (DESIGN.md §4): swaps larger than this many blocks
     # are split into chunk tasks the engine interleaves with decode steps
     # (fine-grained conflict syncs then wait only on the overlapping

@@ -24,9 +24,10 @@ class SamplingParams:
     concept, so length is the stop condition).  ``temperature``/
     ``top_k``/``top_p`` default to ``None`` = inherit the engine-wide
     sampling config; real mode fuses sampling into the batched decode
-    step with batch-global traced scalars (DESIGN.md §3.6), so a
-    per-request override that DIFFERS from the engine config is rejected
-    there (sim mode never samples, so any value is accepted)."""
+    step as a per-row traced ``(B, 3)`` array (DESIGN.md §3.6), so
+    per-request overrides mix freely in one batch without adding a
+    compiled variant — greedy rows stay bit-exact next to sampled rows
+    (sim mode never samples, so values are validated but unused)."""
     max_tokens: int = 16
     temperature: Optional[float] = None
     top_k: Optional[int] = None

@@ -171,13 +171,19 @@ class ServingEngine:
 
         self.model_bundle = model_bundle
         self.pools: Optional[PagedPools] = None
+        # real-mode serving mesh (DESIGN.md §9): None at (1, 1) — the
+        # single-device engine; otherwise the decode/prefill steps and
+        # the staged swap plane run tensor-parallel over ``model``
+        self.mesh = None
         if config.mode == "real":
             assert model_bundle is not None, "real mode needs a model bundle"
+            from repro.launch.mesh import make_serving_mesh
+            self.mesh = make_serving_mesh(config.mesh_shape)
             cfg = model_bundle["cfg"]
             spec = PoolSpec.from_config(cfg, config.num_gpu_blocks,
                                         config.num_cpu_blocks,
                                         config.block_size)
-            self.pools = PagedPools(spec, with_data=True)
+            self.pools = PagedPools(spec, with_data=True, mesh=self.mesh)
             self.block_bytes = spec.block_bytes()
             from repro.models.params import count_params_analytic
             model_params = count_params_analytic(cfg)
@@ -222,7 +228,7 @@ class ServingEngine:
                 model_bundle, block_size=config.block_size,
                 trash_block=self._trash_block,
                 temperature=config.temperature, top_k=config.top_k,
-                top_p=config.top_p, seed=config.seed)
+                top_p=config.top_p, seed=config.seed, mesh=self.mesh)
         # serving-API surface: step outputs, event log, streaming
         self._outs: Dict[int, RequestOutput] = {}
         self.events: Optional[List[RequestEvent]] = [] if keep_events else None
@@ -527,19 +533,30 @@ class ServingEngine:
     def _check_sampling(self, sp: SamplingParams) -> None:
         if sp.max_tokens < 1:
             raise ValueError(f"max_tokens must be >= 1, got {sp.max_tokens}")
-        if self.pools is None:
-            return
-        # real mode: sampling is fused batch-global (DESIGN.md §3.6)
+        # per-request overrides ride the runner's per-row (B, 3) sampling
+        # array (DESIGN.md §3.6) — validate ranges only
+        if sp.temperature is not None and sp.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{sp.temperature}")
+        if sp.top_k is not None and sp.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {sp.top_k}")
+        if sp.top_p is not None and not 0.0 < sp.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {sp.top_p}")
+
+    def _view_sampling(self, req: Request
+                       ) -> Optional[Tuple[float, float, float]]:
+        """The resolved (temperature, top_k, top_p) row for a request's
+        DecodeRequestView: None when the request carries no overrides
+        (the runner's engine-default row applies); otherwise each None
+        field inherits the engine default."""
+        sp = req.sampling
+        if (sp is None or (sp.temperature is None and sp.top_k is None
+                           and sp.top_p is None)):
+            return None
         cfg = self.config
-        for name, got, eng in (("temperature", sp.temperature,
-                                cfg.temperature),
-                               ("top_k", sp.top_k, cfg.top_k),
-                               ("top_p", sp.top_p, cfg.top_p)):
-            if got is not None and got != eng:
-                raise NotImplementedError(
-                    f"per-request {name}={got} differs from the engine's "
-                    f"{eng}: real-mode sampling is batch-global traced "
-                    "scalars (DESIGN.md §3.6)")
+        return (cfg.temperature if sp.temperature is None else sp.temperature,
+                cfg.top_k if sp.top_k is None else sp.top_k,
+                cfg.top_p if sp.top_p is None else sp.top_p)
 
     def _budget_tokens(self) -> int:
         return self.gpu_mgr.num_blocks * self.config.block_size
@@ -1066,7 +1083,8 @@ class ServingEngine:
                 # token, chunk by chunk; ``context_tokens`` stays at the
                 # full context throughout (the blocks are allocated and
                 # the token positions fixed — only the KV is re-filling)
-                view = DecodeRequestView(rid, gpu_blocks, req.token_history)
+                view = DecodeRequestView(rid, gpu_blocks, req.token_history,
+                                         sampling=self._view_sampling(req))
                 req.prefill_remaining = self.runner.prefill_begin(
                     view, emit_first=False)
             else:
@@ -1096,7 +1114,8 @@ class ServingEngine:
         inserts it through its persistent block tables."""
         view = DecodeRequestView(req.rid,
                                  self.gpu_mgr.request_block_ids(req.rid),
-                                 req.token_history)
+                                 req.token_history,
+                                 sampling=self._view_sampling(req))
         # KV compute runs OUTSIDE the pool lock (it never touches the
         # pool); only the scatter + rebind serialize with swap copies
         staged = self.runner.prefill_compute(view, emit_first=False)
@@ -1121,7 +1140,7 @@ class ServingEngine:
         hist.extend(turn.prompt_ids)
         req.hist_emitted = len(hist)     # stream deltas = response tokens
         return DecodeRequestView(rid, self.gpu_mgr.request_block_ids(rid),
-                                 hist)
+                                 hist, sampling=self._view_sampling(req))
 
     def _real_prefill(self, req: Request, reused: int = 0) -> None:
         """Runner-managed whole-prompt prefill: extend the turn's prompt,
@@ -1212,7 +1231,8 @@ class ServingEngine:
         the next-token host sync is deferred to the next iteration's
         decode (overlapping this step with the next control plane)."""
         views = [DecodeRequestView(r, self.gpu_mgr.request_block_ids(r),
-                                   self._req(r).token_history)
+                                   self._req(r).token_history,
+                                   sampling=self._view_sampling(self._req(r)))
                  for r in rids]
         with self.swap._pool_lock:
             self.pools.gpu = self.runner.decode(views, self.pools.gpu)

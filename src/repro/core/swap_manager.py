@@ -84,6 +84,15 @@ class MultithreadingSwapManager:
                  retry_backoff_us: float = 200.0):
         self.hw = hw
         self.pools = pools
+        # Mesh sharding (DESIGN.md §9): under a model-parallel mesh the
+        # KV pool is HEAD-sharded, so block ids stay shard-GLOBAL — every
+        # shard holds the same block layout over its local heads.  The
+        # conflict sets, copy_deps and dispatch ordering below are
+        # therefore mesh-invariant; only the data plane fans out (one
+        # host transfer per chunk PER SHARD, each 1/n_shards the bytes,
+        # over per-shard links — so modelled latency stays
+        # mesh-independent and sim/real parity holds by construction).
+        self.n_shards = 1 if pools is None else pools.n_shards
         self.async_enabled = async_enabled
         self.adaptive = adaptive
         self.sync_every = sync_every

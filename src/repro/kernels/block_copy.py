@@ -147,27 +147,47 @@ def _copy_runs_3d(src, dst, src_starts, dst_starts, run_lens,
       run_lens.astype(jnp.int32), dst, src)
 
 
-def block_gather_runs(pool3, slab0, src_starts, dst_starts, run_lens,
+def block_gather_runs(pool, slab0, src_starts, dst_starts, run_lens,
                       run_blocks: int, interpret: bool = True) -> jnp.ndarray:
     """Gather contiguous pool runs into a contiguous staging slab:
-    pool3[:, s:s+l] -> slab[:, d:d+l] per run (the d2h half of the staged
+    pool[:, s:s+l] -> slab[:, d:d+l] per run (the d2h half of the staged
     swap path — one streaming DMA chain per run, then the whole slab
     moves host-ward as ONE transfer instead of N scattered block copies).
-    pool3: (C, nb, E) — the KV pool with leading (layer, k/v) dims
-    collapsed; slab0: (C, n_slab, E) aliased into the output."""
-    return _copy_runs_3d(pool3, slab0, src_starts, dst_starts, run_lens,
-                         run_blocks, interpret)
+
+    pool: (C, nb, E) — the KV pool with leading (layer, k/v) dims
+    collapsed — or (C, nb, bs, H, D) with the SHARD AXIS (KV heads)
+    kept separate: under the mesh-sharded serving layout (DESIGN.md §9)
+    H is partitioned over ``model`` and this function runs per shard
+    inside ``shard_map``, flattening each shard's LOCAL heads into the
+    block element dim; the slab it stages therefore stays head-sharded
+    and crosses the host link as one transfer PER SHARD.
+    slab0: (C, n_slab, ...) matching pool's trailing layout, aliased
+    into the output."""
+    shape = slab0.shape
+    if pool.ndim > 3:
+        pool = pool.reshape(pool.shape[0], pool.shape[1], -1)
+        slab0 = slab0.reshape(shape[0], shape[1], -1)
+    out = _copy_runs_3d(pool, slab0, src_starts, dst_starts, run_lens,
+                        run_blocks, interpret)
+    return out.reshape(shape)
 
 
-def block_scatter_runs(slab, pool3, src_starts, dst_starts, run_lens,
+def block_scatter_runs(slab, pool, src_starts, dst_starts, run_lens,
                        run_blocks: int, interpret: bool = True) -> jnp.ndarray:
     """Scatter a contiguous staging slab back into pool runs:
-    slab[:, s:s+l] -> pool3[:, d:d+l] per run (the h2d half of the staged
-    swap path).  pool3 is aliased into the output — callers jit this with
+    slab[:, s:s+l] -> pool[:, d:d+l] per run (the h2d half of the staged
+    swap path).  pool is aliased into the output — callers jit this with
     the pool DONATED (see ``kernels/ops.py``) so the write is in place,
-    never an un-donated full-pool ``.at[].set`` copy."""
-    return _copy_runs_3d(slab, pool3, src_starts, dst_starts, run_lens,
-                         run_blocks, interpret)
+    never an un-donated full-pool ``.at[].set`` copy.  Accepts the same
+    3-D collapsed or (C, nb, bs, H, D) shard-axis layouts as
+    ``block_gather_runs`` (slab and pool must match)."""
+    shape = pool.shape
+    if pool.ndim > 3:
+        slab = slab.reshape(slab.shape[0], slab.shape[1], -1)
+        pool = pool.reshape(shape[0], shape[1], -1)
+    out = _copy_runs_3d(slab, pool, src_starts, dst_starts, run_lens,
+                        run_blocks, interpret)
+    return out.reshape(shape)
 
 
 def runs_to_indices(runs: List[Tuple[int, int]]) -> List[int]:

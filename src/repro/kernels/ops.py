@@ -93,30 +93,83 @@ def _pad_runs(runs: Sequence[Tuple[int, int]]
             _next_pow2(int(max(n for _, n in runs))))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("n_slab", "run_blocks", "interpret"))
-def _gather_swap(pool, src_starts, dst_starts, lens, *,
-                 n_slab: int, run_blocks: int, interpret: bool):
+def _gather_swap_body(pool, src_starts, dst_starts, lens, *,
+                      n_slab: int, run_blocks: int, interpret: bool):
+    """Shared gather body: stages pool runs into a zeroed slab.  The slab
+    keeps the (bs, H, D) block element axes SEPARATE (5-D) so the head
+    axis survives as the shard axis under the mesh layout — each shard
+    flattens only its local heads inside ``block_gather_runs``."""
     L, K, nb, bs, H, D = pool.shape
-    p3 = pool.reshape(L * K, nb, bs * H * D)
-    slab0 = jnp.zeros((L * K, n_slab, bs * H * D), pool.dtype)
-    return _bc.block_gather_runs(p3, slab0, src_starts, dst_starts, lens,
+    slab0 = jnp.zeros((L * K, n_slab, bs, H, D), pool.dtype)
+    return _bc.block_gather_runs(pool.reshape(L * K, nb, bs, H, D), slab0,
+                                 src_starts, dst_starts, lens,
                                  run_blocks=run_blocks, interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("run_blocks", "interpret"),
-                   donate_argnums=(0,))
-def _scatter_swap(pool, slab, src_starts, dst_starts, lens, *,
-                  run_blocks: int, interpret: bool):
+def _scatter_swap_body(pool, slab, src_starts, dst_starts, lens, *,
+                       run_blocks: int, interpret: bool):
     L, K, nb, bs, H, D = pool.shape
-    p3 = pool.reshape(L * K, nb, bs * H * D)
-    p3 = _bc.block_scatter_runs(slab, p3, src_starts, dst_starts, lens,
+    p5 = _bc.block_scatter_runs(slab, pool.reshape(L * K, nb, bs, H, D),
+                                src_starts, dst_starts, lens,
                                 run_blocks=run_blocks, interpret=interpret)
-    return p3.reshape(pool.shape)
+    return p5.reshape(pool.shape)
+
+
+_gather_swap = jax.jit(_gather_swap_body,
+                       static_argnames=("n_slab", "run_blocks", "interpret"))
+
+_scatter_swap = jax.jit(_scatter_swap_body,
+                        static_argnames=("run_blocks", "interpret"),
+                        donate_argnums=(0,))
+
+
+def _gather_swap_sharded_impl(pool, src_starts, dst_starts, lens, *,
+                              n_slab: int, run_blocks: int, interpret: bool,
+                              mesh):
+    """Per-shard staged gather (DESIGN.md §9): the pool's head axis is
+    partitioned over ``model``; every shard runs the SAME run-coalesced
+    kernel over its local heads, producing a head-sharded slab — the d2h
+    leg is then one transfer per shard, each 1/M the single-device
+    bytes."""
+    from jax.experimental.shard_map import shard_map
+    from repro.models.sharding import pool_pspec, rep_pspec, slab_pspec
+    body = functools.partial(_gather_swap_body, n_slab=n_slab,
+                             run_blocks=run_blocks, interpret=interpret)
+    rep = rep_pspec()
+    return shard_map(body, mesh=mesh,
+                     in_specs=(pool_pspec(), rep, rep, rep),
+                     out_specs=slab_pspec(),
+                     check_rep=False)(pool, src_starts, dst_starts, lens)
+
+
+def _scatter_swap_sharded_impl(pool, slab, src_starts, dst_starts, lens, *,
+                               run_blocks: int, interpret: bool, mesh):
+    from jax.experimental.shard_map import shard_map
+    from repro.models.sharding import pool_pspec, rep_pspec, slab_pspec
+    body = functools.partial(_scatter_swap_body, run_blocks=run_blocks,
+                             interpret=interpret)
+    rep = rep_pspec()
+    return shard_map(body, mesh=mesh,
+                     in_specs=(pool_pspec(), slab_pspec(), rep, rep, rep),
+                     out_specs=pool_pspec(),
+                     check_rep=False)(pool, slab, src_starts, dst_starts,
+                                      lens)
+
+
+# jitted sharded variants: same donation / bucketing contract as the
+# single-device pair (mesh is static — one variant per (mesh, buckets))
+_gather_swap_sharded = jax.jit(
+    _gather_swap_sharded_impl,
+    static_argnames=("n_slab", "run_blocks", "interpret", "mesh"))
+
+_scatter_swap_sharded = jax.jit(
+    _scatter_swap_sharded_impl,
+    static_argnames=("run_blocks", "interpret", "mesh"),
+    donate_argnums=(0,))
 
 
 def gather_swap_runs(pool, runs: Sequence[Tuple[int, int]],
-                     interpret: bool | None = None):
+                     interpret: bool | None = None, mesh=None):
     """Run-coalesced staged swap-out gather: copy the pool blocks named by
     ``runs`` [(start, n_blocks)] into one contiguous device staging slab
     (one grouped kernel over runs), so the d2h leg is a SINGLE transfer
@@ -124,41 +177,53 @@ def gather_swap_runs(pool, runs: Sequence[Tuple[int, int]],
 
     pool: (L, 2, nb, bs, Hkv, D) — read only (not donated; the gather
     never invalidates the live pool).  Returns (slab, n_blocks) where
-    slab is (L*2, n_slab_pow2, bs*Hkv*D); blocks [n_blocks:] are padding.
-    All shapes are pow2-bucketed so the jit cache stays O(log^2)."""
+    slab is (L*2, n_slab_pow2, bs, Hkv, D); blocks [n_blocks:] are
+    padding.  All shapes are pow2-bucketed so the jit cache stays
+    O(log^2).  With ``mesh`` the gather runs per shard under
+    ``shard_map`` and the slab comes back head-sharded (one host
+    transfer per shard)."""
     assert runs, "gather_swap_runs needs at least one run"
     src, dst, lens, _, n_slab, run_blocks = _pad_runs(runs)
-    slab = _gather_swap(pool, jnp.asarray(src), jnp.asarray(dst),
-                        jnp.asarray(lens), n_slab=n_slab,
-                        run_blocks=run_blocks,
-                        interpret=INTERPRET if interpret is None else interpret)
+    interp = INTERPRET if interpret is None else interpret
+    fn = _gather_swap if mesh is None else functools.partial(
+        _gather_swap_sharded, mesh=mesh)
+    slab = fn(pool, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(lens),
+              n_slab=n_slab, run_blocks=run_blocks, interpret=interp)
     return slab, int(sum(n for _, n in runs))
 
 
 def scatter_swap_runs(pool, slab, runs: Sequence[Tuple[int, int]],
-                      interpret: bool | None = None):
+                      interpret: bool | None = None, mesh=None):
     """Run-coalesced staged swap-in scatter: copy slab blocks [0, total)
     into the pool blocks named by ``runs``.  pool is DONATED — the write
     is in place and the caller MUST rebind its reference to the returned
     array (owner-of-record protocol, DESIGN.md §4.2).  slab: (L*2,
-    n_slab_pow2, bs*Hkv*D) as produced by the host staging path."""
+    n_slab_pow2, bs, Hkv, D) as produced by the host staging path —
+    head-sharded under ``mesh``, where each shard scatters its local
+    heads in place."""
     assert runs, "scatter_swap_runs needs at least one run"
     src, dst, lens, _, n_slab, run_blocks = _pad_runs(runs)
     assert slab.shape[1] == n_slab, (slab.shape, n_slab)
+    interp = INTERPRET if interpret is None else interpret
+    fn = _scatter_swap if mesh is None else functools.partial(
+        _scatter_swap_sharded, mesh=mesh)
     # gather offsets are the slab side here: slab[dst] -> pool[src]
-    return _scatter_swap(pool, slab, jnp.asarray(dst), jnp.asarray(src),
-                         jnp.asarray(lens), run_blocks=run_blocks,
-                         interpret=INTERPRET if interpret is None else interpret)
+    return fn(pool, slab, jnp.asarray(dst), jnp.asarray(src),
+              jnp.asarray(lens), run_blocks=run_blocks, interpret=interp)
 
 
 def swap_gather_cache_size() -> int:
-    """Compiled-variant count of the staged gather (bucketing metric)."""
-    return int(_gather_swap._cache_size())
+    """Compiled-variant count of the staged gather, single-device and
+    sharded variants combined (bucketing metric)."""
+    return int(_gather_swap._cache_size()
+               + _gather_swap_sharded._cache_size())
 
 
 def swap_scatter_cache_size() -> int:
-    """Compiled-variant count of the staged scatter (bucketing metric)."""
-    return int(_scatter_swap._cache_size())
+    """Compiled-variant count of the staged scatter, single-device and
+    sharded variants combined (bucketing metric)."""
+    return int(_scatter_swap._cache_size()
+               + _scatter_swap_sharded._cache_size())
 
 
 @functools.partial(jax.jit, static_argnames=("block_size",),
@@ -196,6 +261,16 @@ def insert_prefill_cache_size() -> int:
 # ---------------------------------------------------------------------------
 
 
+def _zeros_carry(shape, mesh):
+    """Zeroed prefill carry, head-sharded when ``mesh`` is given."""
+    z = jnp.zeros(shape, jnp.bfloat16)
+    if mesh is None:
+        return z
+    from jax.sharding import NamedSharding
+    from repro.models.sharding import carry_pspec
+    return jax.device_put(z, NamedSharding(mesh, carry_pspec()))
+
+
 @functools.partial(jax.jit, static_argnames=("n_new",))
 def _grow_carry(carry, *, n_new: int):
     """Copy a (L, S_old, H, D) prefill carry into a longer zeroed buffer
@@ -214,7 +289,7 @@ def _slice_tokens(kv, start, *, n: int):
 
 
 def prefill_chunk(params, tokens: Sequence[int], k_carry, v_carry,
-                  prefix_len: int, *, cfg, block_size: int):
+                  prefix_len: int, *, cfg, block_size: int, mesh=None):
     """Bucketed wrapper around ``models.paged.prefill_kv_chunk``: pad the
     chunk to a pow2 token bucket (>= one page so the pool insert stays
     block-aligned), grow the carry buffers to a pow2 bucket holding
@@ -227,8 +302,11 @@ def prefill_chunk(params, tokens: Sequence[int], k_carry, v_carry,
     ``k_carry``/``v_carry``: None to start a prefill, else the buffers
     returned by the previous chunk (DONATED — rebind).  Returns
     (last_logits, k_carry', v_carry', k_chunk, v_chunk) where k_chunk /
-    v_chunk are (L, chunk_pad, Hkv, D) ready for ``insert_prefill``."""
-    from repro.models.paged import prefill_kv_chunk
+    v_chunk are (L, chunk_pad, Hkv, D) ready for ``insert_prefill``.
+    With ``mesh`` the chunk forward runs head-sharded under ``shard_map``
+    (``prefill_kv_chunk_sharded``) with head-sharded carries — bit-exact
+    with the single-device path (DESIGN.md §9)."""
+    from repro.models.paged import prefill_kv_chunk, prefill_kv_chunk_sharded
     n = len(tokens)
     assert n > 0, "prefill_chunk needs at least one token"
     c_pad = max(_next_pow2(n), block_size)
@@ -238,15 +316,20 @@ def prefill_chunk(params, tokens: Sequence[int], k_carry, v_carry,
     if k_carry is None:
         s_pad = _next_pow2(need)
         shape = (cfg.n_layers, s_pad, cfg.n_kv_heads, cfg.resolved_head_dim)
-        k_carry = jnp.zeros(shape, jnp.bfloat16)
-        v_carry = jnp.zeros(shape, jnp.bfloat16)
+        k_carry = _zeros_carry(shape, mesh)
+        v_carry = _zeros_carry(shape, mesh)
     elif k_carry.shape[1] < need:
         s_pad = _next_pow2(need)
         k_carry = _grow_carry(k_carry, n_new=s_pad)
         v_carry = _grow_carry(v_carry, n_new=s_pad)
-    logits, k_carry, v_carry = prefill_kv_chunk(
-        params, jnp.asarray(toks), k_carry, v_carry,
-        jnp.int32(prefix_len), jnp.int32(n), cfg=cfg)
+    if mesh is None:
+        logits, k_carry, v_carry = prefill_kv_chunk(
+            params, jnp.asarray(toks), k_carry, v_carry,
+            jnp.int32(prefix_len), jnp.int32(n), cfg=cfg)
+    else:
+        logits, k_carry, v_carry = prefill_kv_chunk_sharded(
+            params, jnp.asarray(toks), k_carry, v_carry,
+            jnp.int32(prefix_len), jnp.int32(n), cfg=cfg, mesh=mesh)
     start = jnp.int32(prefix_len)
     k_chunk = _slice_tokens(k_carry, start, n=c_pad)
     v_chunk = _slice_tokens(v_carry, start, n=c_pad)
@@ -254,10 +337,12 @@ def prefill_chunk(params, tokens: Sequence[int], k_carry, v_carry,
 
 
 def prefill_chunk_cache_size() -> int:
-    """Compiled-variant count of the chunked prefill forward (the
-    bucketing metric asserted by the prompt-length-sweep test)."""
-    from repro.models.paged import prefill_kv_chunk
-    return int(prefill_kv_chunk._cache_size())
+    """Compiled-variant count of the chunked prefill forward, single-
+    device and sharded variants combined (the bucketing metric asserted
+    by the prompt-length-sweep test)."""
+    from repro.models.paged import prefill_kv_chunk, prefill_kv_chunk_sharded
+    return int(prefill_kv_chunk._cache_size()
+               + prefill_kv_chunk_sharded._cache_size())
 
 
 @jax.jit

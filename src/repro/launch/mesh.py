@@ -20,3 +20,21 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """1-device mesh for CPU smoke runs (same axis names, size 1)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_serving_mesh(shape):
+    """The serving engine's ("data", "model") mesh for a (D, M)
+    ``EngineConfig.mesh_shape`` — or None for (1, 1): the single-device
+    engine runs the pre-mesh code path byte-for-byte (the sharded path
+    degrades to it bit-exactly, DESIGN.md §9).  Raises if the host
+    exposes fewer than D*M devices (on CPU CI, force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` BEFORE the
+    first jax import)."""
+    d, m = shape
+    if d * m == 1:
+        return None
+    avail = len(jax.devices())
+    if avail < d * m:
+        raise ValueError(
+            f"mesh_shape {shape} needs {d * m} devices, have {avail}")
+    return jax.make_mesh((d, m), ("data", "model"))

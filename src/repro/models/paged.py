@@ -53,8 +53,18 @@ def page_tile(n_pages: int) -> int:
 
 
 def _decode_core(params, pool, block_tables, context_lens, tokens,
-                 cfg: ModelConfig):
-    """Shared decode body: one token per row through the paged pool."""
+                 cfg: ModelConfig, axis_name=None):
+    """Shared decode body: one token per row through the paged pool.
+
+    ``axis_name`` is the tensor-parallel mesh axis when this body runs
+    under ``shard_map`` (DESIGN.md §9): ``cfg`` then describes the
+    LOCAL head counts, the per-layer attention runs over this shard's
+    heads only (per-head compute is independent, so every shard's
+    output is bit-identical to the corresponding head slice of the
+    single-device run), and the head outputs are all-gathered —
+    a pure concatenation, no float reduction — before the replicated
+    ``wo`` matmul.  ``axis_name=None`` is the unsharded path,
+    byte-for-byte the pre-mesh code."""
     assert supports_paged(cfg), cfg.name
     B = tokens.shape[0]
     bs = pool.shape[3]
@@ -79,6 +89,10 @@ def _decode_core(params, pool, block_tables, context_lens, tokens,
         a = ops.paged_attention(q[:, 0], pool_l[0], pool_l[1],
                                 block_tables, context_lens + 1, scale,
                                 pages_per_compute_block=ppcb)
+        if axis_name is not None:
+            # concat this shard's head outputs with the others' (device
+            # order == head order, bit-exact) ahead of the replicated wo
+            a = jax.lax.all_gather(a, axis_name, axis=1, tiled=True)
         x = x + (a.reshape(B, 1, -1) @ lp["attn"]["wo"].astype(x.dtype))
         h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
         if use_moe:
@@ -95,7 +109,7 @@ def _decode_core(params, pool, block_tables, context_lens, tokens,
     return next_tokens, logits, new_pool
 
 
-def sample_tokens(logits, keys, ctx, temperature, top_k, top_p):
+def sample_tokens(logits, keys, ctx, sampling):
     """Fused temperature / top-k / top-p sampling, stateless per step.
 
     The per-row draw key is derived ON DEVICE as ``fold_in(keys[i],
@@ -105,32 +119,39 @@ def sample_tokens(logits, keys, ctx, temperature, top_k, top_p):
     preemption order, row re-registration or bucket rebuild, with no key
     state to thread between steps.
 
-    All three parameters are TRACED scalars so one compiled variant
-    serves every configuration; ``temperature <= 0`` selects bit-exact
-    greedy argmax through a ``lax.cond``, so the greedy hot path
-    executes only the argmax — the sort/softmax/Gumbel machinery is
-    compiled in but skipped at runtime.
+    ``sampling`` is a PER-ROW traced (B, 3) float32 array of
+    ``[temperature, top_k, top_p]`` columns, so every request carries
+    its own configuration while ONE compiled variant per batch bucket
+    serves any mix (the array's shape follows the bucket, never the
+    values).  Rows with ``temperature <= 0`` take bit-exact greedy
+    argmax; an all-greedy batch skips the sort/softmax/Gumbel machinery
+    entirely through a batch-level ``lax.cond`` — the greedy hot path
+    stays argmax-only at runtime.
 
     logits: (B, V); keys: (B, 2) uint32 threefry key data; ctx: (B,)
-    i32 positions; temperature, top_p: f32 scalars; top_k: i32 scalar
-    (0 = disabled).  Returns tokens (B,) i32.
+    i32 positions; sampling: (B, 3) f32 per-row [temperature, top_k,
+    top_p] (top_k column 0 = disabled; stored as float, exact for any
+    realistic k).  Returns tokens (B,) i32.
     """
     B, V = logits.shape
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    temp = sampling[:, 0]
+    top_k = sampling[:, 1].astype(jnp.int32)
+    top_p = sampling[:, 2]
 
     def _sampled(_):
-        scaled = logits / jnp.maximum(temperature, 1e-6)
+        scaled = logits / jnp.maximum(temp, 1e-6)[:, None]
         sorted_lg = jnp.sort(scaled, axis=-1)[:, ::-1]
         k_eff = jnp.clip(jnp.where(top_k > 0, top_k, V), 1,
                          V).astype(jnp.int32)
-        kth = jnp.take_along_axis(sorted_lg,
-                                  jnp.full((B, 1), k_eff - 1), axis=-1)
+        kth = jnp.take_along_axis(sorted_lg, (k_eff - 1)[:, None],
+                                  axis=-1)
         probs = jax.nn.softmax(sorted_lg, axis=-1)
         cum = jnp.cumsum(probs, axis=-1)
         # nucleus: keep the smallest prefix whose mass reaches top_p (the
         # mass BEFORE an index must be < top_p; index 0 is always kept)
-        keep = (cum - probs) < top_p
+        keep = (cum - probs) < top_p[:, None]
         pth = jnp.min(jnp.where(keep, sorted_lg, jnp.inf), axis=-1,
                       keepdims=True)
         masked = jnp.where(scaled >= jnp.maximum(kth, pth), scaled,
@@ -141,9 +162,10 @@ def sample_tokens(logits, keys, ctx, temperature, top_k, top_p):
                                   jnp.float32)
             return jnp.argmax(row_logits + g).astype(jnp.int32)
 
-        return jax.vmap(one_row)(keys, ctx, masked)
+        drawn = jax.vmap(one_row)(keys, ctx, masked)
+        return jnp.where(temp > 0.0, drawn, greedy)
 
-    return jax.lax.cond(temperature > 0.0, _sampled, lambda _: greedy,
+    return jax.lax.cond(jnp.any(temp > 0.0), _sampled, lambda _: greedy,
                         None)
 
 
@@ -157,27 +179,94 @@ def paged_decode_step(params, pool, block_tables, context_lens, tokens,
     return _decode_core(params, pool, block_tables, context_lens, tokens, cfg)
 
 
+def _device_step_core(params, pool, block_tables, context_lens, tokens,
+                      active, keys, sampling, cfg: ModelConfig,
+                      axis_name=None):
+    """Body shared by the single-device and mesh-sharded device steps."""
+    _, logits, new_pool = _decode_core(params, pool, block_tables,
+                                       context_lens, tokens, cfg,
+                                       axis_name=axis_name)
+    nxt = sample_tokens(logits, keys, context_lens, sampling)
+    new_ctx = jnp.where(active, context_lens + 1, context_lens)
+    new_tok = jnp.where(active, nxt, tokens)
+    return nxt, new_pool, new_ctx, new_tok
+
+
 @functools.partial(jax.jit, static_argnames=("cfg",),
                    donate_argnums=(1, 3, 4))
 def paged_decode_step_device(params, pool, block_tables, context_lens,
-                             tokens, active, keys, temperature, top_k,
-                             top_p, *, cfg: ModelConfig):
+                             tokens, active, keys, sampling, *,
+                             cfg: ModelConfig):
     """Device-resident variant for the DecodeRunner: pool, context_lens
     and tokens are DONATED and threaded step to step without host
     round-trips.  ``active``: (B,) bool — rows decoding this step.
     Inactive rows keep their state and their (masked, trash-directed)
     compute is discarded.  ``keys``: (B, 2) uint32 per-row POSITION-
     INDEPENDENT base PRNG keys (the step folds the position in — see
-    ``sample_tokens``); ``temperature``/``top_k``/``top_p``: traced
-    sampling scalars (temperature 0 is greedy).
+    ``sample_tokens``); ``sampling``: (B, 3) f32 per-row traced
+    [temperature, top_k, top_p] (temperature 0 is greedy).
     Returns (next_tokens, new_pool, new_ctx, new_tokens)."""
-    _, logits, new_pool = _decode_core(params, pool, block_tables,
-                                       context_lens, tokens, cfg)
-    nxt = sample_tokens(logits, keys, context_lens, temperature, top_k,
-                        top_p)
-    new_ctx = jnp.where(active, context_lens + 1, context_lens)
-    new_tok = jnp.where(active, nxt, tokens)
-    return nxt, new_pool, new_ctx, new_tok
+    return _device_step_core(params, pool, block_tables, context_lens,
+                             tokens, active, keys, sampling, cfg)
+
+
+def shard_local_config(cfg: ModelConfig, n_shards: int) -> ModelConfig:
+    """The per-shard view of ``cfg`` under ``n_shards``-way tensor
+    parallelism over heads: q and kv head counts divide by the shard
+    count (GQA grouping preserved); ``head_dim`` is pinned to the
+    resolved value so the division never changes it."""
+    import dataclasses
+    if n_shards == 1:
+        return cfg
+    assert shardable_heads(cfg, n_shards), (cfg.name, n_shards)
+    return dataclasses.replace(
+        cfg, n_heads=cfg.n_heads // n_shards,
+        n_kv_heads=cfg.n_kv_heads // n_shards,
+        head_dim=cfg.resolved_head_dim)
+
+
+def shardable_heads(cfg: ModelConfig, n_shards: int) -> bool:
+    """True when ``cfg``'s heads divide evenly over ``n_shards`` model-
+    parallel shards (the head-sharded serving layout's precondition)."""
+    return (n_shards >= 1 and cfg.n_heads % n_shards == 0
+            and cfg.n_kv_heads % n_shards == 0)
+
+
+def _sharded_device_step(params, pool, block_tables, context_lens,
+                         tokens, active, keys, sampling, *,
+                         cfg: ModelConfig, mesh):
+    """Mesh-sharded decode step: tensor-parallel over the ``"model"``
+    axis with the KV pool head-sharded (DESIGN.md §9).  Per-shard
+    compute covers that shard's heads only; head outputs are
+    all-gathered (pure concat) before the replicated ``wo``, and the
+    MLP / unembed / sampling run replicated on every shard — no float
+    reduction ever crosses shards, so the token stream is bit-identical
+    to the single-device step (mesh (1,1) degenerates to it exactly).
+    """
+    from jax.experimental.shard_map import shard_map
+    from repro.models.sharding import (pool_pspec, rep_pspec,
+                                       serving_param_pspecs)
+    n = mesh.shape["model"]
+    local_cfg = shard_local_config(cfg, n)
+    body = functools.partial(_device_step_core, cfg=local_cfg,
+                             axis_name="model")
+    rep = rep_pspec()
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(serving_param_pspecs(params), pool_pspec(), rep, rep,
+                  rep, rep, rep, rep),
+        out_specs=(rep, pool_pspec(), rep, rep),
+        check_rep=False,       # pallas_call has no replication rule
+    )(params, pool, block_tables, context_lens, tokens, active, keys,
+      sampling)
+
+
+# the jitted sharded step: donation and static-arg layout mirror
+# ``paged_decode_step_device`` exactly (fslint FS001/FS002 see through
+# the ``jax.jit(shard_map-wrapping-fn)`` assignment form)
+paged_decode_step_device_sharded = jax.jit(
+    _sharded_device_step, static_argnames=("cfg", "mesh"),
+    donate_argnums=(1, 3, 4))
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",))
@@ -193,6 +282,53 @@ def prefill_kv(params, tokens, *, cfg: ModelConfig):
     logits, caches, _ = T.forward_seq(params, cfg, tokens, remat=False)
     k, v = caches                                          # (L, 1, T, H, D)
     return logits[0, -1], k[:, 0], v[:, 0]
+
+
+def _prefill_chunk_core(params, tokens, k_carry, v_carry, prefix_len,
+                        chunk_len, cfg: ModelConfig, axis_name=None):
+    """Body shared by the single-device and mesh-sharded chunk forwards
+    (``axis_name`` semantics as in ``_decode_core``: local heads +
+    head-concat all-gather before the replicated ``wo``)."""
+    assert supports_paged(cfg), cfg.name
+    B, C_pad = tokens.shape
+    S_pad = k_carry.shape[1]
+    x = L.embed(params["embed"], tokens)                   # (1, C_pad, d)
+    positions = prefix_len + jnp.arange(C_pad)[None, :]
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    use_moe = cfg.moe is not None
+    # query i (absolute position prefix_len + i) attends keys [0, abs_i]
+    mask = (jnp.arange(S_pad)[None, :]
+            <= positions[0][:, None])[None, None]          # (1,1,C_pad,S_pad)
+
+    def body(x, xs):
+        lp, kc, vc = xs                                    # kc: (S_pad, H, D)
+        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn._project_qkv(lp["attn"], h, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k[0], (prefix_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v[0], (prefix_len, 0, 0))
+        a = attn._sdpa(q, kc[None], vc[None], mask, scale)
+        if axis_name is not None:
+            a = jax.lax.all_gather(a, axis_name, axis=2, tiled=True)
+        x = x + (a.reshape(B, C_pad, -1) @ lp["attn"]["wo"].astype(x.dtype))
+        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        if use_moe:
+            f, _ = moe_mod.moe_forward(lp["ffn"], h, cfg)
+        else:
+            f = L.swiglu(lp["ffn"], h)
+        return x + f, (kc, vc)
+
+    x, (k_carry, v_carry) = jax.lax.scan(
+        body, x, (params["layers"], k_carry, v_carry))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # unembed ONLY the last real position (row-wise matmul is bitwise
+    # independent of the batch of rows, so this equals slicing the full
+    # (C_pad, V) logits at (C_pad - 1)x the flops)
+    x_last = jax.lax.dynamic_index_in_dim(x[0], chunk_len - 1, axis=0,
+                                          keepdims=True)  # (1, d)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return L.unembed(head, x_last)[0], k_carry, v_carry
 
 
 @functools.partial(jax.jit, static_argnames=("cfg",),
@@ -225,41 +361,32 @@ def prefill_kv_chunk(params, tokens, k_carry, v_carry, prefix_len,
     compilation: O(log^2 max_len) variants over any mix of prompt
     lengths and chunk sizes (the ``kernels.ops.prefill_chunk`` wrapper
     owns the bucketing)."""
-    assert supports_paged(cfg), cfg.name
-    B, C_pad = tokens.shape
-    S_pad = k_carry.shape[1]
-    x = L.embed(params["embed"], tokens)                   # (1, C_pad, d)
-    positions = prefix_len + jnp.arange(C_pad)[None, :]
-    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
-    use_moe = cfg.moe is not None
-    # query i (absolute position prefix_len + i) attends keys [0, abs_i]
-    mask = (jnp.arange(S_pad)[None, :]
-            <= positions[0][:, None])[None, None]          # (1,1,C_pad,S_pad)
+    return _prefill_chunk_core(params, tokens, k_carry, v_carry,
+                               prefix_len, chunk_len, cfg)
 
-    def body(x, xs):
-        lp, kc, vc = xs                                    # kc: (S_pad, H, D)
-        h = L.rmsnorm(lp["ln1"], x, cfg.norm_eps)
-        q, k, v = attn._project_qkv(lp["attn"], h, cfg)
-        q = L.apply_rope(q, positions, cfg.rope_theta)
-        k = L.apply_rope(k, positions, cfg.rope_theta)
-        kc = jax.lax.dynamic_update_slice(kc, k[0], (prefix_len, 0, 0))
-        vc = jax.lax.dynamic_update_slice(vc, v[0], (prefix_len, 0, 0))
-        a = attn._sdpa(q, kc[None], vc[None], mask, scale)
-        x = x + (a.reshape(B, C_pad, -1) @ lp["attn"]["wo"].astype(x.dtype))
-        h = L.rmsnorm(lp["ln2"], x, cfg.norm_eps)
-        if use_moe:
-            f, _ = moe_mod.moe_forward(lp["ffn"], h, cfg)
-        else:
-            f = L.swiglu(lp["ffn"], h)
-        return x + f, (kc, vc)
 
-    x, (k_carry, v_carry) = jax.lax.scan(
-        body, x, (params["layers"], k_carry, v_carry))
-    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-    # unembed ONLY the last real position (row-wise matmul is bitwise
-    # independent of the batch of rows, so this equals slicing the full
-    # (C_pad, V) logits at (C_pad - 1)x the flops)
-    x_last = jax.lax.dynamic_index_in_dim(x[0], chunk_len - 1, axis=0,
-                                          keepdims=True)  # (1, d)
-    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    return L.unembed(head, x_last)[0], k_carry, v_carry
+def _sharded_prefill_chunk(params, tokens, k_carry, v_carry, prefix_len,
+                           chunk_len, *, cfg: ModelConfig, mesh):
+    """Mesh-sharded chunk forward (DESIGN.md §9): the carries are
+    head-sharded over ``"model"``, per-shard attention covers local
+    heads only, and the head-concat all-gather before the replicated
+    ``wo`` keeps the logits bit-identical to ``prefill_kv_chunk``."""
+    from jax.experimental.shard_map import shard_map
+    from repro.models.sharding import (carry_pspec, rep_pspec,
+                                       serving_param_pspecs)
+    local_cfg = shard_local_config(cfg, mesh.shape["model"])
+    body = functools.partial(_prefill_chunk_core, cfg=local_cfg,
+                             axis_name="model")
+    rep = rep_pspec()
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(serving_param_pspecs(params), rep, carry_pspec(),
+                  carry_pspec(), rep, rep),
+        out_specs=(rep, carry_pspec(), carry_pspec()),
+        check_rep=False,
+    )(params, tokens, k_carry, v_carry, prefix_len, chunk_len)
+
+
+prefill_kv_chunk_sharded = jax.jit(
+    _sharded_prefill_chunk, static_argnames=("cfg", "mesh"),
+    donate_argnums=(2, 3))

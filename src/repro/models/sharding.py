@@ -170,6 +170,60 @@ def shard_params(params, shardings):
 
 
 # ---------------------------------------------------------------------------
+# Serving-engine tensor parallelism (mesh-sharded decode/prefill/swap)
+# ---------------------------------------------------------------------------
+# Bit-exactness contract (DESIGN.md §9): the serving layout only ever
+# shards OUTPUT-CHANNEL dims — wq/wk/wv columns (the fused head dim), the
+# KV-pool / carry / slab head axis, and the per-head attention that reads
+# them.  No contraction dim is split, so no cross-shard psum re-orders a
+# float reduction: every shard computes a bit-identical slice of the
+# single-device activations, the head-concat all_gather is a pure layout
+# op, and wo / MLP / norms / unembed / sampling run REPLICATED.  That is
+# deliberately more conservative than ``param_spec`` above (whose
+# wo=P("model","data") splits the wo contraction — fine for the
+# distributed dry-run, NOT for token-stream parity).
+
+_SERVING_SHARDED_PARAMS = ("wq", "wk", "wv", "bq", "bk", "bv")
+
+
+def serving_param_pspecs(params) -> Any:
+    """PartitionSpec pytree for the serving decode/prefill shard_map:
+    attention q/k/v projections (and their biases) sharded over
+    ``model`` on the LAST axis (= the fused ``heads * head_dim`` output
+    dim, also under leading scan-stacked layer axes); every other leaf
+    replicated."""
+    def leaf_spec(path, leaf):
+        last = path[-1]
+        name = last.key if hasattr(last, "key") else str(last)
+        if name in _SERVING_SHARDED_PARAMS:
+            return P(*([None] * (leaf.ndim - 1) + ["model"]))
+        return P()
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def pool_pspec() -> P:
+    """Paged KV pool (L, 2, num_blocks, block_size, Hkv, D): head-sharded
+    over ``model``; blocks / block tables stay shard-global."""
+    return P(None, None, None, None, "model", None)
+
+
+def slab_pspec() -> P:
+    """Swap staging slab (L*2, n_slab, block_size, Hkv, D): head-sharded
+    like the pool, so a staged swap is one host transfer PER SHARD."""
+    return P(None, None, None, "model", None)
+
+
+def carry_pspec() -> P:
+    """Chunked-prefill KV carry (L, S_pad, Hkv, D): head-sharded."""
+    return P(None, None, "model", None)
+
+
+def rep_pspec() -> P:
+    """Replicated leaf (block tables, tokens, lens, keys, sampling...)."""
+    return P()
+
+
+# ---------------------------------------------------------------------------
 # Activation sharding constraints (set by the launcher at trace time)
 # ---------------------------------------------------------------------------
 # GSPMD propagation alone double-books the `model` axis (TP weights vs

@@ -72,6 +72,11 @@ def _ctx(B, val=0):
     return jnp.full((B,), val, jnp.int32)
 
 
+def _smp(B, temp, k, p):
+    """Per-row (B, 3) sampling array, every row identical."""
+    return jnp.tile(jnp.asarray([temp, float(k), p], jnp.float32), (B, 1))
+
+
 def test_sample_tokens_greedy_paths_are_argmax():
     """temperature 0, top_k 1 and a vanishing nucleus all collapse to the
     bit-exact argmax — through the SAME code path as sampled runs."""
@@ -79,8 +84,7 @@ def test_sample_tokens_greedy_paths_are_argmax():
     logits, keys = _fixed_logits(8, 32), _keys(8)
     ref = np.argmax(np.asarray(logits), -1)
     for temp, k, p in ((0.0, 0, 1.0), (1.0, 1, 1.0), (1.0, 0, 1e-6)):
-        toks = sample_tokens(logits, keys, _ctx(8), jnp.float32(temp),
-                             jnp.int32(k), jnp.float32(p))
+        toks = sample_tokens(logits, keys, _ctx(8), _smp(8, temp, k, p))
         np.testing.assert_array_equal(np.asarray(toks), ref, err_msg=str((temp, k, p)))
 
 
@@ -90,11 +94,11 @@ def test_sample_tokens_pure_function_of_key_and_position():
     different positions draw fresh randomness."""
     from repro.models.paged import sample_tokens
     logits, keys = _fixed_logits(16, 64), _keys(16)
-    args = (jnp.float32(1.0), jnp.int32(0), jnp.float32(1.0))
-    t1 = sample_tokens(logits, keys, _ctx(16, 5), *args)
-    t2 = sample_tokens(logits, keys, _ctx(16, 5), *args)
+    smp = _smp(16, 1.0, 0, 1.0)
+    t1 = sample_tokens(logits, keys, _ctx(16, 5), smp)
+    t2 = sample_tokens(logits, keys, _ctx(16, 5), smp)
     np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
-    t3 = sample_tokens(logits, keys, _ctx(16, 6), *args)
+    t3 = sample_tokens(logits, keys, _ctx(16, 6), smp)
     assert not np.array_equal(np.asarray(t3), np.asarray(t1))
 
 
@@ -106,7 +110,7 @@ def test_sample_tokens_statistics_match_softmax():
     row = np.random.RandomState(3).randn(V).astype(np.float32)
     logits = jnp.asarray(np.tile(row, (B, 1)))
     toks = sample_tokens(logits, _keys(B, seed=5), _ctx(B),
-                         jnp.float32(1.0), jnp.int32(0), jnp.float32(1.0))
+                         _smp(B, 1.0, 0, 1.0))
     freq = np.bincount(np.asarray(toks), minlength=V) / B
     probs = np.exp(row - row.max())
     probs /= probs.sum()
@@ -120,7 +124,7 @@ def test_sample_tokens_top_k_top_p_restrict_support():
     logits = jnp.asarray(np.tile(row, (B, 1)))
     # top-k=3: only the 3 largest logits may ever be sampled
     toks = sample_tokens(logits, _keys(B, seed=6), _ctx(B),
-                         jnp.float32(1.0), jnp.int32(3), jnp.float32(1.0))
+                         _smp(B, 1.0, 3, 1.0))
     top3 = set(np.argsort(row)[-3:].tolist())
     assert set(np.asarray(toks).tolist()) <= top3
     # top-p: support limited to the smallest prefix reaching the mass
@@ -131,8 +135,27 @@ def test_sample_tokens_top_k_top_p_restrict_support():
     p = 0.5
     nucleus = set(order[:int(np.searchsorted(cum, p) + 1)].tolist())
     toks = sample_tokens(logits, _keys(B, seed=7), _ctx(B),
-                         jnp.float32(1.0), jnp.int32(0), jnp.float32(p))
+                         _smp(B, 1.0, 0, p))
     assert set(np.asarray(toks).tolist()) <= nucleus
+
+
+def test_sample_tokens_per_row_mixed_batch_keeps_greedy_rows_exact():
+    """ISSUE 8 satellite: rows with different sampling params coexist in
+    ONE batch (one compiled variant) and the greedy rows stay bit-exact
+    to a pure-greedy call — sampled neighbours must not perturb them."""
+    from repro.models.paged import sample_tokens
+    B, V = 8, 32
+    logits, keys = _fixed_logits(B, V, seed=9), _keys(B, seed=10)
+    rows = np.zeros((B, 3), np.float32)
+    rows[:, 2] = 1.0                       # all greedy: (0, 0, 1)
+    rows[1] = (0.8, 5, 0.9)                # two sampled rows mixed in
+    rows[6] = (1.2, 0, 0.7)
+    mixed = sample_tokens(logits, keys, _ctx(B, 3), jnp.asarray(rows))
+    pure = sample_tokens(logits, keys, _ctx(B, 3), _smp(B, 0.0, 0, 1.0))
+    got, ref = np.asarray(mixed), np.asarray(pure)
+    greedy_rows = [i for i in range(B) if i not in (1, 6)]
+    np.testing.assert_array_equal(got[greedy_rows], ref[greedy_rows])
+    assert (got[[1, 6]] < V).all() and (got[[1, 6]] >= 0).all()
 
 
 # ---------------------------------------------------------------------------

@@ -551,6 +551,85 @@ class P:
 
 
 # ---------------------------------------------------------------------------
+# shard_map-wrapped jit sites (ISSUE 8): a mesh-sharded step defined as
+# ``g = jax.jit(shard_map(f, ...), donate_argnums=..., static_argnames=...)``
+# must carry the same donation / bucketing / inside-trace facts as a
+# directly-jitted def — no false FS001/FS002/FS006 on disciplined code,
+# and the SAME positives when the discipline is broken.
+# ---------------------------------------------------------------------------
+
+SHARDED_PRELUDE = """\
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+
+MESH = object()
+SPEC = object()
+
+
+def _next_pow2(n):
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _step_body(pool, tok, n):
+    pool = pool.at[0].set(tok[:n])
+    return pool, tok
+
+
+step_sharded = jax.jit(
+    shard_map(_step_body, mesh=MESH, in_specs=(SPEC, SPEC, SPEC),
+              out_specs=(SPEC, SPEC), check_rep=False),
+    static_argnames=("n",), donate_argnums=(0,))
+"""
+
+
+class TestShardMapJit:
+    def test_donation_seen_through_shard_map(self, tmp_path):
+        # positive: pool read after the sharded step donated it
+        res = _run(tmp_path, {"m.py": SHARDED_PRELUDE + """
+
+def bad(pool, tok):
+    out, _ = step_sharded(pool, tok, n=4)
+    return pool.sum() + out.sum()
+"""}, rules=["FS001"])
+        assert [f.rule for f in res.findings] == ["FS001"]
+        assert "'pool'" in res.findings[0].message
+
+    def test_negative_disciplined_sharded_caller(self, tmp_path):
+        # rebind + pow2 bucket + inside-trace pool update: fully clean
+        res = _run(tmp_path, {"m.py": SHARDED_PRELUDE + """
+
+def decode(pool, tok, items):
+    n = max(_next_pow2(len(items)), 4)
+    pool, tok = step_sharded(pool, tok, n=n)
+    return pool, tok
+"""}, rules=["FS001", "FS002", "FS006"])
+        assert res.findings == []
+
+    def test_variant_budget_applies_to_sharded_alias(self, tmp_path):
+        # positive: unbucketed static arg on the shard_map-wrapped jit
+        res = _run(tmp_path, {"m.py": SHARDED_PRELUDE + """
+
+def decode(pool, tok, items):
+    pool, tok = step_sharded(pool, tok, n=len(items))
+    return pool, tok
+"""}, rules=["FS002"])
+        assert [f.rule for f in res.findings] == ["FS002"]
+        assert "static arg 'n'" in res.findings[0].message
+
+    def test_wrapped_body_counts_as_inside_trace(self, tmp_path):
+        # the .at[].set inside _step_body is donated by the alias's jit
+        # — FS006 must not flag it (directly-jitted defs already pass)
+        res = _run(tmp_path, {"m.py": SHARDED_PRELUDE}, rules=["FS006"])
+        assert res.findings == []
+
+
+# ---------------------------------------------------------------------------
 # suppression parsing / FS000
 # ---------------------------------------------------------------------------
 

@@ -112,7 +112,7 @@ def test_release_session_frees_cpu_copy():
     eng.shutdown()
 
 
-def test_real_mode_rejects_count_prompts_and_sampling_overrides():
+def test_real_mode_rejects_count_prompts_validates_sampling():
     pytest.importorskip("jax")
     from repro.configs import get_smoke_config
     from repro.models import transformer as T
@@ -124,16 +124,25 @@ def test_real_mode_rejects_count_prompts_and_sampling_overrides():
                         model_bundle={"cfg": cfg_m, "params": params})
     with pytest.raises(ValueError):
         eng.add_request(10)                     # counts are sim-only
-    with pytest.raises(NotImplementedError):
+    # out-of-range sampling params are rejected at add_request; IN-range
+    # overrides are accepted (per-row (B, 3) sampling, ISSUE 8)
+    with pytest.raises(ValueError):
         eng.add_request([1, 2, 3], SamplingParams(max_tokens=2,
-                                                  temperature=0.7))
+                                                  temperature=-0.5))
+    with pytest.raises(ValueError):
+        eng.add_request([1, 2, 3], SamplingParams(max_tokens=2, top_p=0.0))
     # real-mode max_tokens=1 boundary: the prefill's first token is the
-    # whole response — exactly one id appended past the prompt
+    # whole response — exactly one id appended past the prompt; a second
+    # request overrides sampling per-request in the same batch
     prompt = synth_prompt_ids(0, 0, 9, cfg_m.vocab_size)
     h = eng.add_request(prompt, SamplingParams(max_tokens=1))
+    prompt2 = synth_prompt_ids(1, 0, 9, cfg_m.vocab_size)
+    h2 = eng.add_request(prompt2, SamplingParams(max_tokens=2,
+                                                 temperature=0.7, top_k=8))
     outs = _drain(eng)
     assert sum(o.new_tokens for o in outs if o.handle == h) == 1
     assert len(eng._token_hist_by_conv[h]) == len(prompt) + 1
+    assert sum(o.new_tokens for o in outs if o.handle == h2) == 2
     eng.shutdown()
 
 
