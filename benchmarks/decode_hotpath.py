@@ -275,6 +275,76 @@ def run_online_overhead(smoke: bool):
          f"overhead_pct={(dt_replay / max(it_replay, 1) / (dt_direct / max(it, 1)) - 1) * 100:.1f}")
 
 
+def run_prefix_cache_rows(smoke: bool):
+    """DESIGN.md §10 rows: N requests sharing a 49-token system prompt
+    through the REAL serving engine, prefix cache off vs on.  The cache
+    must shrink ``prefill_tokens`` (prompt tokens actually forwarded —
+    sharers seed the pinned prefix instead of recomputing it) while the
+    emitted token histories stay bit-identical."""
+    from repro.core import EngineConfig, SamplingParams, ServingEngine
+    from repro.data.priority import PriorityTrace
+
+    cfg_m = get_smoke_config("qwen2-1.5b")
+    params = T.init_params(cfg_m, jax.random.PRNGKey(0))
+    model = {"cfg": cfg_m, "params": params}
+    n_req = 4 if smoke else 8
+    rng = np.random.RandomState(5)
+    sys_prefix = rng.randint(1, cfg_m.vocab_size, 49).tolist()
+    prompts = [sys_prefix
+               + rng.randint(1, cfg_m.vocab_size, 6 + 3 * i).tolist()
+               for i in range(n_req)]
+
+    def run(on):
+        cfg = EngineConfig(mode="real", num_gpu_blocks=64,
+                           num_cpu_blocks=256, max_running=n_req,
+                           max_batch=4, prefix_cache=on,
+                           ).with_policy("fastswitch")
+        eng = ServingEngine(cfg, trace=PriorityTrace(), model_bundle=model,
+                            stream_tokens=True)
+        t0 = time.perf_counter()
+        hists = {}
+        it = 0
+
+        def drain(budget):
+            nonlocal it
+            n = 0
+            while eng.has_work() and n < budget:
+                for out in eng.step():
+                    if out.token_ids:
+                        hists.setdefault(out.handle,
+                                         []).extend(out.token_ids)
+                it += 1
+                n += 1
+
+        # the leader's prefill must complete (and donate its blocks to
+        # the tree) before the sharers arrive — same staggering a live
+        # arrival process produces
+        eng.add_request(list(prompts[0]), SamplingParams(max_tokens=8),
+                        handle=0)
+        drain(2)
+        for h, toks in enumerate(prompts[1:], start=1):
+            eng.add_request(list(toks), SamplingParams(max_tokens=8),
+                            handle=h)
+        drain(5000)
+        dt = time.perf_counter() - t0
+        pt = eng.runner.stats.prefill_tokens
+        stats = eng.prefix.stats() if eng.prefix is not None else {}
+        eng.shutdown()
+        return dt, pt, stats, hists
+
+    dt_off, pt_off, _, h_off = run(False)
+    dt_on, pt_on, st, h_on = run(True)
+    assert h_on == h_off, "prefix cache changed the token histories"
+    assert pt_on < pt_off, \
+        f"prefix cache saved no prefill compute ({pt_on} vs {pt_off})"
+    emit("prefix_cache_off", dt_off / n_req * 1e6,
+         f"prefill_tokens={pt_off};requests={n_req}")
+    emit("prefix_cache_on", dt_on / n_req * 1e6,
+         f"prefill_tokens={pt_on};hit_rate={st['hit_rate']:.2f}"
+         f";tokens_saved={st['tokens_saved']}"
+         f";evictions={st['evictions']}")
+
+
 def run_mesh_rows(args, mesh_shape) -> None:
     """ISSUE 8 rows: runner-driven decode steps/s per mesh shape on a
     uniformly shardable model (4 q / 4 kv heads).  Both shapes run in
@@ -317,6 +387,16 @@ def run_mesh_rows(args, mesh_shape) -> None:
              f";compiles={DecodeRunner.jit_cache_size() - c0}")
     assert hists[(1, 1)] == hists[(d, m)], \
         "mesh decode diverged from single-device greedy history"
+    # vocab-sharded unembed (ISSUE 9): greedy decode all-gathers TWO
+    # scalars per shard per row (max value + global argmax index)
+    # instead of every shard redundantly computing the full (B, V)
+    # logits; batches with a sampled row fall back to one full-logits
+    # gather.  B = 1 here (single-request run).
+    V = cfg.vocab_size
+    emit(f"unembed_collective@{d}x{m}", 0.0,
+         f"greedy_gather_elems={2 * m};sampled_fallback_elems={V}"
+         f";shrink={V / (2 * m):.0f}x"
+         f";per_shard_matmul_cols={V // m}")
 
 
 def main() -> None:
@@ -380,6 +460,10 @@ def main() -> None:
 
     # serving-API overhead: run() replay vs direct step() loop (ISSUE 5)
     run_online_overhead(args.smoke)
+
+    # cross-request prefix cache: shared-system-prompt prefill savings
+    # with bit-identical outputs (ISSUE 9 / DESIGN.md §10)
+    run_prefix_cache_rows(args.smoke)
 
     if args.json_out:
         write_bench_json(args.json_out, "decode_hotpath", args.smoke)

@@ -48,3 +48,8 @@ python -m repro.launch.serve --online --smoke --real \
 # and the event log (error/shed/retry kinds included) stays well-formed
 python -m repro.launch.serve --online --smoke --chaos \
     --events /tmp/fastswitch_online_chaos.jsonl
+# prefix-cache smoke (DESIGN.md §10): real-mode shared-system-prompt
+# replay with the refcount sanitizer (C1/C2) after EVERY step — the
+# radix tree must produce actual cross-request hits
+python -m repro.launch.serve --online --smoke --prefix-cache \
+    --events /tmp/fastswitch_online_prefix.jsonl

@@ -68,6 +68,10 @@ class DynamicBlockGroupManager:
         self.free: Dict[int, int] = {0: num_blocks}
         self.requests: Dict[int, _ReqState] = {}
         self._token_counts: Dict[int, int] = {}
+        # per-block sharer refcounts (prefix cache): a block with a nonzero
+        # refcount is mapped into at least one request's block table beyond
+        # its owner and must never reach the free list
+        self._block_refs: Dict[int, int] = {}
         # counters
         self.n_splits = 0
         self.n_merges = 0
@@ -108,6 +112,9 @@ class DynamicBlockGroupManager:
         """Return a contiguous range to the free list, merging neighbours."""
         if length <= 0:
             return
+        for b in range(start, start + length):
+            assert not self._block_refs.get(b), \
+                f"freeing block {b} with refcount {self._block_refs[b]}"
         # merge with successor
         end = start + length
         if end in self.free:
@@ -270,6 +277,95 @@ class DynamicBlockGroupManager:
             ids.extend(g.block_ids())
         return ids
 
+    def release_tail_group(self, req_id: int) -> Optional[Tuple[int, int]]:
+        """Free the *last* (most recently allocated) group of ``req_id``.
+
+        Public tail-release API shared by KV-reuse contamination
+        (``reuse._contaminate_one``) and the prefix-cache evictor — the
+        suffix of a request's allocation is always the cheapest part to
+        sacrifice (FastSwitch §3.3 contaminates tail-first; prefix-cache
+        nodes own exactly one single-block group, so their "tail" is the
+        whole node).  Returns the freed ``(start, length)`` range, or
+        ``None`` when the request holds no groups.  Refuses (returns
+        ``None``) if any block in the tail group is still refcounted by a
+        sharer.
+        """
+        st = self.requests.get(req_id)
+        if st is None or not st.groups:
+            return None
+        g = st.groups[-1]
+        if any(self._block_refs.get(b) for b in range(g.start, g.end)):
+            return None
+        st.groups.pop()
+        self._release(g.start, g.length)
+        self._token_counts[req_id] = max(
+            0, self._token_counts.get(req_id, 0)
+            - g.length * self.block_size_tokens)
+        if not st.groups:
+            self.requests.pop(req_id, None)
+            self._token_counts.pop(req_id, None)
+        return (g.start, g.length)
+
+    # ------------------------------------------------------------------
+    # prefix-cache support: per-block refcounts + block donation
+    # ------------------------------------------------------------------
+
+    def ref_block(self, block: int) -> None:
+        self._block_refs[block] = self._block_refs.get(block, 0) + 1
+
+    def unref_block(self, block: int) -> None:
+        n = self._block_refs.get(block, 0) - 1
+        assert n >= 0, f"unref of unreferenced block {block}"
+        if n:
+            self._block_refs[block] = n
+        else:
+            self._block_refs.pop(block, None)
+
+    def block_refcount(self, block: int) -> int:
+        return self._block_refs.get(block, 0)
+
+    def transfer_prefix_blocks(self, req_id: int,
+                               owners: List[int]) -> List[int]:
+        """Donate the first ``len(owners)`` used blocks of ``req_id``'s
+        block table to new single-block groups owned by ``owners[i]``
+        (prefix-cache node insertion).  The physical blocks do not move —
+        only ownership and token accounting change, so the request's
+        composed block table (shared prefix + private suffix) stays
+        byte-identical.  Returns the donated physical block ids in token
+        order."""
+        n_blocks = len(owners)
+        st = self.requests.get(req_id)
+        assert st is not None, f"transfer from unknown request {req_id}"
+        assert sum(g.used for g in st.groups) >= n_blocks, \
+            f"request {req_id} holds fewer than {n_blocks} used blocks"
+        out: List[int] = []
+        while len(out) < n_blocks:
+            g = st.groups[0]
+            assert g.used > 0, "leading group with no live blocks"
+            take = min(n_blocks - len(out), g.used)
+            for i in range(take):
+                owner = owners[len(out)]
+                self.register(owner)
+                self.requests[owner].groups.append(
+                    BlockGroup(start=g.start + i, length=1,
+                               owner=owner, used=1))
+                self._token_counts[owner] = (
+                    self._token_counts.get(owner, 0)
+                    + self.block_size_tokens)
+                out.append(g.start + i)
+            if take == g.used and g.length == g.used:
+                st.groups.pop(0)
+            else:
+                # keep the (possibly unused) tail of the group with the
+                # donating request
+                g.start += take
+                g.length -= take
+                g.used -= take
+        self._token_counts[req_id] = max(
+            0, self._token_counts.get(req_id, 0)
+            - n_blocks * self.block_size_tokens)
+        return out
+
     # ------------------------------------------------------------------
     # metrics
     # ------------------------------------------------------------------
@@ -305,3 +401,12 @@ class DynamicBlockGroupManager:
         starts = sorted(self.free)
         for a, b in zip(starts, starts[1:]):
             assert a + self.free[a] < b, "unmerged adjacent free groups"
+        # refcounted blocks must be live (owned + used), never free
+        if self._block_refs:
+            owned = set()
+            for st in self.requests.values():
+                for g in st.groups:
+                    owned.update(g.block_ids())
+            for blk, n in self._block_refs.items():
+                assert n > 0, f"zero refcount retained for block {blk}"
+                assert blk in owned, f"refcounted block {blk} is not live"

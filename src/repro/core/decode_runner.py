@@ -108,6 +108,7 @@ class RunnerStats:
     host_syncs: int = 0            # deferred next-token materializations
     prefills: int = 0              # runner-managed prefill insertions
     prefill_chunks: int = 0        # chunked-prefill forward launches
+    prefill_tokens: int = 0        # prompt tokens actually forwarded
     prefill_aborts: int = 0        # mid-prefill preemptions
 
 
@@ -562,6 +563,7 @@ class DecodeRunner:
         blocks[:n_pages] = list(st.view.block_ids)[b0:b0 + n_pages]
         st.pos += n_tokens
         self.stats.prefill_chunks += 1
+        self.stats.prefill_tokens += n_tokens
         return k_c, v_c, blocks
 
     def prefill_chunk_insert(self, rid: int, pool, staged):

@@ -41,6 +41,13 @@ Invariant catalog (each clause is one numbered check below):
       trash sentinel (empty host mirror).
   P1  prefill carry: every open runner prefill belongs to a live rid
       with ``prefill_remaining > 0``, and vice versa for real mode.
+  C1  prefix-cache refcount conservation: every cached block's refcount
+      equals the number of live/parked requests mapping it; every
+      mapping belongs to a live or parked rid and is a root path.
+  C2  prefix-cache block ownership/pinning: every tree node owns exactly
+      its one block (single-block group under the node's negative owner
+      rid); refcounts exist only on node blocks; no swap task ever
+      references a cached (pinned) block.
 """
 from __future__ import annotations
 
@@ -124,6 +131,7 @@ def check_engine_invariants(eng) -> None:
         # allocation-pressure reserves), not requests
         if rid not in live and rid >= 0:
             v.append(f"B2: gpu blocks held by dead rid {rid}")
+    prefix = getattr(eng, "prefix", None)
     for rid in live:
         cap = len(eng.gpu_mgr.request_block_ids(rid)) \
             * eng.config.block_size
@@ -132,10 +140,14 @@ def check_engine_invariants(eng) -> None:
             v.append(f"B3: rid {rid} noted {noted} tokens > block "
                      f"capacity {cap}")
         req = sched.requests[rid]
+        # a mapped shared prefix is resident but not noted against the
+        # request (its blocks belong to the tree's node owners)
+        shared = prefix.shared_tokens(rid) if prefix is not None else 0
         if req.state is ReqState.RUNNING and req.prefill_remaining == 0 \
-                and req.context_tokens > noted:
+                and req.context_tokens > noted + shared:
             v.append(f"B3: running rid {rid} context_tokens="
-                     f"{req.context_tokens} > noted tokens {noted}")
+                     f"{req.context_tokens} > noted tokens {noted} + "
+                     f"shared {shared}")
 
     # R1/R2: reuse copies ---------------------------------------------
     try:
@@ -147,7 +159,12 @@ def check_engine_invariants(eng) -> None:
         if copy.valid_tokens > copy.stored_tokens:
             v.append(f"R1: rid {rid} reuse valid {copy.valid_tokens} > "
                      f"stored {copy.stored_tokens}")
-        if copy.valid_tokens + copy.prealloc_tokens > cap:
+        # a GPU-pinned shared prefix keeps valid_tokens at its floor even
+        # when the phantom CPU blocks below it were contaminated away
+        # (they are never read — see reuse.record_swap_out floor_tokens)
+        floor = prefix.shared_tokens(rid) if prefix is not None else 0
+        if copy.valid_tokens + copy.prealloc_tokens > cap \
+                and copy.valid_tokens > floor:
             v.append(f"R1: rid {rid} reuse valid {copy.valid_tokens} + "
                      f"prealloc {copy.prealloc_tokens} > cpu capacity "
                      f"{cap}")
@@ -169,6 +186,55 @@ def check_engine_invariants(eng) -> None:
         if bad:
             v.append(f"S2: swap task (rid {t.req_id}, {t.direction}) "
                      f"references out-of-pool gpu blocks {bad}")
+
+    # C1/C2: prefix-cache refcounts / ownership / pinning -------------
+    if prefix is not None:
+        node_blocks = set()
+        for node in prefix.iter_nodes():
+            node_blocks.add(node.block)
+            # every node owns exactly its one block: a single-block group
+            # registered under the node's negative owner rid
+            groups = eng.gpu_mgr.requests.get(node.owner)
+            if groups is None or len(groups.groups) != 1:
+                v.append(f"C2: prefix node owner {node.owner} holds "
+                         f"{0 if groups is None else len(groups.groups)} "
+                         "groups (want exactly 1)")
+            else:
+                g = groups.groups[0]
+                if (g.start, g.length, g.used) != (node.block, 1, 1):
+                    v.append(f"C2: prefix node owner {node.owner} group "
+                             f"(start={g.start}, len={g.length}, "
+                             f"used={g.used}) != block {node.block}")
+        # refcount conservation: each cached block's refcount equals the
+        # number of live/parked requests mapping it
+        mapper_counts: Dict[int, int] = {}
+        for rid, path in prefix.mappings().items():
+            if rid not in live and rid not in eng.parked:
+                v.append(f"C1: prefix mapping held by dead rid {rid}")
+            prev = None
+            for node in path:
+                if node.parent is not prev:
+                    v.append(f"C1: rid {rid} mapping is not a root path "
+                             f"at block {node.block}")
+                prev = node
+                mapper_counts[node.block] = \
+                    mapper_counts.get(node.block, 0) + 1
+        for b in node_blocks | set(mapper_counts):
+            have = eng.gpu_mgr.block_refcount(b)
+            want = mapper_counts.get(b, 0)
+            if have != want:
+                v.append(f"C1: block {b} refcount {have} != mapper "
+                         f"count {want}")
+        for b in list(getattr(eng.gpu_mgr, "_block_refs", {})):
+            if b not in node_blocks:
+                v.append(f"C1: refcount on non-cached block {b}")
+        # pinning: shared blocks never ride a swap task (the engine only
+        # swaps the private suffix — this is the tripwire for it)
+        for t in eng.swap.ongoing_swap_in + eng.swap.ongoing_swap_out:
+            pinned = node_blocks.intersection(t.gpu_blocks)
+            if pinned:
+                v.append(f"C2: swap task (rid {t.req_id}, {t.direction}) "
+                         f"touches pinned cached blocks {sorted(pinned)}")
 
     # D1/D2 + P1: runner row maps / prefill carry ---------------------
     if eng.runner is not None:

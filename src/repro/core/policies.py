@@ -108,6 +108,11 @@ class EngineConfig:
     # single-device).  (1, 1) — the default — is the single-device
     # engine, byte-for-byte the pre-mesh code path.
     mesh_shape: Tuple[int, int] = (1, 1)
+    # Cross-request prefix cache (DESIGN.md §10): radix tree of shared
+    # full-block prompt prefixes pinned on the GPU pool, with
+    # fairness-aware leaf eviction.  Real mode + reuse-enabled swap
+    # policies only; off (the default) leaves every code path untouched.
+    prefix_cache: bool = False
     # Swap data plane (DESIGN.md §4): swaps larger than this many blocks
     # are split into chunk tasks the engine interleaves with decode steps
     # (fine-grained conflict syncs then wait only on the overlapping

@@ -14,8 +14,8 @@ Invariant (tested property): a request never reuses a contaminated block —
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.block_group import DynamicBlockGroupManager, OutOfBlocksError
 
@@ -40,12 +40,25 @@ class KVCacheReuseManager:
         self.copies: Dict[int, CpuCopy] = {}
         # priority snapshot used to pick contamination victims
         self.priorities: Dict[int, float] = {}
+        # live-priority fallback for rids never seen by update_priority
+        # (the engine points this at scheduler.priority); without it an
+        # unseen rid would default to 0.0 and become a preferential
+        # contamination victim regardless of its true priority
+        self.priority_fn: Optional[Callable[[int], float]] = None
         self.n_contaminations = 0
 
     # ------------------------------------------------------------------
 
     def update_priority(self, req_id: int, priority: float) -> None:
         self.priorities[req_id] = priority
+
+    def _priority_of(self, req_id: int) -> float:
+        p = self.priorities.get(req_id)
+        if p is not None:
+            return p
+        if self.priority_fn is not None:
+            return float(self.priority_fn(req_id))
+        return 0.0
 
     def valid_tokens(self, req_id: int) -> int:
         c = self.copies.get(req_id)
@@ -58,11 +71,18 @@ class KVCacheReuseManager:
         return max(0, total_tokens - self.valid_tokens(req_id))
 
     def record_swap_out(self, req_id: int, total_tokens: int,
-                        requesting_priority: float = 0.0
+                        requesting_priority: float = 0.0,
+                        floor_tokens: int = 0
                         ) -> Tuple[int, List[Tuple[int, int]]]:
         """Allocate CPU space for the increment and mark the copy valid up
         to ``total_tokens``.  Returns (increment_tokens, cpu_runs) where
-        cpu_runs are the contiguous CPU block runs written."""
+        cpu_runs are the contiguous CPU block runs written.
+
+        ``floor_tokens``: positions ``[0, floor)`` are pinned GPU-resident
+        (a shared prefix-cache prefix) and never transferred; the copy is
+        considered valid from position 0 anyway so all block-index math
+        stays unchanged — the CPU blocks below the floor are phantoms that
+        are allocated but never written or read."""
         copy = self.copies.setdefault(req_id, CpuCopy())
         if not self.enabled:
             # baseline: the whole context is re-written every preemption
@@ -71,15 +91,20 @@ class KVCacheReuseManager:
             copy.valid_tokens = total_tokens
             copy.stored_tokens = total_tokens
             return total_tokens, self.mgr.request_runs(req_id)
+        if floor_tokens:
+            f = min(floor_tokens, total_tokens)
+            copy.valid_tokens = max(copy.valid_tokens, f)
+            copy.stored_tokens = max(copy.stored_tokens, copy.valid_tokens)
         inc = max(0, total_tokens - copy.valid_tokens)
         if inc == 0:
             return 0, []
         self._ensure_cpu_tokens(req_id, total_tokens, requesting_priority)
         # allocation may have been refused (only higher-priority copies
         # left to contaminate): the valid prefix is capped by what is
-        # physically stored on CPU.
+        # physically stored on CPU.  The pinned floor stays valid even
+        # when the phantom blocks below it were contaminated away.
         cap = self.mgr.request_tokens(req_id)
-        new_valid = min(total_tokens, cap)
+        new_valid = max(min(total_tokens, cap), copy.valid_tokens)
         inc = max(0, new_valid - copy.valid_tokens)
         copy.valid_tokens = new_valid
         copy.stored_tokens = new_valid
@@ -111,6 +136,11 @@ class KVCacheReuseManager:
         if c is not None:
             c.valid_tokens = 0
             c.stored_tokens = 0
+            # nothing valid is stored, so nothing is "reserved ahead" of
+            # it either: a stale reserve would make the next
+            # record_swap_out under-report the adjacent preallocation and
+            # a later contamination over-shrink the victim's valid prefix
+            c.prealloc_tokens = 0
 
     def release(self, req_id: int) -> None:
         """Conversation finished: drop the copy."""
@@ -162,19 +192,16 @@ class KVCacheReuseManager:
                    and self.mgr.request_tokens(r) > 0]
         if not victims:
             return False
-        victim = min(victims, key=lambda r: self.priorities.get(r, 0.0))
-        if self.priorities.get(victim, 0.0) > requesting_priority:
-            # only lower-priority copies may be contaminated (paper §2.2)
+        victim = min(victims, key=self._priority_of)
+        if self._priority_of(victim) >= requesting_priority:
+            # only strictly-lower-priority copies may be contaminated
+            # (paper §2.2); an equal-priority victim would let two peers
+            # ping-pong each other's prefixes away
             return False
         vcopy = self.copies[victim]
         # release the victim's LAST group (tail-first)
-        st = self.mgr.requests.get(victim)
-        if st is None or not st.groups:
+        if self.mgr.release_tail_group(victim) is None:
             return False
-        g = st.groups.pop()
-        self.mgr._release(g.start, g.length)
-        self.mgr._token_counts[victim] = max(
-            0, self.mgr._token_counts.get(victim, 0) - g.length * self.block_size)
         remaining_cap = self.mgr.request_tokens(victim)
         vcopy.valid_tokens = min(vcopy.valid_tokens,
                                  max(0, remaining_cap - vcopy.prealloc_tokens))

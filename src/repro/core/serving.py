@@ -52,6 +52,7 @@ from repro.core.faults import (EngineDrainingError, EngineOverloadError,
                                FatalSwapFault, FaultInjector, PoisonError)
 from repro.core.invariants import check_engine_invariants
 from repro.core.policies import EngineConfig
+from repro.core.prefix_cache import PrefixCache
 from repro.core.request_api import (RequestEvent, RequestOutput,
                                     RequestSLOStats, SamplingParams,
                                     SLOSpec, jain_index)
@@ -85,6 +86,11 @@ class EngineMetrics:
     rejected: int = 0                  # add_request refusals (overload/drain)
     swap_failure_resumes: int = 0      # permanent swap failure -> recompute
     invariant_checks: int = 0          # sanitizer passes that ran clean
+    # cross-request prefix cache (DESIGN.md §10)
+    prefix_hits: int = 0               # admissions with a cached prefix
+    prefix_misses: int = 0             # admissions probing empty-handed
+    prefix_tokens_saved: int = 0       # prompt tokens not recomputed
+    prefix_evictions: int = 0          # cached blocks reclaimed by pressure
     # per-turn SLO attainment records (request_api.RequestSLOStats)
     request_stats: List[RequestSLOStats] = field(default_factory=list)
     # (t_end_us, batch, t_iter_us, prefills_in_iter, stall_so_far_us)
@@ -118,6 +124,13 @@ class EngineMetrics:
             "rejected": self.rejected,
             "swap_failure_resumes": self.swap_failure_resumes,
             "invariant_checks": self.invariant_checks,
+            "prefix_hits": self.prefix_hits,
+            "prefix_misses": self.prefix_misses,
+            "prefix_hit_rate": (self.prefix_hits
+                                / max(self.prefix_hits
+                                      + self.prefix_misses, 1)),
+            "prefix_tokens_saved": self.prefix_tokens_saved,
+            "prefix_evictions": self.prefix_evictions,
         }
 
     def slo_summary(self) -> Dict[str, Optional[float]]:
@@ -209,6 +222,25 @@ class ServingEngine:
 
         self.trace = trace or PriorityTrace()
         self.sched = PriorityScheduler(self.trace, config.max_running)
+        # live-priority fallback for contamination victims never seen by
+        # update_priority (the trace lazily assigns, so this never raises)
+        self.reuse.priority_fn = self.sched.priority
+        # cross-request prefix cache (DESIGN.md §10): radix tree of shared
+        # full-block prompt prefixes pinned on the GPU pool.  Real mode
+        # only (sim prompts have no token ids to key on) and requires a
+        # reuse-enabled policy: the disabled-reuse swap paths rewrite a
+        # request's whole context in place, which would scribble over
+        # pinned shared blocks.
+        self.prefix: Optional[PrefixCache] = None
+        if config.prefix_cache:
+            if config.mode != "real":
+                raise ValueError("prefix_cache needs mode='real' "
+                                 "(sim prompts carry no token ids)")
+            if not pol.use_reuse or pol.preemption_mode != "swap":
+                raise ValueError("prefix_cache requires a reuse-enabled "
+                                 "policy (preemption_mode='swap' with "
+                                 "use_reuse)")
+            self.prefix = PrefixCache(self.gpu_mgr, config.block_size)
         # retained (FINISHED) sessions awaiting continue_session/release
         self.parked: Dict[int, Request] = {}
         self._next_handle = 0
@@ -290,8 +322,22 @@ class ServingEngine:
         req.sampling, req.slo, req.retain_kv = sampling, slo, retain_kv
         req.begin_turn(self.clock.now_us)
         self.sched.add_request(req)
+        shared = 0
+        if self.prefix is not None and ids is not None:
+            # probe the prefix tree BEFORE prefill and pin the matched
+            # blocks now — a hit found at arrival must not be evicted
+            # while the request waits for admission
+            shared = self.prefix.acquire(
+                handle, ids, now_us=self.clock.now_us,
+                priority=self.sched.priority(handle))
+            if shared:
+                self.metrics.prefix_hits += 1
+                self.metrics.prefix_tokens_saved += shared
+            else:
+                self.metrics.prefix_misses += 1
         self._event(handle, "arrive", prompt_tokens=n_prompt,
-                    max_tokens=sampling.max_tokens)
+                    max_tokens=sampling.max_tokens,
+                    **({"shared_tokens": shared} if shared else {}))
         return handle
 
     def continue_session(self, handle: int,
@@ -334,6 +380,8 @@ class ServingEngine:
         if req is None:
             return False
         self.reuse.release(handle)
+        if self.prefix is not None:
+            self.prefix.release(handle)
         req.state = ReqState.DONE
         self._event(handle, "release")
         return True
@@ -353,6 +401,8 @@ class ServingEngine:
             if handle in self.parked:       # retained session: drop copy
                 req = self.parked.pop(handle)
                 self.reuse.release(handle)
+                if self.prefix is not None:
+                    self.prefix.release(handle)
                 req.state = ReqState.DONE
                 self.metrics.aborted += 1
                 self._event(handle, "abort", state="finished")
@@ -395,6 +445,8 @@ class ServingEngine:
         self.swap.take_failed_for(handle)   # drop stale copy failures
         self.gpu_mgr.release_request(handle)
         self.reuse.release(handle)
+        if self.prefix is not None:
+            self.prefix.release(handle)     # unpin the shared prefix
         for q in (self.sched.waiting, self.sched.running,
                   self.sched.swapped, self.sched.swapping_in):
             if handle in q:
@@ -639,13 +691,53 @@ class ServingEngine:
         return [(blocks[i], min(mb, len(blocks) - i))
                 for i in range(0, len(blocks), mb)]
 
+    def _shared_tokens(self, rid: int) -> int:
+        """Block-aligned prefix-cache prefix pinned on GPU for ``rid``."""
+        return self.prefix.shared_tokens(rid) if self.prefix is not None \
+            else 0
+
+    def _block_table(self, rid: int) -> List[int]:
+        """Composed logical->physical block table: the mapped shared
+        prefix (prefix-cache nodes) followed by the request's private
+        blocks.  Without a mapping this is exactly the manager's table."""
+        ids = self.gpu_mgr.request_block_ids(rid)
+        if self.prefix is not None:
+            shared = self.prefix.blocks_for(rid)
+            if shared:
+                return shared + ids
+        return ids
+
+    def _gpu_alloc_tokens(self, rid: int, n_tokens: int) -> None:
+        """allocate+note with prefix-cache eviction fallback: when the
+        pool is exhausted, reclaim unreferenced cached leaves (worst
+        fairness score first) before the caller falls back to preempting
+        a live victim.  Raises OutOfBlocksError when neither helps."""
+        if n_tokens <= 0:
+            return
+        try:
+            self.gpu_mgr.allocate_tokens(rid, n_tokens)
+        except OutOfBlocksError:
+            if self.prefix is None:
+                raise
+            bs = self.config.block_size
+            freed = self.prefix.evict((n_tokens + bs - 1) // bs + 1,
+                                      now_us=self.clock.now_us)
+            self.metrics.prefix_evictions += freed
+            if not freed:
+                raise
+            self.gpu_mgr.allocate_tokens(rid, n_tokens)
+        self.gpu_mgr.note_tokens(rid, n_tokens)
+
     def _runs_for_tokens(self, rid: int, t0: int, t1: int
                          ) -> List[Tuple[int, int]]:
-        """Contiguous GPU block runs covering tokens [t0, t1)."""
+        """Contiguous GPU block runs covering tokens [t0, t1) of the
+        COMPOSED table (shared prefix + private suffix) — swap callers
+        only ever pass ranges at or beyond the shared prefix, so the
+        resulting runs never contain a pinned shared block."""
         if t1 <= t0:
             return []
         bs = self.config.block_size
-        ids = self.gpu_mgr.request_block_ids(rid)
+        ids = self._block_table(rid)
         b0, b1 = t0 // bs, (t1 + bs - 1) // bs
         blocks = ids[b0:b1]
         runs: List[Tuple[int, int]] = []
@@ -687,8 +779,14 @@ class ServingEngine:
         total = req.context_tokens if last_slot_written \
             else max(req.context_tokens - 1, 0)
         self.reuse.update_priority(rid, self.sched.priority(rid))
+        # shared prefix-cache blocks are PINNED on GPU: they are never
+        # transferred (floor_tokens excludes [0, shared) from the
+        # increment) and never released below — only the private suffix
+        # swaps, so preempting one sharer can't tear another's prefix
+        shared = self._shared_tokens(rid)
         inc, _cpu_runs = self.reuse.record_swap_out(
-            rid, total, requesting_priority=self.sched.priority(rid))
+            rid, total, requesting_priority=self.sched.priority(rid),
+            floor_tokens=shared)
         valid_before = total - inc
         gpu_runs = self._runs_for_tokens(rid, valid_before, total)
         gpu_blocks = runs_to_indices(gpu_runs)
@@ -714,9 +812,11 @@ class ServingEngine:
         request is immediately RUNNING (sync), False if in flight."""
         req = self._req(rid)
         tokens = req.context_tokens
+        # the shared prefix never left the GPU (pinned) — only the
+        # private suffix beyond it is allocated and restored
+        shared = self._shared_tokens(rid)
         try:
-            self.gpu_mgr.allocate_tokens(rid, tokens)
-            self.gpu_mgr.note_tokens(rid, tokens)
+            self._gpu_alloc_tokens(rid, tokens - shared)
         except OutOfBlocksError:
             # roll back the PARTIAL allocation (allocate_tokens acquires
             # groups incrementally) or the blocks leak into a deadlock
@@ -727,7 +827,7 @@ class ServingEngine:
         # token-ordered CPU block list, and a fragmented allocation can
         # hand out groups with descending starts — sorted runs would
         # restore every block into the wrong slot of the block table
-        gpu_runs = self._runs_for_tokens(rid, 0, tokens)
+        gpu_runs = self._runs_for_tokens(rid, shared, tokens)
         gpu_blocks = runs_to_indices(gpu_runs)
         # the newly allocated target blocks may still be the SOURCE of an
         # in-flight swap-out — synchronize before overwriting them
@@ -735,7 +835,7 @@ class ServingEngine:
         self.reuse.record_swap_in(rid)
         bs = self.config.block_size
         nblk = (tokens + bs - 1) // bs
-        cpu_ids = self.reuse.mgr.request_block_ids(rid)[:nblk] \
+        cpu_ids = self.reuse.mgr.request_block_ids(rid)[shared // bs:nblk] \
             if self.pools is not None else []
         asynchronous = self.swap.decide_async(
             len(self.sched.running), sum(n for _, n in gpu_runs),
@@ -906,11 +1006,17 @@ class ServingEngine:
         if req.resume_tokens:
             return self._admit_resume(rid)
         turn = req.current_turn()
+        # two sources of already-present KV: the GPU-pinned shared prefix
+        # [0, shared) — no transfer at all — and the CPU reuse copy,
+        # restored for [shared, reused).  ``reused`` >= ``shared`` by the
+        # floor invariant (record_swap_out keeps valid_tokens at or above
+        # the pinned prefix), so the two ranges tile.
+        shared = self._shared_tokens(rid)
         reused = min(self.reuse.valid_tokens(rid), req.prefix_tokens)
+        reused = max(reused, shared)
         new_ctx = req.prefix_tokens + turn.prompt_tokens
         try:
-            self.gpu_mgr.allocate_tokens(rid, new_ctx)
-            self.gpu_mgr.note_tokens(rid, new_ctx)
+            self._gpu_alloc_tokens(rid, new_ctx - shared)
         except OutOfBlocksError:
             self.gpu_mgr.release_request(rid)   # roll back partial alloc
             return False
@@ -918,11 +1024,12 @@ class ServingEngine:
         gpu_blocks = runs_to_indices(gpu_runs)
         self.swap.resolve_conflicts(self.clock, gpu_blocks)
         # prefix-with-prefill: reused tokens are swapped in, the rest computed
-        if reused > 0:
+        if reused > shared:
             bs = self.config.block_size
             n_reused_blocks = (reused + bs - 1) // bs
-            runs_in = self._runs_for_tokens(rid, 0, reused)  # token order
-            cpu_ids = self.reuse.mgr.request_block_ids(rid)[:n_reused_blocks] \
+            runs_in = self._runs_for_tokens(rid, shared, reused)
+            cpu_ids = self.reuse.mgr.request_block_ids(rid)[
+                shared // bs:n_reused_blocks] \
                 if self.pools is not None else []
             self._dispatch_swap(rid, "in", runs_in, cpu_ids,
                                 asynchronous=False)  # prefill needs it NOW
@@ -992,8 +1099,7 @@ class ServingEngine:
         when the pool stays full."""
         before = set(self.gpu_mgr.request_block_ids(rid))
         try:
-            self.gpu_mgr.allocate_tokens(rid, 1)
-            self.gpu_mgr.note_tokens(rid, 1)
+            self._gpu_alloc_tokens(rid, 1)    # evicts cached leaves first
         except OutOfBlocksError:
             victim = self._find_victim(exclude={rid})
             if victim is None:
@@ -1002,8 +1108,7 @@ class ServingEngine:
             if skipped is not None:
                 skipped.add(victim)
             try:
-                self.gpu_mgr.allocate_tokens(rid, 1)
-                self.gpu_mgr.note_tokens(rid, 1)
+                self._gpu_alloc_tokens(rid, 1)
             except OutOfBlocksError:
                 return False
         grown = [b for b in self.gpu_mgr.request_block_ids(rid)
@@ -1062,14 +1167,17 @@ class ServingEngine:
         pending token and resumes decoding."""
         req = self._req(rid)
         ctx = req.resume_tokens
+        shared = self._shared_tokens(rid)    # pinned prefix: still resident
         try:
-            self.gpu_mgr.allocate_tokens(rid, ctx)
-            self.gpu_mgr.note_tokens(rid, ctx)
+            self._gpu_alloc_tokens(rid, ctx - shared)
         except OutOfBlocksError:
             self.gpu_mgr.release_request(rid)   # roll back partial alloc
             return False
-        gpu_blocks = self.gpu_mgr.request_block_ids(rid)
-        self.swap.resolve_conflicts(self.clock, gpu_blocks)
+        # conflict sync covers only the newly allocated PRIVATE blocks
+        # (pinned shared blocks are never swap sources or targets)
+        self.swap.resolve_conflicts(
+            self.clock, self.gpu_mgr.request_block_ids(rid))
+        gpu_blocks = self._block_table(rid)
         # A sim-mode recompute preemption can land MID chunked prefill —
         # before the turn's first token existed (real mode can't reach
         # here: _abort_chunked_prefill reroutes those to a fresh admit).
@@ -1085,8 +1193,16 @@ class ServingEngine:
                 # the token positions fixed — only the KV is re-filling)
                 view = DecodeRequestView(rid, gpu_blocks, req.token_history,
                                          sampling=self._view_sampling(req))
-                req.prefill_remaining = self.runner.prefill_begin(
-                    view, emit_first=False)
+                if shared:
+                    # seed the carry from the pinned prefix: recomputing
+                    # it would scatter into shared blocks
+                    with self.swap._pool_lock:
+                        req.prefill_remaining = self.runner.prefill_begin(
+                            view, emit_first=False, reused_tokens=shared,
+                            pool=self.pools.gpu)
+                else:
+                    req.prefill_remaining = self.runner.prefill_begin(
+                        view, emit_first=False)
             else:
                 req.prefill_remaining = ctx
             req.prefill_is_resume = emitted
@@ -1111,14 +1227,24 @@ class ServingEngine:
         """Recompute-preemption resume: the runner regenerates KV for the
         already-known history (all but the last token — its K/V is written
         by the next decode step, which consumes hist[-1] as input) and
-        inserts it through its persistent block tables."""
-        view = DecodeRequestView(req.rid,
-                                 self.gpu_mgr.request_block_ids(req.rid),
+        inserts it through its persistent block tables.  A pinned shared
+        prefix seeds the carry instead of being recomputed — recomputing
+        it would scatter into blocks other sharers are reading."""
+        rid = req.rid
+        view = DecodeRequestView(rid, self._block_table(rid),
                                  req.token_history,
                                  sampling=self._view_sampling(req))
+        shared = self._shared_tokens(rid)
+        if shared:
+            with self.swap._pool_lock:   # the carry seed reads the pool
+                total = self.runner.prefill_begin(
+                    view, emit_first=False, reused_tokens=shared,
+                    pool=self.pools.gpu)
+        else:
+            total = self.runner.prefill_begin(view, emit_first=False)
         # KV compute runs OUTSIDE the pool lock (it never touches the
         # pool); only the scatter + rebind serialize with swap copies
-        staged = self.runner.prefill_compute(view, emit_first=False)
+        staged = self.runner.prefill_chunk_compute(rid, total)
         with self.swap._pool_lock:
             self.pools.gpu = self.runner.prefill_insert(
                 view, self.pools.gpu, staged)
@@ -1139,7 +1265,7 @@ class ServingEngine:
             "real mode needs prompt token ids (add_request got a count?)"
         hist.extend(turn.prompt_ids)
         req.hist_emitted = len(hist)     # stream deltas = response tokens
-        return DecodeRequestView(rid, self.gpu_mgr.request_block_ids(rid),
+        return DecodeRequestView(rid, self._block_table(rid),
                                  hist, sampling=self._view_sampling(req))
 
     def _real_prefill(self, req: Request, reused: int = 0) -> None:
@@ -1168,6 +1294,24 @@ class ServingEngine:
         with self.swap._pool_lock:
             self.pools.gpu = self.runner.prefill_insert(
                 view, self.pools.gpu, staged)
+        self._prefix_insert(req)
+
+    def _prefix_insert(self, req: Request) -> None:
+        """Donate a freshly prefilled FIRST-turn prompt's full blocks to
+        the prefix tree (the block holding the last prompt token doubles
+        as the first decode slot and stays private).  Only turn 0
+        qualifies: later turns' prompts sit beyond decode tokens unique
+        to this conversation, so no other request could ever match them.
+        The donated blocks stay physically in place — the request keeps
+        using them, now as mapped shared blocks."""
+        if self.prefix is None or req.turn_idx != 0:
+            return
+        ids = req.current_turn().prompt_ids
+        if not ids:
+            return
+        self.prefix.insert(req.rid, list(ids),
+                           now_us=self.clock.now_us,
+                           priority=self.sched.priority(req.rid))
 
     def _begin_real_chunked_prefill(self, req: Request,
                                     reused: int) -> None:
@@ -1222,6 +1366,7 @@ class ServingEngine:
             if req.prefill_is_resume:
                 req.prefill_is_resume = False
             else:
+                self._prefix_insert(req)
                 self._emit_first_token(rid)
         return n
 
@@ -1230,7 +1375,7 @@ class ServingEngine:
         changed block-table rows are uploaded, the pool is donated, and
         the next-token host sync is deferred to the next iteration's
         decode (overlapping this step with the next control plane)."""
-        views = [DecodeRequestView(r, self.gpu_mgr.request_block_ids(r),
+        views = [DecodeRequestView(r, self._block_table(r),
                                    self._req(r).token_history,
                                    sampling=self._view_sampling(self._req(r)))
                  for r in rids]
@@ -1320,7 +1465,10 @@ class ServingEngine:
                           key=self.sched.priority, reverse=True):
             free_tok = self.gpu_mgr.free_blocks() * bs
             req = self._req(rid)
-            need = req.prefix_tokens + req.current_turn().prompt_tokens + bs
+            # the pinned shared prefix is already resident: only the
+            # private tail needs free space
+            need = (req.prefix_tokens + req.current_turn().prompt_tokens
+                    + bs - self._shared_tokens(rid))
             if need > free_tok \
                     or len(self.sched.running) + len(self.sched.swapping_in) \
                     >= self._admission_target():
@@ -1331,7 +1479,8 @@ class ServingEngine:
                     >= self._admission_target():
                 break
             free_tok = self.gpu_mgr.free_blocks() * bs
-            if self._req(rid).context_tokens + bs > free_tok:
+            if (self._req(rid).context_tokens + bs
+                    - self._shared_tokens(rid)) > free_tok:
                 break
             self._contained(rid, self._swap_in, rid)
 
@@ -1559,6 +1708,8 @@ class ServingEngine:
         else:
             req.state = ReqState.DONE
             self.reuse.release(rid)
+            if self.prefix is not None:
+                self.prefix.release(rid)    # unpin the shared prefix
             del self.sched.requests[rid]
             self._event(rid, "finish", retained=False, tokens=req.generated)
 

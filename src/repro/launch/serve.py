@@ -167,6 +167,12 @@ def run_online(args) -> dict:
     # robustness wiring (DESIGN.md §7): seeded chaos schedule, invariant
     # sanitizer cadence, copy watchdog, bounded admission
     overrides = {}
+    if args.prefix_cache:
+        overrides["prefix_cache"] = True
+        if args.smoke:
+            # the prefix-cache smoke doubles as a refcount-conservation
+            # gate: C1/C2 checked after every step
+            overrides["check_invariants_every"] = 1
     if args.chaos:
         overrides["fault_plan"] = FaultPlan.chaos(seed=args.seed,
                                                   intensity=args.chaos)
@@ -191,9 +197,21 @@ def run_online(args) -> dict:
                            model_bundle=model, event_sink=sink,
                            stream_tokens=args.stream and args.real)
 
+    # shared "system prompt": with the prefix cache on, every
+    # conversation's FIRST turn opens with the same token run so the
+    # radix tree gets real cross-request hits (3 full blocks cacheable
+    # out of 49 tokens at block_size 16)
+    sys_prefix = []
+    if args.prefix_cache:
+        vocab = model["cfg"].vocab_size if model else 1 << 20
+        sys_prefix = [(7 * i + 3) % vocab for i in range(49)]
+
     def prompt_for(conv, tix):
-        return prompt_for_turn(
+        toks = prompt_for_turn(
             conv, tix, model["cfg"].vocab_size if model else None)
+        if tix == 0 and sys_prefix:
+            toks = sys_prefix + list(toks)
+        return toks
 
     rng = random.Random(args.seed + 1)
     pending = sorted(convs, key=lambda c: c.arrival_s)
@@ -283,6 +301,9 @@ def run_online(args) -> dict:
         print("admission " + json.dumps({
             "rejected": m.rejected, "shed": m.shed,
             "client_refused": n_refused}))
+    if args.prefix_cache:
+        result["prefix"] = engine.prefix.stats()
+        print("prefix " + json.dumps(engine.prefix.stats()))
     if ev_file:
         ev_file.close()
         n_ev = validate_event_log(args.events)
@@ -301,6 +322,13 @@ def run_online(args) -> dict:
             assert sum(engine.faults.fired.values()) > 0, \
                 "chaos smoke fired no faults"
             assert m.invariant_checks > 0, "invariant sanitizer never ran"
+        if args.prefix_cache:
+            # cross-request sharing must actually happen: every conv
+            # after the first opens with the cached system prompt
+            assert m.prefix_hits > 0, "prefix-cache smoke saw no hits"
+            assert m.prefix_tokens_saved > 0, "prefix hits saved nothing"
+            assert m.invariant_checks > 0, \
+                "prefix smoke ran without the sanitizer"
         print(f"online smoke OK: {m.total_tokens} tokens, "
               f"{len(m.request_stats)} turns, {m.aborted} aborted, "
               f"{m.faulted} faulted")
@@ -405,8 +433,14 @@ def main() -> None:
     ap.add_argument("--drain", type=float, default=0.0, metavar="T_S",
                     help="enter drain mode at t=T_S: refuse new work, "
                          "finish in-flight requests, exit")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request prefix cache (DESIGN.md §10); "
+                         "implies --real --online")
     args = ap.parse_args()
 
+    if args.prefix_cache:
+        args.real = True               # the cache lives on the real pool
+        args.online = True
     if args.smoke and not args.online:
         args.online = True
     if args.smoke:

@@ -52,9 +52,11 @@ def page_tile(n_pages: int) -> int:
     return 1
 
 
-def _decode_core(params, pool, block_tables, context_lens, tokens,
-                 cfg: ModelConfig, axis_name=None):
-    """Shared decode body: one token per row through the paged pool.
+def _decode_hidden(params, pool, block_tables, context_lens, tokens,
+                   cfg: ModelConfig, axis_name=None):
+    """Shared decode body up to the final norm: one token per row
+    through the paged pool.  Returns (x_last (B, d), new_pool) — the
+    unembed is left to the caller so the mesh step can vocab-shard it.
 
     ``axis_name`` is the tensor-parallel mesh axis when this body runs
     under ``shard_map`` (DESIGN.md §9): ``cfg`` then describes the
@@ -103,8 +105,18 @@ def _decode_core(params, pool, block_tables, context_lens, tokens,
 
     x, new_pool = jax.lax.scan(body, x, (params["layers"], pool))
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x[:, 0], new_pool
+
+
+def _decode_core(params, pool, block_tables, context_lens, tokens,
+                 cfg: ModelConfig, axis_name=None):
+    """Legacy full-logits decode body (hidden body + replicated unembed).
+    Returns (next_tokens, logits, new_pool)."""
+    x_last, new_pool = _decode_hidden(params, pool, block_tables,
+                                      context_lens, tokens, cfg,
+                                      axis_name=axis_name)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-    logits = L.unembed(head, x[:, 0])
+    logits = L.unembed(head, x_last)
     next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return next_tokens, logits, new_pool
 
@@ -181,12 +193,50 @@ def paged_decode_step(params, pool, block_tables, context_lens, tokens,
 
 def _device_step_core(params, pool, block_tables, context_lens, tokens,
                       active, keys, sampling, cfg: ModelConfig,
-                      axis_name=None):
-    """Body shared by the single-device and mesh-sharded device steps."""
-    _, logits, new_pool = _decode_core(params, pool, block_tables,
-                                       context_lens, tokens, cfg,
-                                       axis_name=axis_name)
-    nxt = sample_tokens(logits, keys, context_lens, sampling)
+                      axis_name=None, n_shards=1):
+    """Body shared by the single-device and mesh-sharded device steps.
+
+    Under the mesh (``axis_name`` set, ``n_shards > 1``, vocab divisible)
+    the unembed is VOCAB-SHARDED: each shard matmuls only its (V/n, d)
+    row slice of the head table and the greedy winner is combined from a
+    tiny all-gathered (n, B) candidate pair — per-shard max value plus
+    global argmax index — instead of every shard redundantly computing
+    the full (B, V) logits.  ``jnp.argmax`` picks the FIRST maximum and
+    shard order equals vocab order, so taking the lowest shard among
+    value ties reproduces the replicated argmax bit-exactly.  Batches
+    with any sampled row fall back (one ``lax.cond`` branch, same
+    compiled variant) to all-gathering the full logits, which a tiled
+    concat makes bit-identical to the replicated unembed."""
+    x_last, new_pool = _decode_hidden(params, pool, block_tables,
+                                      context_lens, tokens, cfg,
+                                      axis_name=axis_name)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if axis_name is None or n_shards <= 1 \
+            or cfg.vocab_size % n_shards != 0:
+        logits = L.unembed(head, x_last)
+        nxt = sample_tokens(logits, keys, context_lens, sampling)
+    else:
+        B = tokens.shape[0]
+        Vs = cfg.vocab_size // n_shards
+        shard = jax.lax.axis_index(axis_name)
+        w_local = jax.lax.dynamic_slice_in_dim(
+            head["table"], shard * Vs, Vs, axis=0)
+        local = L.unembed(head, x_last, table=w_local)     # (B, V/n)
+        vals = jnp.max(local, axis=-1)
+        idxs = (jnp.argmax(local, axis=-1)
+                + shard * Vs).astype(jnp.int32)
+        all_vals = jax.lax.all_gather(vals, axis_name)     # (n, B)
+        all_idxs = jax.lax.all_gather(idxs, axis_name)     # (n, B)
+        best = jnp.argmax(all_vals, axis=0)                # first max wins
+        greedy = jnp.take_along_axis(all_idxs, best[None, :], axis=0)[0]
+
+        def _sampled(_):
+            full = jax.lax.all_gather(local, axis_name, axis=1,
+                                      tiled=True)          # (B, V)
+            return sample_tokens(full, keys, context_lens, sampling)
+
+        nxt = jax.lax.cond(jnp.any(sampling[:, 0] > 0.0), _sampled,
+                           lambda _: greedy, None)
     new_ctx = jnp.where(active, context_lens + 1, context_lens)
     new_tok = jnp.where(active, nxt, tokens)
     return nxt, new_pool, new_ctx, new_tok
@@ -238,10 +288,12 @@ def _sharded_device_step(params, pool, block_tables, context_lens,
     """Mesh-sharded decode step: tensor-parallel over the ``"model"``
     axis with the KV pool head-sharded (DESIGN.md §9).  Per-shard
     compute covers that shard's heads only; head outputs are
-    all-gathered (pure concat) before the replicated ``wo``, and the
-    MLP / unembed / sampling run replicated on every shard — no float
-    reduction ever crosses shards, so the token stream is bit-identical
-    to the single-device step (mesh (1,1) degenerates to it exactly).
+    all-gathered (pure concat) before the replicated ``wo`` and the MLP
+    runs replicated, while the unembed is VOCAB-SHARDED with a tiny
+    per-shard greedy-candidate gather (see ``_device_step_core``) — no
+    float reduction ever crosses shards, so the token stream is
+    bit-identical to the single-device step (mesh (1,1) degenerates to
+    it exactly).
     """
     from jax.experimental.shard_map import shard_map
     from repro.models.sharding import (pool_pspec, rep_pspec,
@@ -249,7 +301,7 @@ def _sharded_device_step(params, pool, block_tables, context_lens,
     n = mesh.shape["model"]
     local_cfg = shard_local_config(cfg, n)
     body = functools.partial(_device_step_core, cfg=local_cfg,
-                             axis_name="model")
+                             axis_name="model", n_shards=n)
     rep = rep_pspec()
     return shard_map(
         body, mesh=mesh,

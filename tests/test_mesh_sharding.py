@@ -148,6 +148,66 @@ def test_real_engine_4way_mesh_bit_parity_under_storm():
 
 
 # ---------------------------------------------------------------------------
+# vocab-sharded unembed: greedy candidate gather + sampled-row fallback
+# must be bit-exact with the single-device full-logits step
+# ---------------------------------------------------------------------------
+
+SAMPLED_UNEMBED_PARITY = """
+import dataclasses
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro.configs import get_smoke_config
+from repro.models import transformer as T
+from repro.models.paged import (paged_decode_step_device,
+                                paged_decode_step_device_sharded)
+
+assert len(jax.devices()) == 4
+cfg = dataclasses.replace(get_smoke_config("llama3.2-3b"),
+                          n_heads=4, n_kv_heads=4, head_dim=16,
+                          d_model=64, n_layers=2, d_ff=128,
+                          vocab_size=256)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+mesh = jax.make_mesh((1, 4), ("data", "model"))
+
+B, n_pages, bs = 4, 4, 16
+rng = np.random.RandomState(3)
+pool_shape = (cfg.n_layers, 2, B * n_pages + 1, bs, cfg.n_kv_heads,
+              cfg.head_dim)
+pool0 = rng.randn(*pool_shape).astype(np.float32)
+tables = np.arange(B * n_pages, dtype=np.int32).reshape(B, n_pages)
+ctx = np.array([5, 17, 30, 47], np.int32)
+toks = rng.randint(0, cfg.vocab_size, size=(B,)).astype(np.int32)
+active = np.ones((B,), bool)
+keys = jnp.stack([jax.random.PRNGKey(100 + i) for i in range(B)])
+
+def run(fn, sampling, **kw):
+    nxt, _, new_ctx, new_tok = fn(
+        params, jnp.asarray(pool0), jnp.asarray(tables),
+        jnp.asarray(ctx), jnp.asarray(toks), jnp.asarray(active), keys,
+        jnp.asarray(sampling, jnp.float32), cfg=cfg, **kw)
+    return np.asarray(nxt), np.asarray(new_ctx), np.asarray(new_tok)
+
+greedy = np.zeros((B, 3), np.float32); greedy[:, 2] = 1.0
+mixed = greedy.copy()
+mixed[1] = (0.8, 5, 0.9)      # top-k + nucleus sampled row
+mixed[3] = (1.3, 0, 0.7)      # nucleus-only sampled row
+
+for sampling in (greedy, mixed):
+    a = run(paged_decode_step_device, sampling)
+    b = run(paged_decode_step_device_sharded, sampling, mesh=mesh)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+print("SAMPLED_UNEMBED_OK")
+"""
+
+
+def test_vocab_sharded_unembed_greedy_and_sampled_parity():
+    out = _run_forced(SAMPLED_UNEMBED_PARITY)
+    assert "SAMPLED_UNEMBED_OK" in out
+
+
+# ---------------------------------------------------------------------------
 # per-shard staged slab round trip (bit-exact, incl. partial last block)
 # ---------------------------------------------------------------------------
 

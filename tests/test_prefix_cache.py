@@ -1,0 +1,598 @@
+"""Cross-request prefix cache (ISSUE 9 tentpole, DESIGN.md §10).
+
+Three layers of coverage:
+
+  * pool-level unit tests for the two `DynamicBlockGroupManager`
+    primitives the cache is built on (`release_tail_group` refusal,
+    `transfer_prefix_blocks` donation with tail retention, the
+    refcounted-block free tripwire);
+  * radix-tree unit + property tests against a *sentinel-pool* reference
+    model — every physical block carries the token chunk its KV encodes,
+    so "match is bit-exact" reduces to "node.key == phys[node.block]"
+    under arbitrary insert/match/fork/evict/abort interleavings
+    (hypothesis is dev-only: the property tests skip without it, the
+    deterministic interleavings below always run);
+  * real-engine acceptance tests: N users sharing a system prompt
+    perform exactly ONE full-prefix prefill (asserted on the runner's
+    prefill-token accounting) and the emitted token histories stay
+    bit-identical to the cache-disabled baseline under storm
+    preemption + swaps with the refcount sanitizer on every step.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:               # stub the decorators: defs still parse,
+    class _NoStrategies:          # the property tests skip individually
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+    st = _NoStrategies()
+
+    def given(*a, **k):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed; see requirements-dev.txt")(fn)
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+from repro.core.block_group import (  # noqa: E402
+    DynamicBlockGroupManager, OutOfBlocksError)
+from repro.core.prefix_cache import PrefixCache  # noqa: E402
+
+BS = 4
+
+
+# ---------------------------------------------------------------------------
+# pool primitives
+# ---------------------------------------------------------------------------
+
+def test_release_tail_group_refuses_refcounted():
+    mgr = DynamicBlockGroupManager(8, BS)
+    mgr.allocate_tokens(1, 2 * BS)
+    blocks = mgr.request_block_ids(1)
+    mgr.ref_block(blocks[-1])
+    assert mgr.release_tail_group(1) is None     # a sharer still maps it
+    mgr.unref_block(blocks[-1])
+    freed = mgr.release_tail_group(1)
+    assert freed is not None
+    assert mgr.free_blocks() == 8
+    assert mgr.release_tail_group(1) is None     # nothing left to release
+    mgr.check_invariants()
+
+
+def test_refcounted_blocks_never_reach_free_list():
+    mgr = DynamicBlockGroupManager(8, BS)
+    mgr.allocate_tokens(1, 2 * BS)
+    mgr.ref_block(mgr.request_block_ids(1)[0])
+    with pytest.raises(AssertionError):
+        mgr.release_request(1)                   # tripwire, not silent free
+
+
+def test_transfer_prefix_blocks_donation():
+    mgr = DynamicBlockGroupManager(16, BS)
+    mgr.allocate_tokens(1, 5 * BS)
+    mgr.note_tokens(1, 5 * BS)
+    table = mgr.request_block_ids(1)
+    donated = mgr.transfer_prefix_blocks(1, [-9001, -9002, -9003])
+    # physical blocks don't move: composed table is byte-identical
+    assert donated == table[:3]
+    assert mgr.request_block_ids(1) == table[3:]
+    assert mgr.request_tokens(1) == 2 * BS
+    for owner, b in zip([-9001, -9002, -9003], donated):
+        assert mgr.request_block_ids(owner) == [b]
+        assert mgr.request_tokens(owner) == BS
+    mgr.check_invariants()
+    # donated blocks release through the same tail API contamination uses
+    assert mgr.release_tail_group(-9002) is not None
+    mgr.check_invariants()
+
+
+def test_transfer_keeps_unused_tail_with_donor():
+    mgr = DynamicBlockGroupManager(16, BS)
+    mgr.allocate_tokens(1, 3 * BS - 2)           # 3 used blocks, group of 4
+    mgr.note_tokens(1, 3 * BS - 2)
+    used = mgr.request_block_ids(1)
+    assert len(used) == 3
+    mgr.transfer_prefix_blocks(1, [-1, -2, -3])  # donate ALL used blocks
+    # the unused group tail stays with the donor (still allocated, usable)
+    assert mgr.request_block_ids(1) == []
+    assert mgr.request_tokens(1) == 0
+    mgr.check_invariants()
+    before = mgr.free_blocks()
+    mgr.allocate_tokens(1, 2)                    # grows into the kept tail
+    assert mgr.free_blocks() == before
+    mgr.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# radix tree units
+# ---------------------------------------------------------------------------
+
+def _fresh(n_blocks=32):
+    mgr = DynamicBlockGroupManager(n_blocks, BS)
+    return mgr, PrefixCache(mgr, BS)
+
+
+def _prefill(mgr, rid, ids, shared=0):
+    """Simulate the engine's private-suffix allocation for a prompt."""
+    mgr.allocate_tokens(rid, len(ids) - shared)
+    mgr.note_tokens(rid, len(ids) - shared)
+
+
+def test_acquire_miss_insert_hit_roundtrip():
+    mgr, cache = _fresh()
+    ids = list(range(1, 14))                     # 13 tokens -> 3 cacheable
+    assert cache.acquire(1, ids) == 0            # cold tree: miss
+    _prefill(mgr, 1, ids)
+    donated_from = mgr.request_block_ids(1)[:3]
+    assert cache.insert(1, ids) == 3 * BS
+    # a second identical prompt maps the full cacheable prefix
+    shared = cache.acquire(2, ids)
+    assert shared == 3 * BS
+    assert cache.blocks_for(2) == donated_from   # same physical blocks
+    assert cache.shared_tokens(2) == 3 * BS
+    # both the donor and the sharer pin every node block
+    for b in donated_from:
+        assert mgr.block_refcount(b) == 2
+    st = cache.stats()
+    assert (st["hits"], st["misses"], st["tokens_saved"]) == (1, 1, 12)
+    cache.release(1)
+    cache.release(2)
+    assert all(mgr.block_refcount(b) == 0 for b in donated_from)
+    mgr.check_invariants()
+
+
+def test_insert_chunk_keys_are_consecutive():
+    """Regression (ISSUE 9): ``insert`` computed each node's chunk index
+    from the mapped list WHILE appending to it, keying new nodes on
+    chunks 0, 2, 4, … — a later prompt whose chunk-1 happened to equal
+    the donor's chunk-2 would map the wrong KV block.  A fresh insert
+    must be fully re-matchable, chunk by chunk."""
+    mgr, cache = _fresh()
+    ids = list(range(1, 18))                     # 17 tokens -> 4 cacheable
+    _prefill(mgr, 1, ids)
+    assert cache.insert(1, ids) == 4 * BS
+    assert cache.match_tokens(ids) == 4 * BS
+    path = cache._walk(ids, 4)
+    assert [t for n in path for t in n.key] == ids[:4 * BS]
+
+
+def test_last_prompt_block_stays_private():
+    """COW by construction: the block holding the last prompt token is
+    the first decode slot's block — it is never cacheable, so a sharer
+    can never write a shared block."""
+    mgr, cache = _fresh()
+    ids = list(range(1, 1 + 2 * BS))             # exactly 2 full blocks
+    _prefill(mgr, 1, ids)
+    assert cache.insert(1, ids) == 1 * BS        # only block 0 donated
+    assert cache.match_tokens(ids) == 1 * BS
+
+
+def test_fork_divergence_creates_sibling():
+    mgr, cache = _fresh()
+    a = [1, 2, 3, 4, 5, 6, 7, 8, 9]              # 2 cacheable blocks
+    b = [1, 2, 3, 4, 50, 60, 70, 80, 90]         # diverges in block 1
+    _prefill(mgr, 1, a)
+    cache.insert(1, a)
+    shared = cache.acquire(2, b)
+    assert shared == 1 * BS                      # block 0 shared only
+    _prefill(mgr, 2, b, shared=shared)
+    assert cache.insert(2, b) == 1 * BS          # sibling under block 0
+    assert cache.n_nodes == 3
+    assert cache.match_tokens(a) == 2 * BS
+    assert cache.match_tokens(b) == 2 * BS
+    mgr.check_invariants()
+
+
+def test_concurrent_identical_insert_skips():
+    """Two identical admissions both miss (tree cold), both prefill; the
+    second ``insert`` would fork duplicate interior nodes — it must skip
+    and keep its private blocks."""
+    mgr, cache = _fresh()
+    ids = list(range(1, 14))
+    assert cache.acquire(1, ids) == 0
+    assert cache.acquire(2, ids) == 0
+    _prefill(mgr, 1, ids)
+    _prefill(mgr, 2, ids)
+    assert cache.insert(1, ids) == 3 * BS
+    table2 = mgr.request_block_ids(2)
+    assert cache.insert(2, ids) == 0             # deeper path exists: skip
+    assert mgr.request_block_ids(2) == table2    # private blocks untouched
+    assert cache.n_nodes == 3
+    mgr.check_invariants()
+
+
+def test_eviction_is_fairness_scored_and_leaf_only():
+    mgr, cache = _fresh()
+    a, b = [1, 2, 3, 4, 5], [9, 8, 7, 6, 5]      # one cacheable block each
+    _prefill(mgr, 1, a)
+    cache.insert(1, a, now_us=0.0, priority=0.1)
+    _prefill(mgr, 2, b)
+    cache.insert(2, b, now_us=0.0, priority=0.9)
+    cache.release(1)
+    cache.release(2)
+    cache.acquire(3, b, now_us=50.0, priority=0.9)   # recent hot hit on b
+    cache.release(3)
+    # a: old, no hits, low historical priority -> worst score, goes first
+    assert cache.evict(1, now_us=100.0) == 1
+    assert cache.match_tokens(a) == 0
+    assert cache.match_tokens(b) == 1 * BS
+    mgr.check_invariants()
+
+
+def test_eviction_refuses_mapped_leaves():
+    mgr, cache = _fresh()
+    ids = list(range(1, 14))
+    _prefill(mgr, 1, ids)
+    cache.insert(1, ids)                         # rid 1 still maps the path
+    assert cache.evict(10) == 0                  # every leaf is refcounted
+    cache.release(1)
+    assert cache.evict(10) == 3                  # now the whole chain goes
+    assert cache.n_nodes == 0
+    mgr.release_request(1)
+    assert mgr.free_blocks() == 32
+    mgr.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# sentinel-pool reference model (S5)
+# ---------------------------------------------------------------------------
+
+class _SentinelModel:
+    """Reference model: ``phys[block]`` is the token chunk whose KV the
+    block holds.  The engine writes a block exactly once (its prefill),
+    so if the tree's bookkeeping is right, every node's key must keep
+    matching its block's sentinel forever — any aliasing, premature free
+    or mis-keyed insert shows up as a sentinel mismatch."""
+
+    def __init__(self, n_blocks=24):
+        self.mgr = DynamicBlockGroupManager(n_blocks, BS)
+        self.cache = PrefixCache(self.mgr, BS)
+        self.phys = {}
+        self.prompts = {}
+        self.now = 0.0
+
+    def _tick(self):
+        self.now += 1.0
+        return self.now
+
+    def _drop_freed(self):
+        for start, length in self.mgr.free.items():
+            for blk in range(start, start + length):
+                self.phys.pop(blk, None)
+
+    def admit(self, rid, ids, priority=0.5):
+        if rid in self.prompts:
+            return False
+        shared = self.cache.acquire(rid, ids, now_us=self._tick(),
+                                    priority=priority)
+        need = len(ids) - shared
+        try:
+            self.mgr.allocate_tokens(rid, need)
+        except OutOfBlocksError:
+            # engine behaviour: evict cache leaves first, retry once
+            self.cache.evict(-(-need // BS), now_us=self.now)
+            self._drop_freed()
+            try:
+                self.mgr.allocate_tokens(rid, need)
+            except OutOfBlocksError:
+                self.cache.release(rid)
+                return False
+        self.mgr.note_tokens(rid, need)
+        # prefill writes ONLY the private suffix blocks
+        table = (self.cache.blocks_for(rid)
+                 + self.mgr.request_block_ids(rid))
+        for j, blk in enumerate(table):
+            chunk = tuple(ids[j * BS:(j + 1) * BS])
+            if j * BS >= shared:
+                self.phys[blk] = chunk
+            else:                           # shared block: never rewritten
+                assert self.phys.get(blk) == chunk
+        self.prompts[rid] = ids
+        return True
+
+    def donate(self, rid):
+        if rid not in self.prompts:
+            return False
+        self.cache.insert(rid, self.prompts[rid], now_us=self._tick(),
+                          priority=0.5)
+        return True
+
+    def finish(self, rid):
+        if rid not in self.prompts:
+            return False
+        self.cache.release(rid)
+        self.mgr.release_request(rid)
+        self._drop_freed()
+        del self.prompts[rid]
+        return True
+
+    def evict(self, n):
+        self.cache.evict(n, now_us=self._tick())
+        self._drop_freed()
+
+    def check(self):
+        self.mgr.check_invariants()
+        node_blocks = set()
+        want_refs = {}
+        for rid in self.prompts:
+            for n in self.cache.mappings().get(rid, []):
+                want_refs[n.block] = want_refs.get(n.block, 0) + 1
+        for node in self.cache.iter_nodes():
+            node_blocks.add(node.block)
+            # bit-exactness: the block still holds the chunk its key says
+            assert self.phys.get(node.block) == node.key, \
+                (node.key, self.phys.get(node.block))
+            assert self.mgr.block_refcount(node.block) == \
+                want_refs.get(node.block, 0)
+        for start, length in self.mgr.free.items():
+            assert not (node_blocks & set(range(start, start + length))), \
+                "cached block on the free list"
+        for rid, ids in self.prompts.items():
+            maps = self.cache.mappings().get(rid, [])
+            flat = [t for n in maps for t in n.key]
+            assert flat == list(ids[:len(maps) * BS])
+            table = (self.cache.blocks_for(rid)
+                     + self.mgr.request_block_ids(rid))
+            assert len(table) == len(set(table)), "aliased block table"
+            # private suffix blocks are never simultaneously tree nodes
+            assert not (set(self.mgr.request_block_ids(rid)) & node_blocks)
+
+
+_PREFIXES = [list(range(100, 112)),              # 3 full blocks
+             list(range(200, 208)),              # 2 full blocks
+             list(range(100, 108))]              # prefix of the first
+
+
+def _prompt(p, rid, extra):
+    return _PREFIXES[p % len(_PREFIXES)] + \
+        [1000 * (rid + 1) + i for i in range(extra % 7)]
+
+
+def test_interleaved_share_fork_evict_deterministic():
+    m = _SentinelModel()
+    p1 = _prompt(0, 1, 5)
+    assert m.admit(1, p1)
+    m.donate(1)
+    m.check()
+    p2 = _prompt(0, 2, 6)                        # same 12-token prefix
+    assert m.admit(2, p2)
+    assert m.cache.shared_tokens(2) == 12
+    m.donate(2)                                  # forks below the share
+    m.check()
+    p3 = _prompt(1, 3, 4)                        # different system prompt
+    assert m.admit(3, p3)
+    assert m.cache.shared_tokens(3) == 0
+    m.donate(3)
+    m.check()
+    m.finish(1)
+    m.check()                                    # rid 2 keeps the prefix hot
+    m.evict(100)                                 # only unmapped leaves go
+    assert m.cache.match_tokens(p2) >= 12
+    m.check()
+    m.finish(2)
+    m.finish(3)
+    m.evict(100)
+    assert m.cache.n_nodes == 0
+    assert m.mgr.free_blocks() == 24
+    m.check()
+
+
+def test_pressure_eviction_never_frees_mapped_blocks():
+    m = _SentinelModel(n_blocks=8)
+    assert m.admit(1, _prompt(0, 1, 5))          # 12 shared-able + tail
+    m.donate(1)
+    m.check()
+    # pool nearly full: the next distinct admission must evict, but rid 1
+    # still maps the tree — admission fails instead of corrupting it
+    assert not m.admit(2, _prompt(1, 2, 6) + list(range(300, 314)))
+    m.check()
+    m.finish(1)
+    m.check()
+    # with the mapping gone the same admission evicts the old prefix
+    assert m.admit(2, _prompt(1, 2, 6) + list(range(300, 314)))
+    m.check()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3),     # op
+                          st.integers(0, 5),     # rid
+                          st.integers(0, 5),     # prefix choice / evict n
+                          st.integers(0, 6)),    # suffix length
+                min_size=1, max_size=40))
+def test_prefix_tree_interleaving_property(ops):
+    """Property (S5): under ANY interleaving of admit/donate/finish/evict
+    the tree never frees a refcounted block, never aliases a private
+    suffix with a cached block, and every mapping stays bit-exact against
+    the sentinel pool."""
+    m = _SentinelModel(n_blocks=16)
+    for op, rid, p, extra in ops:
+        if op == 0:
+            m.admit(rid, _prompt(p, rid, extra))
+        elif op == 1:
+            m.donate(rid)
+        elif op == 2:
+            m.finish(rid)
+        else:
+            m.evict(p)
+        m.check()
+    for rid in list(m.prompts):
+        m.finish(rid)
+    m.evict(100)
+    m.check()
+    assert m.mgr.free_blocks() == 16
+
+
+# ---------------------------------------------------------------------------
+# real-engine acceptance (ISSUE 9 criteria)
+#
+# Each workload runs in a FRESH SUBPROCESS — same rationale as
+# tests/test_system.py: jaxlib's native backend_compile segfaults once a
+# single full-suite process has accumulated enough compiled executables,
+# and these tests compile several real-engine variants each.  Every
+# child re-derives the model/prompts from fixed seeds and prints one
+# JSON line; behavioural asserts run in the child so the parent sees the
+# full failure text.
+# ---------------------------------------------------------------------------
+
+import os       # noqa: E402
+import subprocess  # noqa: E402
+import sys      # noqa: E402
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_ENGINE_PRELUDE = """
+import json
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core import EngineConfig, SamplingParams, ServingEngine
+from repro.data.priority import PriorityTrace
+from repro.models import transformer as T
+
+cfg_m = get_smoke_config("qwen2-1.5b")
+params = T.init_params(cfg_m, jax.random.PRNGKey(0))
+model = {"cfg": cfg_m, "params": params}
+
+
+def shared_prompts(n_req, prefix_len=49):
+    rng = np.random.RandomState(7)
+    sys_prefix = rng.randint(1, cfg_m.vocab_size, prefix_len).tolist()
+    return [sys_prefix + rng.randint(1, cfg_m.vocab_size, 5 + 3 * i).tolist()
+            for i in range(n_req)]
+
+
+def run_shared(prompts, prefix_cache, num_gpu_blocks=64, max_tokens=8):
+    cfg = EngineConfig(mode="real", num_gpu_blocks=num_gpu_blocks,
+                       num_cpu_blocks=256, max_running=len(prompts),
+                       max_batch=4, prefix_cache=prefix_cache,
+                       check_invariants_every=1).with_policy("fastswitch")
+    eng = ServingEngine(cfg, trace=PriorityTrace(), model_bundle=model,
+                        stream_tokens=True)
+    hists = {}
+
+    def drain(budget):
+        n = 0
+        while eng.has_work() and n < budget:
+            for out in eng.step():
+                if out.token_ids:
+                    hists.setdefault(out.handle, []).extend(out.token_ids)
+            n += 1
+
+    # the leader's prefill completes (and donates) before the sharers
+    # arrive — the staggering a live arrival process produces
+    eng.add_request(list(prompts[0]), SamplingParams(max_tokens=max_tokens),
+                    handle=0)
+    drain(2)
+    for h, toks in enumerate(prompts[1:], start=1):
+        eng.add_request(list(toks), SamplingParams(max_tokens=max_tokens),
+                        handle=h)
+    drain(5000)
+    assert not eng.has_work()
+    stats = {"prefill_tokens": eng.runner.stats.prefill_tokens,
+             "metrics": eng.metrics,
+             "prefix": eng.prefix.stats() if eng.prefix else {}}
+    eng.shutdown()
+    return hists, stats
+"""
+
+
+def _run_engine_child(code, timeout=900):
+    env = {**os.environ, "PYTHONPATH": _SRC}
+    r = subprocess.run([sys.executable, "-c", _ENGINE_PRELUDE + code],
+                       env=env, capture_output=True, text=True,
+                       timeout=timeout)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    import json
+    return json.loads(r.stdout.splitlines()[-1])
+
+
+def test_n_sharers_single_full_prefill():
+    """Acceptance: N users sharing a system prompt perform exactly ONE
+    full-prefix prefill.  The runner's prefill-token accounting must show
+    the leader forwarding its whole prompt and every sharer forwarding
+    ONLY its private suffix past the block-aligned shared prefix."""
+    out = _run_engine_child("""
+prompts = shared_prompts(n_req=4)
+hists, s = run_shared(prompts, prefix_cache=True)
+shared = (49 // 16) * 16                     # block-aligned prefix
+expected = len(prompts[0]) + sum(len(p) - shared for p in prompts[1:])
+assert s["prefill_tokens"] == expected, (s["prefill_tokens"], expected)
+assert s["prefix"]["hits"] == len(prompts) - 1
+assert s["metrics"].prefix_tokens_saved == (len(prompts) - 1) * shared
+assert s["metrics"].invariant_checks > 0
+assert len(hists) == len(prompts)
+print(json.dumps({"prefill_tokens": s["prefill_tokens"],
+                  "expected": expected,
+                  "hits": s["prefix"]["hits"]}))
+""")
+    assert out["prefill_tokens"] == out["expected"]
+    assert out["hits"] == 3
+
+
+def test_storm_bit_exact_vs_cache_disabled():
+    """Acceptance: under storm preemption + swaps (tight pool) the
+    cache-on token histories are bit-exact against the cache-disabled
+    baseline, with the refcount sanitizer (C1/C2) running every step."""
+    out = _run_engine_child("""
+prompts = shared_prompts(n_req=4)
+h_off, s_off = run_shared(prompts, prefix_cache=False,
+                          num_gpu_blocks=22, max_tokens=10)
+h_on, s_on = run_shared(prompts, prefix_cache=True,
+                        num_gpu_blocks=22, max_tokens=10)
+assert h_on == h_off, "prefix cache changed the token histories"
+assert all(len(h) == 10 for h in h_on.values())
+# the pool was actually under storm pressure in the cache-on run
+assert s_on["metrics"].preemptions > 0
+assert s_on["metrics"].swap_out_count > 0
+assert s_on["metrics"].invariant_checks > 0
+assert s_on["prefill_tokens"] < s_off["prefill_tokens"]
+print(json.dumps({"bit_exact": h_on == h_off,
+                  "preemptions": s_on["metrics"].preemptions,
+                  "pt_on": s_on["prefill_tokens"],
+                  "pt_off": s_off["prefill_tokens"]}))
+""")
+    assert out["bit_exact"]
+    assert out["preemptions"] > 0
+    assert out["pt_on"] < out["pt_off"]
+
+
+def test_engine_evicts_cache_before_preempting():
+    """Block pressure reclaims unmapped cached leaves BEFORE preempting
+    live requests: after the sharers finish, a new distinct prompt that
+    doesn't fit alongside the pinned tree must trigger prefix evictions
+    and still complete."""
+    out = _run_engine_child("""
+prompts = shared_prompts(n_req=2)
+cfg = EngineConfig(mode="real", num_gpu_blocks=12, num_cpu_blocks=256,
+                   max_running=2, max_batch=2, prefix_cache=True,
+                   check_invariants_every=1).with_policy("fastswitch")
+eng = ServingEngine(cfg, trace=PriorityTrace(), model_bundle=model,
+                    stream_tokens=True)
+eng.add_request(list(prompts[0]), SamplingParams(max_tokens=4), handle=0)
+while eng.has_work():
+    eng.step()
+eng.add_request(list(prompts[1]), SamplingParams(max_tokens=4), handle=1)
+while eng.has_work():
+    eng.step()
+assert eng.prefix.stats()["hits"] == 1       # the tree is populated
+rng = np.random.RandomState(99)
+# 150 tokens -> 10 blocks: more than the 9 left beside the 3-block
+# pinned tree, so admission must reclaim cached leaves
+big = rng.randint(1, cfg_m.vocab_size, 150).tolist()
+eng.add_request(big, SamplingParams(max_tokens=4), handle=2)
+done = False
+while eng.has_work():
+    for out in eng.step():
+        if out.handle == 2 and out.finished:
+            done = True
+assert done
+assert eng.metrics.prefix_evictions > 0
+assert eng.metrics.invariant_checks > 0
+evictions = eng.metrics.prefix_evictions
+eng.shutdown()
+print(json.dumps({"evictions": evictions}))
+""")
+    assert out["evictions"] > 0

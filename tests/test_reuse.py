@@ -142,6 +142,89 @@ def test_contamination_victim_prefix_matches_capacity():
     assert r.copies[1].prealloc_tokens == 0
 
 
+def test_contamination_refuses_equal_priority():
+    """ISSUE 9 S1 regression: the victim guard used ``>`` — an
+    EQUAL-priority victim could be contaminated, letting two peers
+    ping-pong each other's prefixes away.  Only strictly-lower-priority
+    copies may be reclaimed (paper §2.2)."""
+    r = KVCacheReuseManager(64, 16, enabled=True, prealloc_blocks=0)
+    r.update_priority(1, 0.5)
+    r.record_swap_out(1, 64 * 16 - 256, requesting_priority=0.5)
+    before = r.valid_tokens(1)
+    r.update_priority(2, 0.5)
+    r.record_swap_out(2, 1024, requesting_priority=0.5)
+    assert r.valid_tokens(1) == before
+    assert r.n_contaminations == 0
+
+
+def test_contamination_falls_back_to_live_priority():
+    """ISSUE 9 S1 regression: a victim never seen by ``update_priority``
+    defaulted to priority 0.0 and became a preferential contamination
+    victim regardless of its true priority.  With ``priority_fn`` wired
+    (the engine points it at ``scheduler.priority``) the live priority
+    protects it — and a genuinely higher-priority requester still wins."""
+    r = KVCacheReuseManager(64, 16, enabled=True, prealloc_blocks=0)
+    r.priority_fn = lambda rid: 0.9 if rid == 1 else 0.0
+    # rid 1 swaps out WITHOUT any update_priority call
+    r.record_swap_out(1, 64 * 16 - 256, requesting_priority=0.9)
+    before = r.valid_tokens(1)
+    r.update_priority(2, 0.5)
+    r.record_swap_out(2, 1024, requesting_priority=0.5)
+    assert r.valid_tokens(1) == before      # protected by the fallback
+    assert r.n_contaminations == 0
+    r.update_priority(3, 0.95)
+    r.record_swap_out(3, 512, requesting_priority=0.95)
+    assert r.valid_tokens(1) < before
+    assert r.n_contaminations >= 1
+
+
+def test_invalidate_resets_prealloc():
+    """ISSUE 9 S3 regression (extends the PR 4 stale-prealloc tests to
+    the invalidate path): ``invalidate`` zeroed valid/stored but left
+    ``prealloc_tokens`` stale — nothing valid is stored, so nothing can
+    be "reserved ahead" of it; the stale reserve made the next
+    record_swap_out under-report and a later contamination over-shrink
+    the victim's valid prefix."""
+    r = KVCacheReuseManager(64, 16, enabled=True, prealloc_blocks=2)
+    r.update_priority(1, 0.5)
+    r.record_swap_out(1, 20 * 16, requesting_priority=0.5)
+    assert r.copies[1].prealloc_tokens == 32
+    r.invalidate(1)
+    assert r.copies[1].valid_tokens == 0
+    assert r.copies[1].stored_tokens == 0
+    assert r.copies[1].prealloc_tokens == 0
+    # re-swap-out after the failure: full re-transfer, coherent prealloc
+    inc, _ = r.record_swap_out(1, 20 * 16, requesting_priority=0.5)
+    assert inc == 20 * 16
+    assert r.copies[1].prealloc_tokens == 32
+
+
+def test_swap_out_floor_pins_shared_prefix():
+    """Prefix-cache pinning (DESIGN.md §10.3): ``floor_tokens`` marks
+    [0, floor) GPU-pinned — the copy is valid from 0 without any
+    transfer, the increment covers only the private suffix, and the
+    floor survives contamination of the phantom blocks below it."""
+    r = KVCacheReuseManager(64, 16, enabled=True, prealloc_blocks=0)
+    r.update_priority(1, 0.5)
+    inc, _ = r.record_swap_out(1, 160, requesting_priority=0.5,
+                               floor_tokens=48)
+    assert inc == 160 - 48                  # only the private suffix moves
+    assert r.valid_tokens(1) == 160
+    # re-swap at the same context: nothing to transfer
+    inc, _ = r.record_swap_out(1, 160, requesting_priority=0.5,
+                               floor_tokens=48)
+    assert inc == 0
+    # a contamination can reclaim every CPU block — the floor keeps the
+    # pinned prefix valid (its blocks are phantoms, never read)
+    r.update_priority(2, 0.9)
+    r.record_swap_out(2, 64 * 16, requesting_priority=0.9)
+    assert r.valid_tokens(1) <= 160
+    inc, _ = r.record_swap_out(1, 48, requesting_priority=0.5,
+                               floor_tokens=48)
+    assert inc == 0
+    assert r.valid_tokens(1) >= 48
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 4), st.integers(1, 900),
                           st.floats(0, 1)),
