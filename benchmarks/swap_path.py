@@ -194,6 +194,25 @@ def main() -> None:
          f"ops={ops_st};runs={n_runs};blocks={n_blocks}"
          f";jit_variants={compiles};speedup_vs_per_block={t_pb / t_st:.2f}x")
 
+    # double-buffered copy-in (ISSUE 10 satellite): the same swap-in as
+    # ONE monolithic slab vs split into bounded sub-slabs — JAX's async
+    # dispatch overlaps stage k+1's host gather/upload with stage k's
+    # donated scatter, and the bounded slab caps staging memory at
+    # stage_blocks instead of the whole swap
+    def copy_in_once(stage_blocks):
+        pools.copy_in_staged(cpu_ids, runs, stage_blocks=stage_blocks)
+        pools.gpu.block_until_ready()
+
+    t_mono = _time(lambda: copy_in_once(0), iters)
+    t_dbuf = _time(lambda: copy_in_once(run_len), iters)
+    np.testing.assert_array_equal(np.asarray(pools.gpu), snap)  # integrity
+    assert pools.h2d_transfers == pools.n_shards * pools.staged_in_calls
+    emit("swap_in_mono_slab", t_mono * 1e6,
+         f"stage_blocks=0;stages=1;blocks={n_blocks}")
+    emit("swap_in_dbuf", t_dbuf * 1e6,
+         f"stage_blocks={run_len};stages={n_blocks // run_len}"
+         f";blocks={n_blocks}")
+
     if args.json_out:
         write_bench_json(args.json_out, "swap_path", args.smoke)
 

@@ -53,3 +53,11 @@ python -m repro.launch.serve --online --smoke --chaos \
 # radix tree must produce actual cross-request hits
 python -m repro.launch.serve --online --smoke --prefix-cache \
     --events /tmp/fastswitch_online_prefix.jsonl
+# front-end smoke (DESIGN.md §11): loopback JSON-lines server over TWO
+# sim replicas — concurrent socket clients (streaming, one follow-up
+# through the affinity pin, one mid-decode abort), clean drain, then
+# each replica's event log is validated AND the cross-replica affinity
+# audit must report zero violations
+python -m repro.frontend.loadgen --smoke \
+    --events-prefix /tmp/fastswitch_online_frontend \
+    --json-out /tmp/BENCH_frontend.json

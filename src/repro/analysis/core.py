@@ -102,6 +102,20 @@ class Config:
     # final component.
     lock_suffix: str = "lock"
 
+    # -- FS007: calls that block the event loop inside ``async def``
+    # bodies (the front-end's streaming server shares one loop across
+    # every connection — one blocking call stalls them all).  Dotted
+    # entries match the call path exactly or by suffix ("time.sleep"
+    # also catches an aliased import); attr entries match any
+    # ``obj.<attr>()`` call.  A call that is DIRECTLY awaited is exempt
+    # (``await ws.recv()`` yields to the loop).
+    async_blocking_calls: Tuple[str, ...] = (
+        "time.sleep", "jax.block_until_ready", "jax.device_get",
+    )
+    async_blocking_attrs: Tuple[str, ...] = (
+        "result", "recv", "recv_into", "recvfrom", "sendall", "accept",
+    )
+
     # Rules to run (None = all registered).
     rules: Optional[Tuple[str, ...]] = None
 

@@ -14,6 +14,9 @@ full catalog):
   deps *before* taking the pool lock" contract.
 * FS006 un-donated pool write — the legacy whole-pool ``.at[].set``
   copy-in path this PR retires.
+* FS007 blocking call in async def — the front-end's single event loop
+  (DESIGN.md §11) must never run thread sleeps, synchronous future
+  waits, raw socket I/O or host-syncing jax calls.
 
 Rules report syntactic facts with dataflow just deep enough to avoid
 noise; they are deliberately intra-module (plus a project call graph)
@@ -511,9 +514,61 @@ class UndonatedPoolWrite(Rule):
         return None
 
 
+# ---------------------------------------------------------------------------
+# FS007 — blocking call inside async def
+# ---------------------------------------------------------------------------
+
+class AsyncBlockingCall(Rule):
+    """The front-end's asyncio server (DESIGN.md §11) multiplexes every
+    connection over one event loop; a single blocking call — a thread
+    sleep, a synchronous ``future.result()`` bridging the engine
+    threads, a raw socket recv, a host-syncing jax call — stalls token
+    streaming for ALL clients.  Engine access must marshal through
+    ``asyncio.wrap_future`` / the reader-writer streams instead.
+
+    A call that is directly awaited is exempt: ``await ws.recv()``
+    yields to the loop.  Deep device-value host-sync detection stays
+    FS003's job; this rule names the explicit blocking entry points
+    (``Config.async_blocking_calls`` / ``async_blocking_attrs``)."""
+    id = "FS007"
+    title = "async-blocking-call"
+
+    def run(self, project: Project) -> List[Finding]:
+        findings: List[Finding] = []
+        cfg = project.config
+        for fi in project.functions.values():
+            if not isinstance(fi.node, ast.AsyncFunctionDef):
+                continue
+            parents = fi.module.parents
+            for call in _owned_calls(fi):
+                if isinstance(parents.get(call), ast.Await):
+                    continue
+                path = dotted_path(call.func)
+                if path is not None and (
+                        path in cfg.async_blocking_calls
+                        or any(path.endswith("." + c)
+                               for c in cfg.async_blocking_calls)):
+                    findings.append(_finding(
+                        self.id, fi, call,
+                        f"blocking call '{path}' inside an async def "
+                        f"stalls the event loop for every connection; "
+                        f"use the asyncio equivalent or move it off-loop"))
+                    continue
+                if isinstance(call.func, ast.Attribute) and \
+                        call.func.attr in cfg.async_blocking_attrs:
+                    findings.append(_finding(
+                        self.id, fi, call,
+                        f"blocking '.{call.func.attr}()' inside an async "
+                        f"def stalls the event loop; bridge threads with "
+                        f"asyncio.wrap_future / run_in_executor and use "
+                        f"stream reader/writer APIs for sockets"))
+        return findings
+
+
 ALL_RULES: Tuple[type, ...] = (
     UseAfterDonate, JitVariantBudget, HostSyncInHotPath,
     SwapThreadDiscipline, LockDiscipline, UndonatedPoolWrite,
+    AsyncBlockingCall,
 )
 
 

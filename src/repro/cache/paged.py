@@ -62,16 +62,25 @@ class PoolSpec:
 
 
 class PagedPools:
-    def __init__(self, spec: PoolSpec, with_data: bool = True, mesh=None):
+    def __init__(self, spec: PoolSpec, with_data: bool = True, mesh=None,
+                 stage_blocks: int = 16):
         """``mesh``: a ("data", "model") jax mesh — the GPU pool's KV
         head axis is then partitioned over ``model`` (NamedSharding,
         DESIGN.md §9) and every staged swap runs per shard: the slab
         stays head-sharded and the host link carries one transfer per
         chunk PER SHARD.  A 1-device mesh is normalized to None — the
         single-device data plane is byte-identical to the pre-mesh code
-        (and the sharded path degrades to it bit-exactly)."""
+        (and the sharded path degrades to it bit-exactly).
+
+        ``stage_blocks``: double-buffer granularity of ``copy_in_staged``
+        — a swap-in larger than this many blocks is uploaded in
+        stage-sized sub-slabs so the host gather + h2d of sub-slab k+1
+        overlap the (async-dispatched, donated) scatter of sub-slab k.
+        Each sub-slab counts as its own staged call in the transfer
+        accounting.  <= 0 disables the split (one slab per call)."""
         self.spec = spec
         self.with_data = with_data
+        self.stage_blocks = stage_blocks
         if mesh is not None and mesh.size == 1:
             mesh = None
         self.mesh = mesh
@@ -157,38 +166,61 @@ class PagedPools:
             s.n_layers, 2, total, s.block_size, s.n_kv_heads, s.head_dim)
 
     def copy_in_staged(self, cpu_blocks: List[int],
-                       gpu_runs: Sequence[Tuple[int, int]]) -> None:
-        """CPU -> GPU via the host staging slab: one vectorized host
-        gather, ONE h2d transfer of the slab, then a grouped scatter
+                       gpu_runs: Sequence[Tuple[int, int]],
+                       stage_blocks: Optional[int] = None) -> None:
+        """CPU -> GPU via the host staging slab: a vectorized host
+        gather, ONE h2d transfer per sub-slab, then a grouped scatter
         kernel with the pool DONATED (in-place write, never a full-pool
         copy).  REBINDS ``self.gpu`` — the pools object is the pool's
-        owner-of-record; callers must hold the engine's pool lock."""
+        owner-of-record; callers must hold the engine's pool lock.
+
+        Double buffering: a call larger than ``stage_blocks`` (ctor
+        default) is split into stage-sized sub-slabs.  The scatter of
+        sub-slab k dispatches asynchronously (JAX async dispatch; the
+        donation chain sequences it after sub-slab k-1's), so sub-slab
+        k+1's host gather and upload run WHILE k scatters — the h2d leg
+        and the device-side scatter pipeline instead of serializing.
+        Each sub-slab counts as its own staged call, preserving the
+        transfer-accounting invariant ``h2d_transfers == n_shards *
+        staged_in_calls``.  One ``block_until_ready`` at the end keeps
+        the residency contract of the single-slab path."""
         if not self.with_data or not gpu_runs:
             return
         s = self.spec
         total = sum(n for _, n in gpu_runs)
         assert total == len(cpu_blocks), (total, len(cpu_blocks))
-        C = s.n_layers * 2
-        # zeros, not empty: the pow2 pad tail is masked off by the run
-        # lengths, but it IS uploaded and streamed through the kernel —
-        # uninitialized bytes decode to NaN/denormal bf16, which
-        # measurably slows the copy (and earns nothing: one memset)
-        slab = np.zeros((C, ops.slab_bucket_blocks(total), s.block_size,
-                         s.n_kv_heads, s.head_dim), np.uint16)
-        slab[:, :total] = self.cpu[:, :, np.asarray(cpu_blocks)].reshape(
-            C, total, s.block_size, s.n_kv_heads, s.head_dim)
-        # ONE h2d per shard (bucketed slab; head-sharded under a mesh)
-        if self.mesh is None:
-            dev = jnp.asarray(slab.view(jnp.bfloat16))
+        stage = self.stage_blocks if stage_blocks is None else stage_blocks
+        if stage <= 0 or total <= stage:
+            stages: List[List[Tuple[int, int]]] = [list(gpu_runs)]
         else:
+            from repro.kernels.block_copy import split_runs
+            stages = split_runs(gpu_runs, stage)
+        C = s.n_layers * 2
+        if self.mesh is not None:
             from repro.models.sharding import slab_pspec
-            dev = jax.device_put(
-                slab.view(jnp.bfloat16),
-                jax.sharding.NamedSharding(self.mesh, slab_pspec()))
-        self.staged_in_calls += 1
-        self.h2d_transfers += len(dev.sharding.device_set)
-        self.gpu = ops.scatter_swap_runs(self.gpu, dev, gpu_runs,
-                                         mesh=self.mesh)
+            sharding = jax.sharding.NamedSharding(self.mesh, slab_pspec())
+        pos = 0
+        for runs_c in stages:
+            cnt = sum(n for _, n in runs_c)
+            # zeros, not empty: the pow2 pad tail is masked off by the
+            # run lengths, but it IS uploaded and streamed through the
+            # kernel — uninitialized bytes decode to NaN/denormal bf16,
+            # which measurably slows the copy (earns nothing: one memset)
+            slab = np.zeros((C, ops.slab_bucket_blocks(cnt), s.block_size,
+                             s.n_kv_heads, s.head_dim), np.uint16)
+            slab[:, :cnt] = self.cpu[
+                :, :, np.asarray(cpu_blocks[pos:pos + cnt])].reshape(
+                C, cnt, s.block_size, s.n_kv_heads, s.head_dim)
+            pos += cnt
+            # ONE h2d per shard (bucketed slab; head-sharded under a mesh)
+            if self.mesh is None:
+                dev = jnp.asarray(slab.view(jnp.bfloat16))
+            else:
+                dev = jax.device_put(slab.view(jnp.bfloat16), sharding)
+            self.staged_in_calls += 1
+            self.h2d_transfers += len(dev.sharding.device_set)
+            self.gpu = ops.scatter_swap_runs(self.gpu, dev, runs_c,
+                                             mesh=self.mesh)
         # Materialize before the caller releases the pool lock: a swap
         # task's future completing must mean THE DATA IS RESIDENT
         # (step-1 promotes on it).  A lazy donated scatter escaping the

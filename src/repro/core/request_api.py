@@ -13,25 +13,31 @@ VTC fairness line of work in PAPERS.md).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
 class SamplingParams:
     """Per-request generation parameters.
 
-    ``max_tokens`` bounds the response (the synthetic models have no EOS
-    concept, so length is the stop condition).  ``temperature``/
-    ``top_k``/``top_p`` default to ``None`` = inherit the engine-wide
-    sampling config; real mode fuses sampling into the batched decode
-    step as a per-row traced ``(B, 3)`` array (DESIGN.md §3.6), so
-    per-request overrides mix freely in one batch without adding a
-    compiled variant — greedy rows stay bit-exact next to sampled rows
-    (sim mode never samples, so values are validated but unused)."""
+    ``max_tokens`` bounds the response.  ``stop_token_ids`` ends the
+    turn early when a decoded token matches (``finish_reason="stop"``
+    instead of ``"length"``); the stop token itself stays in the history
+    and the streamed delta — truncation is presentation, the bit-exact
+    token history is the engine's parity anchor.  Sim mode has no token
+    ids, so stop sets are validated but can never fire there.
+    ``temperature``/``top_k``/``top_p`` default to ``None`` = inherit
+    the engine-wide sampling config; real mode fuses sampling into the
+    batched decode step as a per-row traced ``(B, 3)`` array
+    (DESIGN.md §3.6), so per-request overrides mix freely in one batch
+    without adding a compiled variant — greedy rows stay bit-exact next
+    to sampled rows (sim mode never samples, so values are validated
+    but unused)."""
     max_tokens: int = 16
     temperature: Optional[float] = None
     top_k: Optional[int] = None
     top_p: Optional[float] = None
+    stop_token_ids: Tuple[int, ...] = ()
 
 
 @dataclass(frozen=True)
@@ -66,8 +72,8 @@ class RequestOutput:
     first_token: bool = False           # this step emitted the first token
     ttft_us: Optional[float] = None     # set when first_token
     finished: bool = False
-    finish_reason: Optional[str] = None  # "length" | "abort" | "dropped" |
-    #                                      "error" | "shed"
+    finish_reason: Optional[str] = None  # "length" | "stop" | "abort" |
+    #                                      "dropped" | "error" | "shed"
     error: Optional[str] = None         # human-readable fault cause when
     #                                     finish_reason == "error"
     t_us: float = 0.0                   # engine clock at emission
@@ -81,7 +87,7 @@ class RequestEvent:
     handle: int
     kind: str        # arrive|continue|admit|resume|first_token|preempt|
     #                  swap_in|promote|finish|release|abort|drop|
-    #                  error|shed|retry|drain
+    #                  error|shed|retry|drain|migrate_in|migrate_out
     data: Dict[str, object] = field(default_factory=dict)
 
     def as_dict(self) -> Dict[str, object]:
@@ -95,7 +101,12 @@ EVENT_KINDS = frozenset({
     # robustness layer (DESIGN.md §7): request fault, overload shed,
     # swap-copy retry, engine drain toggle (drain uses handle -1 — it is
     # an engine-level event, not a request transition)
-    "error", "shed", "retry", "drain"})
+    "error", "shed", "retry", "drain",
+    # cross-replica session migration (DESIGN.md §11): a parked session
+    # leaves one replica's log with migrate_out and re-enters another's
+    # with migrate_in — the pair is how the router's affinity audit
+    # reconstructs ownership across engines
+    "migrate_in", "migrate_out"})
 
 
 @dataclass

@@ -149,6 +149,44 @@ class KVCacheReuseManager:
         self.priorities.pop(req_id, None)
 
     # ------------------------------------------------------------------
+    # cross-replica migration (DESIGN.md §11)
+    # ------------------------------------------------------------------
+
+    def export_copy(self, req_id: int) -> Optional[Dict[str, object]]:
+        """Metadata of one copy for migration to another replica's reuse
+        manager: the trusted prefix extent plus the token-ordered CPU
+        block ids backing it (the engine reads the actual bytes out of
+        ``PagedPools.cpu`` — block ids are meaningless across pools).
+        The local copy is NOT released here; the engine owns the
+        exactly-once handoff."""
+        c = self.copies.get(req_id)
+        if c is None:
+            return None
+        return {"valid_tokens": c.valid_tokens,
+                "block_ids": list(self.mgr.request_block_ids(req_id))}
+
+    def import_copy(self, req_id: int, valid_tokens: int,
+                    priority: float = 0.0) -> List[int]:
+        """Install a migrated copy: allocate CPU space for the imported
+        prefix (contaminating lower-priority copies if the pool is full,
+        same as a local swap-out) and mark it valid up to what was
+        actually allocated.  Returns the token-ordered CPU block ids the
+        engine must write the migrated KV bytes into; the caller trims
+        its write — and the advertised prefix — to the returned
+        capacity."""
+        if req_id in self.copies:
+            raise ValueError(f"request {req_id} already has a CPU copy")
+        copy = self.copies.setdefault(req_id, CpuCopy())
+        if valid_tokens <= 0 or not self.enabled:
+            return []
+        self._ensure_cpu_tokens(req_id, valid_tokens, priority)
+        cap = self.mgr.request_tokens(req_id)
+        copy.valid_tokens = min(valid_tokens, cap)
+        copy.stored_tokens = copy.valid_tokens
+        self.priorities[req_id] = priority
+        return list(self.mgr.request_block_ids(req_id))
+
+    # ------------------------------------------------------------------
     # space management & contamination
     # ------------------------------------------------------------------
 

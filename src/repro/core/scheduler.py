@@ -91,6 +91,11 @@ class PriorityScheduler:
         self.running: List[int] = []
         self.swapped: List[int] = []
         self.swapping_in: List[int] = []
+        # admission-layer priority overrides (DESIGN.md §11): a front-end
+        # maps SLO tightness onto scheduler priority here, so deadlines —
+        # not the synthetic trace — drive preemption for its requests.
+        # Requests without an override keep the trace's priority.
+        self.extern: Dict[int, float] = {}
 
     # ------------------------------------------------------------------
 
@@ -100,7 +105,14 @@ class PriorityScheduler:
         req.state = ReqState.WAITING
 
     def priority(self, rid: int) -> float:
-        return self.trace.priority(rid)
+        p = self.extern.get(rid)
+        return p if p is not None else self.trace.priority(rid)
+
+    def set_priority(self, rid: int, priority: float) -> None:
+        self.extern[rid] = float(priority)
+
+    def clear_priority(self, rid: int) -> None:
+        self.extern.pop(rid, None)
 
     def active_ids(self) -> List[int]:
         return self.waiting + self.running + self.swapped + self.swapping_in

@@ -283,7 +283,8 @@ class ServingEngine:
                     sampling: Optional[SamplingParams] = None, *,
                     slo: Optional[SLOSpec] = None,
                     handle: Optional[int] = None,
-                    retain_kv: bool = False) -> int:
+                    retain_kv: bool = False,
+                    priority: Optional[float] = None) -> int:
         """Submit one request.  ``prompt`` is the token-id list (real
         mode) or a token COUNT (sim mode — there are no ids to give).
         Returns the request handle, valid for ``step`` outputs,
@@ -292,7 +293,11 @@ class ServingEngine:
         ``retain_kv``: keep the finished turn's KV as a CPU reuse copy
         so a follow-up ``continue_session`` pays only the prefix swap-in
         instead of a full re-prefill; the caller owns the copy's
-        lifetime (``release_session``/``abort`` frees it)."""
+        lifetime (``release_session``/``abort`` frees it).
+
+        ``priority``: admission-layer scheduler priority override (the
+        front-end maps SLO tightness here, DESIGN.md §11); ``None``
+        keeps the engine's priority trace in charge."""
         if self._draining:
             self.metrics.rejected += 1
             raise EngineDrainingError(
@@ -322,6 +327,9 @@ class ServingEngine:
         req.sampling, req.slo, req.retain_kv = sampling, slo, retain_kv
         req.begin_turn(self.clock.now_us)
         self.sched.add_request(req)
+        if priority is not None:
+            # before the prefix probe: acquisition pins at this priority
+            self.sched.set_priority(handle, priority)
         shared = 0
         if self.prefix is not None and ids is not None:
             # probe the prefix tree BEFORE prefill and pin the matched
@@ -344,7 +352,8 @@ class ServingEngine:
                          prompt: Union[int, Sequence[int]],
                          sampling: Optional[SamplingParams] = None, *,
                          slo: Optional[SLOSpec] = None,
-                         retain_kv: bool = False) -> int:
+                         retain_kv: bool = False,
+                         priority: Optional[float] = None) -> int:
         """Follow-up turn on a retained (FINISHED) session: the new
         prompt extends the conversation and admission reuses the CPU KV
         copy of the previous turns (prefix swap-in instead of full
@@ -369,6 +378,8 @@ class ServingEngine:
         req.sampling, req.slo, req.retain_kv = sampling, slo, retain_kv
         req.begin_turn(self.clock.now_us)
         self.sched.add_request(req)
+        if priority is not None:
+            self.sched.set_priority(handle, priority)
         self._event(handle, "continue", turn=req.turn_idx,
                     prompt_tokens=n_prompt, prefix_tokens=req.prefix_tokens)
         return handle
@@ -383,6 +394,7 @@ class ServingEngine:
         if self.prefix is not None:
             self.prefix.release(handle)
         req.state = ReqState.DONE
+        self.sched.clear_priority(handle)
         self._event(handle, "release")
         return True
 
@@ -404,6 +416,7 @@ class ServingEngine:
                 if self.prefix is not None:
                     self.prefix.release(handle)
                 req.state = ReqState.DONE
+                self.sched.clear_priority(handle)
                 self.metrics.aborted += 1
                 self._event(handle, "abort", state="finished")
                 return True
@@ -459,6 +472,7 @@ class ServingEngine:
         out.generated, out.context_tokens = req.generated, req.context_tokens
         req.state = ReqState.DONE
         del self.sched.requests[handle]
+        self.sched.clear_priority(handle)
         return state
 
     def _fault_request(self, rid: int, exc: BaseException) -> None:
@@ -565,6 +579,154 @@ class ServingEngine:
             predicted_ttft_us=self.predicted_ttft_us(depth))
 
     # ------------------------------------------------------------------
+    # front-end introspection + session migration (DESIGN.md §11)
+    # ------------------------------------------------------------------
+
+    def load_snapshot(self) -> Dict[str, object]:
+        """One coherent load sample for router dispatch decisions: queue
+        depths, free pool space and the admission-queue TTFT prediction
+        a request arriving NOW would face.  Cheap (no device sync) — the
+        replica thread publishes one per step."""
+        depth = len(self.sched.waiting)
+        return {
+            "now_us": self.clock.now_us,
+            "waiting": depth,
+            "running": len(self.sched.running),
+            "swapped": len(self.sched.swapped),
+            "swapping_in": len(self.sched.swapping_in),
+            "parked": tuple(self.parked),
+            "free_gpu_blocks": self.gpu_mgr.free_blocks(),
+            "max_waiting": self.config.max_waiting,
+            "draining": self._draining,
+            "predicted_ttft_us": self.predicted_ttft_us(depth),
+        }
+
+    def export_session(self, handle: int) -> Dict[str, object]:
+        """Package a PARKED session for migration to another replica:
+        the conversation turns, token history and the CPU reuse copy's
+        KV bytes, then release every local resource (``migrate_out``).
+        Only parked sessions migrate — a live request's KV is on GPU and
+        mid-flight; the router rebalances between turns.
+
+        A session holding a pinned shared prefix exports with
+        ``valid_tokens = 0``: its CPU blocks below the prefix-cache
+        floor are phantoms (allocated, never written — see
+        ``record_swap_out``), so the bytes aren't shippable and the
+        target replica re-prefills the turn instead (its own prefix
+        cache may well absorb the cost)."""
+        req = self.parked.get(handle)
+        if req is None:
+            raise KeyError(f"no retained session for handle {handle} "
+                           "(only parked sessions migrate)")
+        meta = self.reuse.export_copy(handle)
+        valid = min(meta["valid_tokens"], req.context_tokens) \
+            if meta is not None else 0
+        if self._shared_tokens(handle) > 0:
+            valid = 0
+        kv = None
+        if valid > 0 and self.pools is not None:
+            bs = self.config.block_size
+            nblk = (valid + bs - 1) // bs
+            ids = np.asarray(meta["block_ids"][:nblk])
+            # the park-time d2h gather runs on a swap-manager worker
+            # (async swap-out) — order this read behind any in-flight
+            # write to the exported blocks, exactly like a local swap-in
+            # does via data_deps, or the export ships unlanded bytes.
+            # Waits happen OUTSIDE the pool lock: the dep's own copy
+            # needs it.  A failed gather queues a copy failure for the
+            # handle; those bytes never arrived, so export the session
+            # without KV and let the target re-prefill.
+            for f in self.swap.data_deps(list(ids)):
+                try:
+                    f.result()
+                except BaseException:
+                    pass
+            if self.swap.has_failed(handle, "out"):
+                self.swap.take_failed_for(handle)
+                valid = 0
+            else:
+                kv = self.pools.cpu[:, :, ids].copy()
+        payload = {
+            "handle": handle,
+            "turns": [(t.prompt_tokens, t.response_tokens,
+                       list(t.prompt_ids) if t.prompt_ids is not None
+                       else None) for t in req.conv.turns],
+            "turn_idx": req.turn_idx,
+            "think_time_s": req.conv.think_time_s,
+            "context_tokens": req.context_tokens,
+            "token_history": list(req.token_history),
+            "valid_tokens": valid,
+            "kv": kv,
+            "priority": self.sched.extern.get(handle),
+        }
+        self.parked.pop(handle)
+        self.reuse.release(handle)
+        if self.prefix is not None:
+            self.prefix.release(handle)
+        self.sched.clear_priority(handle)
+        req.state = ReqState.DONE
+        self._event(handle, "migrate_out", valid_tokens=valid,
+                    context_tokens=payload["context_tokens"])
+        return payload
+
+    def import_session(self, payload: Dict[str, object]) -> int:
+        """Install a migrated session as a parked (FINISHED) request:
+        rebuild the conversation, write the shipped KV bytes into a
+        freshly allocated CPU reuse copy and park the handle
+        (``migrate_in``) — the next ``continue_session`` admits through
+        the ordinary prefix-swap-in path, bit-exact with a session that
+        never moved.  The reuse pool may grant less space than shipped
+        (contamination of lower-priority copies only goes so far): the
+        advertised prefix is trimmed to what was actually installed, and
+        a granted-but-unwritable copy is voided rather than advertised."""
+        if self._draining:
+            self.metrics.rejected += 1
+            raise EngineDrainingError(
+                "engine is draining: running requests finish, no new "
+                "work is admitted")
+        handle = int(payload["handle"])
+        if handle in self.sched.requests or handle in self.parked:
+            raise ValueError(f"handle {handle} already in use")
+        turns = [Turn(pt, rt, prompt_ids=(list(ids) if ids is not None
+                                          else None))
+                 for pt, rt, ids in payload["turns"]]
+        conv = Conversation(conv_id=handle,
+                            arrival_s=self.clock.now_us / 1e6,
+                            turns=turns,
+                            think_time_s=payload["think_time_s"])
+        req = Request(conv=conv, turn_idx=int(payload["turn_idx"]))
+        req.context_tokens = int(payload["context_tokens"])
+        req.token_history = list(payload["token_history"])
+        req.hist_emitted = len(req.token_history)
+        req.retain_kv = True
+        req.state = ReqState.FINISHED
+        prio = payload.get("priority")
+        if prio is not None:
+            self.sched.set_priority(handle, prio)
+        valid = int(payload["valid_tokens"])
+        cpu_ids = self.reuse.import_copy(
+            handle, valid, priority=self.sched.priority(handle))
+        got = self.reuse.valid_tokens(handle)
+        kv = payload.get("kv")
+        if got > 0:
+            if kv is None:
+                # bytes didn't ship (sim mode has none to ship; real
+                # mode always pairs valid>0 with kv) — a real-mode copy
+                # without its bytes must not be advertised
+                if self.pools is not None:
+                    self.reuse.invalidate(handle)
+            elif self.pools is not None:
+                bs = self.config.block_size
+                nblk = (got + bs - 1) // bs
+                self.pools.cpu[:, :, np.asarray(cpu_ids[:nblk])] = \
+                    kv[:, :, :nblk]
+        self.parked[handle] = req
+        self._event(handle, "migrate_in",
+                    valid_tokens=self.reuse.valid_tokens(handle),
+                    context_tokens=req.context_tokens)
+        return handle
+
+    # ------------------------------------------------------------------
     # helpers
     # ------------------------------------------------------------------
 
@@ -594,6 +756,38 @@ class ServingEngine:
             raise ValueError(f"top_k must be >= 0, got {sp.top_k}")
         if sp.top_p is not None and not 0.0 < sp.top_p <= 1.0:
             raise ValueError(f"top_p must be in (0, 1], got {sp.top_p}")
+
+    def _hit_stop(self, req: Request) -> bool:
+        """The turn's LAST generated token is one of the request's stop
+        ids.  Real mode only (sim prompts/responses carry no token ids);
+        ``generated`` guards the prompt's own last token from matching
+        before anything was decoded.  Callers must have flushed the
+        runner — deferred-sync decode ids land in ``token_history`` only
+        on flush."""
+        sp = req.sampling
+        if (self.pools is None or sp is None or not sp.stop_token_ids
+                or req.generated == 0 or not req.token_history):
+            return False
+        return req.token_history[-1] in sp.stop_token_ids
+
+    def _apply_stop_tokens(self) -> None:
+        """Finish running requests whose previous decode produced a stop
+        token (``finish_reason="stop"``).  Runs at the top of the decode
+        step, BEFORE this iteration's batch is assembled: the stop
+        token's KV slot is the turn's last and stays unwritten — exactly
+        the pending-token invariant ``_swap_out`` already handles — and
+        the request must not decode past it.  The one runner flush is
+        shared by every candidate (each flush is a host sync)."""
+        cands = [r for r in self.sched.running
+                 if (req := self._req(r)).prefill_remaining == 0
+                 and req.generated > 0 and req.sampling is not None
+                 and req.sampling.stop_token_ids]
+        if not cands:
+            return
+        self.runner.flush()      # histories current before inspection
+        for rid in cands:
+            if self._hit_stop(self._req(rid)):
+                self._contained(rid, self._finish_turn, rid, "stop")
 
     def _view_sampling(self, req: Request
                        ) -> Optional[Tuple[float, float, float]]:
@@ -1127,16 +1321,25 @@ class ServingEngine:
             raise PoisonError(f"injected poison request (handle {rid})")
         req = self._req(rid)
         req.context_tokens += 1
-        if req.turn_done():
-            # max_tokens == 1: the prompt's last position already produced
-            # the whole response — no next-token slot, no decode step
-            # (without this the decode loop over-generated by one token)
+        # stop check inline (not _hit_stop: ``generated`` is incremented
+        # by finish_token below) — history IS current here: real-mode
+        # prefill emits the first token synchronously
+        sp = req.sampling
+        first_stop = bool(self.pools is not None and sp is not None
+                          and sp.stop_token_ids and req.token_history
+                          and req.token_history[-1] in sp.stop_token_ids)
+        if req.turn_done() or first_stop:
+            # max_tokens == 1 (or the prompt's last position produced a
+            # stop id straight away): the whole response is this one
+            # token — no next-token slot, no decode step (without this
+            # the decode loop over-generated by one token)
+            reason = "length" if req.turn_done() else "stop"
             req.finish_token(self.clock.now_us)
             self.metrics.ttfts_us.append(req.ttfts_us[-1])
             self.metrics.total_tokens += 1
             self._credit(rid, first=True)
             self._event(rid, "first_token", ttft_us=req.ttfts_us[-1])
-            self._finish_turn(rid)
+            self._finish_turn(rid, reason)
             return
         if not self._allocate_token_slot(rid):
             # a rebalance-time admission landed on a pool that stays full
@@ -1487,6 +1690,10 @@ class ServingEngine:
         # Step 5: decode one token for the running batch.  Requests with
         # an in-flight chunked prefill advance their prefill instead of
         # decoding (one chunk per iteration, piggybacked on the batch).
+        # First retire stop-token hits from the PREVIOUS decode — their
+        # last token ended the turn and must not enter this batch.
+        if self.pools is not None:
+            self._apply_stop_tokens()
         rids = [r for r in self.sched.running
                 if self._req(r).prefill_remaining == 0]
         prefilling = [r for r in self.sched.running
@@ -1671,7 +1878,7 @@ class ServingEngine:
                 req.hist_emitted = len(hist)
         return outs
 
-    def _finish_turn(self, rid: int) -> None:
+    def _finish_turn(self, rid: int, reason: str = "length") -> None:
         req = self._req(rid)
         if self.runner is not None:
             self.runner.flush()      # materialize the turn's last tokens
@@ -1681,6 +1888,11 @@ class ServingEngine:
             # sanitizer's D2 check) waiting for a decode that may never
             # come
             self.runner.release(rid)
+        if reason == "length" and self._hit_stop(req):
+            # the turn's LAST token (max_tokens boundary) was a stop id:
+            # the response ended by matching, not by running out — the
+            # stop reason wins (clients branch on it for follow-ups)
+            reason = "stop"
         if req.token_history:
             self._token_hist_by_conv[rid] = list(req.token_history)
         # retain the KV copy for the next turn (reuse mechanism); baseline
@@ -1691,9 +1903,9 @@ class ServingEngine:
                   self.sched.swapped, self.sched.swapping_in):
             if rid in q:
                 q.remove(rid)
-        self._record_slo(req, "length")
+        self._record_slo(req, reason)
         out = self._out(rid)
-        out.finished, out.finish_reason = True, "length"
+        out.finished, out.finish_reason = True, reason
         out.generated, out.context_tokens = req.generated, req.context_tokens
         if self.stream_tokens and self.pools is not None:
             # fill the final delta HERE (history is flushed above): a
@@ -1704,14 +1916,17 @@ class ServingEngine:
             req.state = ReqState.FINISHED
             self.parked[rid] = req
             del self.sched.requests[rid]
-            self._event(rid, "finish", retained=True, tokens=req.generated)
+            self._event(rid, "finish", retained=True, tokens=req.generated,
+                        reason=reason)
         else:
             req.state = ReqState.DONE
             self.reuse.release(rid)
             if self.prefix is not None:
                 self.prefix.release(rid)    # unpin the shared prefix
             del self.sched.requests[rid]
-            self._event(rid, "finish", retained=False, tokens=req.generated)
+            self.sched.clear_priority(rid)
+            self._event(rid, "finish", retained=False, tokens=req.generated,
+                        reason=reason)
 
     def _advance_idle(self, until_us: Optional[float] = None) -> None:
         events = [t.done_at for t in self.swap.ongoing_swap_in]

@@ -38,6 +38,23 @@ and aborts a random fraction mid-flight to exercise cancellation in
 every lifecycle state.  At the end it prints the latency summary AND
 the per-request SLO-attainment / fairness rollup (``slo_summary``).
 
+Network front-end — multi-replica fair router (DESIGN.md §11):
+
+  # 2 sim replicas behind the VTC fair-admission queue + affinity
+  # router, JSON-lines protocol on localhost:8471, one event log per
+  # replica at /tmp/fe_r<i>.jsonl
+  PYTHONPATH=src python -m repro.launch.serve --serve --router 2 \
+      --events /tmp/fe
+
+  # then talk to it over any TCP client, one JSON object per line:
+  #   {"op": "submit", "client": "me", "prompt": 64, "max_tokens": 16}
+  #   {"op": "continue", "handle": 0, "prompt": 32}   (KV-reuse turn)
+  #   {"op": "drain"}                                  (graceful stop)
+
+  # CI loopback smoke (boots the server, drives socket clients through
+  # submit/stream/follow-up/abort, drains, audits the event logs):
+  PYTHONPATH=src python -m repro.frontend.loadgen --smoke
+
 Trace-driven (sim) benchmark replay — the classic closed-world runs:
   PYTHONPATH=src python -m repro.launch.serve --policy vllm \
       --policy fastswitch --conversations 200 --update-freq 0.04
@@ -97,7 +114,9 @@ def validate_event_log(path: str) -> int:
                 assert ev["kind"] == "drain", f"system event kind: {ev}"
                 n += 1
                 continue
-            if ev["kind"] == "arrive":
+            if ev["kind"] in ("arrive", "migrate_in"):
+                # migrate_in opens a handle's lifecycle on THIS replica
+                # (the session arrived elsewhere and moved here)
                 seen_arrive.add(h)
             else:
                 assert h in seen_arrive, f"event before arrive: {ev}"
@@ -268,7 +287,7 @@ def run_online(args) -> dict:
             if out.finished:
                 live.discard(out.handle)
                 conv = by_handle[out.handle]
-                if (out.finish_reason == "length"
+                if (out.finish_reason in ("length", "stop")
                         and out.turn + 1 < len(conv.turns)):
                     sleeping.append((out.t_us / 1e6 + conv.think_time_s,
                                      conv, out.turn + 1))
@@ -388,6 +407,67 @@ def run_replay(args) -> dict:
     return results
 
 
+def run_serve(args) -> dict:
+    """Network front-end mode: boot ``--router N`` engine replicas
+    behind the fair-admission router and serve the JSON-lines protocol
+    until interrupted (``repro.frontend.server``).  ``--events PREFIX``
+    writes one JSONL event log per replica at ``PREFIX_r<i>.jsonl``."""
+    import asyncio
+
+    from repro.core import EngineConfig, ServingEngine
+    from repro.frontend.server import FrontendServer
+
+    n = max(1, args.router)
+    policy = (args.policy or ["fastswitch"])[0]
+    model = _build_real_bundle(args.arch, args.seed) if args.real else None
+    cfg = EngineConfig(
+        mode="real" if args.real else "sim",
+        num_gpu_blocks=args.gpu_blocks or (64 if args.real else 256),
+        num_cpu_blocks=args.cpu_blocks or (256 if args.real else 1024),
+        max_running=args.max_running or (4 if args.real else 8),
+        max_batch=4 if args.real else 32,
+        max_waiting=args.max_waiting,
+        overload_policy=args.overload_policy,
+    ).with_policy(policy)
+
+    files = []
+    engines = []
+    for i in range(n):
+        sink = None
+        if args.events:
+            # line-buffered: a long-running server is usually stopped by
+            # SIGTERM, which never unwinds to the close() below — each
+            # event must be durable the moment it is written
+            f = open(f"{args.events}_r{i}.jsonl", "w", buffering=1)
+            files.append(f)
+            sink = (lambda fh: lambda ev: fh.write(
+                json.dumps(ev.as_dict()) + "\n"))(f)
+        engines.append(ServingEngine(cfg, model_bundle=model,
+                                     event_sink=sink,
+                                     stream_tokens=bool(args.stream
+                                                        and args.real)))
+
+    async def _run():
+        srv = FrontendServer(engines, host=args.host, port=args.port)
+        host, port = await srv.start()
+        print(f"frontend: {n} {cfg.mode} replica(s) on {host}:{port}",
+              flush=True)
+        try:
+            while True:
+                await asyncio.sleep(3600.0)
+        finally:
+            await srv.close()
+
+    try:
+        asyncio.get_event_loop().run_until_complete(_run())
+    except KeyboardInterrupt:
+        print("frontend: interrupted, shutting down")
+    finally:
+        for f in files:
+            f.close()
+    return {"replicas": n, "mode": cfg.mode}
+
+
 def main() -> None:
     from repro.core.policies import POLICIES
     ap = argparse.ArgumentParser()
@@ -436,6 +516,14 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="cross-request prefix cache (DESIGN.md §10); "
                          "implies --real --online")
+    ap.add_argument("--serve", action="store_true",
+                    help="network front-end: fair router over N replicas "
+                         "(JSON lines over TCP, DESIGN.md §11)")
+    ap.add_argument("--router", type=int, default=1, metavar="N",
+                    help="number of engine replicas behind --serve")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8471,
+                    help="--serve listen port (0 picks a free one)")
     args = ap.parse_args()
 
     if args.prefix_cache:
@@ -448,7 +536,9 @@ def main() -> None:
         if not (args.slo_ttft_ms or args.slo_tbt_ms):
             args.slo_ttft_ms, args.slo_tbt_ms = 2000.0, 200.0
 
-    if args.online:
+    if args.serve:
+        results = run_serve(args)
+    elif args.online:
         results = run_online(args)
     else:
         results = run_replay(args)

@@ -705,6 +705,75 @@ class P:
 
 
 # ---------------------------------------------------------------------------
+# FS007 blocking call in async def
+# ---------------------------------------------------------------------------
+
+class TestFS007:
+    def test_positive_time_sleep_in_async(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import time
+
+
+async def handler(req):
+    time.sleep(0.1)
+    return req
+"""}, rules=["FS007"])
+        assert [f.rule for f in res.findings] == ["FS007"]
+        assert "time.sleep" in res.findings[0].message
+
+    def test_positive_future_result_and_socket_recv(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+async def pump(fut, sock):
+    data = sock.recv(4096)
+    return fut.result(), data
+"""}, rules=["FS007"])
+        assert len(res.findings) == 2
+        assert all(f.rule == "FS007" for f in res.findings)
+
+    def test_positive_device_sync_in_async(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import jax
+
+
+async def stream(out):
+    jax.block_until_ready(out)
+    return out
+"""}, rules=["FS007"])
+        assert [f.rule for f in res.findings] == ["FS007"]
+
+    def test_negative_sync_def_and_awaited_calls(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import asyncio
+import time
+
+
+def worker_thread(fut):
+    time.sleep(0.1)            # fine: not on the event loop
+    return fut.result()
+
+
+async def handler(rep, ws):
+    data = await ws.recv()     # directly awaited: yields to the loop
+    res = await asyncio.wrap_future(rep.call())
+    await asyncio.sleep(0.01)
+    return data, res
+"""}, rules=["FS007"])
+        assert res.findings == []
+
+    def test_suppressed(self, tmp_path):
+        res = _run(tmp_path, {"m.py": """\
+import time
+
+
+async def shutdown():
+    # fslint: disable=FS007(final drain, loop is exiting anyway)
+    time.sleep(0.01)
+"""}, rules=["FS007"])
+        assert res.findings == []
+        assert [f.rule for f in res.suppressed] == ["FS007"]
+
+
+# ---------------------------------------------------------------------------
 # CLI contract + self-run gate
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,145 @@
+"""EOS stop tokens (``SamplingParams.stop_token_ids``).
+
+Contract under test (DESIGN.md §6 finish semantics):
+  * real mode: a decoded token matching the stop set ends the turn with
+    ``finish_reason="stop"`` (vs ``"length"`` at the max_tokens budget);
+    the stop token itself STAYS in the streamed delta and the token
+    history — truncation is presentation, the bit-exact history is the
+    engine's parity anchor, so the pre-stop stream must be a prefix of
+    the unconstrained greedy stream;
+  * the first decoded token can itself be the stop token (the
+    prefill-emission path, not the batch-decode path, must check);
+  * a stop hit exactly at the max_tokens boundary reports ``"stop"``,
+    not ``"length"`` (the more informative reason wins);
+  * sim mode carries no token ids: stop sets are accepted but can
+    never fire — a sim request always runs to its length budget.
+"""
+import jax
+import pytest
+
+from repro.core import EngineConfig, SamplingParams, ServingEngine
+from repro.data.priority import PriorityTrace
+from repro.data.sharegpt import synth_prompt_ids
+
+
+@pytest.fixture(scope="module")
+def engine_model():
+    from repro.configs import get_smoke_config
+    from repro.models import transformer as T
+    cfg = get_smoke_config("qwen2-1.5b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return {"cfg": cfg, "params": params}
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _release_jit_state():
+    # real-engine variants compiled here stress the global jax-cpu jit
+    # state; release it so later modules' native compiles stay safe
+    # (the test_system segfault family)
+    yield
+    jax.clear_caches()
+
+
+def _real_cfg():
+    return EngineConfig(mode="real", num_gpu_blocks=32, num_cpu_blocks=128,
+                        max_running=4, max_batch=4).with_policy("fastswitch")
+
+
+def _drain(eng, max_iters=20_000):
+    outs = []
+    it = 0
+    while eng.has_work() and it < max_iters:
+        outs.extend(eng.step())
+        it += 1
+    assert not eng.has_work()
+    return outs
+
+
+def _run_real(model, prompt_ids, max_tokens, stop=()):
+    eng = ServingEngine(_real_cfg(), model_bundle=model, stream_tokens=True)
+    eng.add_request(prompt_ids,
+                    SamplingParams(max_tokens=max_tokens,
+                                   stop_token_ids=tuple(stop)))
+    outs = _drain(eng)
+    toks = [t for o in outs if o.token_ids for t in o.token_ids]
+    fin = [o for o in outs if o.finished]
+    assert len(fin) == 1
+    return toks, fin[0]
+
+
+def test_sim_stop_ids_accepted_but_never_fire():
+    eng = ServingEngine(
+        EngineConfig(mode="sim", num_gpu_blocks=64, num_cpu_blocks=256,
+                     max_running=4).with_policy("fastswitch"),
+        trace=PriorityTrace("random", 1e-9, seed=0))
+    eng.add_request(24, SamplingParams(max_tokens=10, stop_token_ids=(3, 5)))
+    outs = _drain(eng)
+    fin = [o for o in outs if o.finished]
+    assert len(fin) == 1
+    assert fin[0].finish_reason == "length"
+    assert fin[0].generated == 10
+
+
+def test_real_stop_mid_stream_prefix_exact(engine_model):
+    vocab = engine_model["cfg"].vocab_size
+    prompt = synth_prompt_ids(11, 0, 16, vocab)
+    hist, fin = _run_real(engine_model, prompt, 12)
+    assert fin.finish_reason == "length" and len(hist) == 12
+
+    stop_tok = hist[7]
+    cut = hist.index(stop_tok)           # earliest hit wins
+    toks, fin2 = _run_real(engine_model, prompt, 12, stop=(stop_tok,))
+    assert fin2.finish_reason == "stop"
+    # the stop token stays in the stream; everything before it is the
+    # unconstrained greedy prefix, bit-exact
+    assert toks == hist[:cut + 1]
+    assert fin2.generated == cut + 1
+
+
+def test_real_stop_on_first_token(engine_model):
+    vocab = engine_model["cfg"].vocab_size
+    prompt = synth_prompt_ids(12, 0, 16, vocab)
+    hist, _ = _run_real(engine_model, prompt, 8)
+    toks, fin = _run_real(engine_model, prompt, 8, stop=(hist[0],))
+    assert fin.finish_reason == "stop"
+    assert toks == hist[:1]
+    assert fin.generated == 1
+
+
+def test_real_stop_at_length_boundary_upgrades_reason(engine_model):
+    vocab = engine_model["cfg"].vocab_size
+    prompt = synth_prompt_ids(13, 0, 16, vocab)
+    hist, _ = _run_real(engine_model, prompt, 10)
+    stop_tok = hist[-1]
+    cut = hist.index(stop_tok)
+    toks, fin = _run_real(engine_model, prompt, 10, stop=(stop_tok,))
+    # even when the stop lands on the final budgeted token, the reason
+    # reports the stop (the earliest occurrence in the stream decides)
+    assert fin.finish_reason == "stop"
+    assert toks == hist[:cut + 1]
+
+
+def test_real_stop_with_retained_session_parks(engine_model):
+    """A stop-finished turn with ``retain_kv`` parks like a length
+    finish — follow-ups continue from the truncated history."""
+    vocab = engine_model["cfg"].vocab_size
+    prompt = synth_prompt_ids(14, 0, 16, vocab)
+    hist, _ = _run_real(engine_model, prompt, 8)
+    stop_tok = hist[3]
+    cut = hist.index(stop_tok)
+
+    eng = ServingEngine(_real_cfg(), model_bundle=engine_model,
+                        stream_tokens=True)
+    h = eng.add_request(prompt, SamplingParams(max_tokens=8,
+                                               stop_token_ids=(stop_tok,)),
+                        retain_kv=True)
+    outs = _drain(eng)
+    fin = [o for o in outs if o.finished]
+    assert fin[0].finish_reason == "stop"
+    assert h in eng.parked
+    assert eng.parked[h].token_history == list(prompt) + hist[:cut + 1]
+    eng.continue_session(h, synth_prompt_ids(14, 1, 8, vocab),
+                         SamplingParams(max_tokens=4))
+    outs2 = _drain(eng)
+    fin2 = [o for o in outs2 if o.finished]
+    assert fin2[0].finish_reason == "length"

@@ -127,6 +127,47 @@ def test_gather_scatter_bucketing_bounds_jit_cache():
     assert ops.swap_scatter_cache_size() - s0 == grown_s
 
 
+def test_copy_in_double_buffered_bit_exact_multi_stage():
+    """Double-buffered swap-in (bounded sub-slabs): splitting a staged
+    copy-in mid-run must land every block bit-exactly, leak into no
+    others, and keep the per-stage transfer accounting
+    (``h2d_transfers == n_shards * staged_in_calls``)."""
+    pools = _pools()
+    snap = np.asarray(pools.gpu)
+    runs = [(1, 3), (6, 2), (11, 2)]                # 7 blocks, 3 runs
+    blocks = runs_to_indices(runs)
+    cpu_ids = [5, 0, 9, 2, 17, 21, 3]
+    pools.copy_out_staged(runs, cpu_ids)
+    pools.gpu = jnp.zeros_like(pools.gpu)
+    in0, h0 = pools.staged_in_calls, pools.h2d_transfers
+    pools.copy_in_staged(cpu_ids, runs, stage_blocks=3)
+    n_stages = len(split_runs(runs, 3))             # 3 — splits (1,3) off
+    assert n_stages == 3
+    assert pools.staged_in_calls - in0 == n_stages
+    assert pools.h2d_transfers - h0 == pools.n_shards * n_stages
+    got = np.asarray(pools.gpu)
+    np.testing.assert_array_equal(got[:, :, blocks], snap[:, :, blocks])
+    other = [b for b in range(16) if b not in blocks]
+    assert not np.any(got[:, :, other]), "stage scatter leaked"
+
+
+def test_copy_in_stage_split_matches_monolithic_slab():
+    """stage_blocks=0 (one monolithic slab) and a multi-stage split of
+    the SAME swap-in produce bit-identical pools."""
+    p1, p2 = _pools(), _pools()
+    runs = [(0, 4), (8, 4)]
+    cpu_ids = list(range(8))
+    for p in (p1, p2):
+        p.copy_out_staged(runs, cpu_ids)
+        p.gpu = jnp.zeros_like(p.gpu)
+    in1, in2 = p1.staged_in_calls, p2.staged_in_calls
+    p1.copy_in_staged(cpu_ids, runs, stage_blocks=0)
+    p2.copy_in_staged(cpu_ids, runs, stage_blocks=3)
+    assert p1.staged_in_calls - in1 == 1            # single shot
+    assert p2.staged_in_calls - in2 == len(split_runs(runs, 3))
+    np.testing.assert_array_equal(np.asarray(p1.gpu), np.asarray(p2.gpu))
+
+
 def test_split_and_trim_runs():
     runs = [(0, 5), (10, 2), (20, 1)]
     assert split_runs(runs, 0) == [runs]
